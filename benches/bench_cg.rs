@@ -1,0 +1,60 @@
+//! Solver micro-bench: CG iteration overhead relative to the MVM cost,
+//! plus SLQ logdet wall-clock — verifies L3 solver plumbing is never the
+//! bottleneck (DESIGN.md §Perf target: <5% of MVM cost).
+
+use fourier_gp::coordinator::mvm::{NfftRustMvm, SubKernelMvm};
+use fourier_gp::coordinator::operator::KernelOperator;
+use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::NfftParams;
+use fourier_gp::solvers::cg::{cg, CgOptions};
+use fourier_gp::solvers::slq::{slq_logdet, SlqOptions};
+use fourier_gp::solvers::LinOp;
+use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::util::rng::Rng;
+
+fn main() {
+    let n = 10_000;
+    let mut rng = Rng::new(3);
+    let mut x = Matrix::zeros(n, 4);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 5.0);
+    }
+    let subs: Vec<Box<dyn SubKernelMvm>> = vec![
+        Box::new(NfftRustMvm::new(
+            KernelFn::Gaussian,
+            &WindowedPoints::extract(&x, &[0, 1]),
+            1.0,
+            NfftParams::default_for_dim(2),
+        )),
+        Box::new(NfftRustMvm::new(
+            KernelFn::Gaussian,
+            &WindowedPoints::extract(&x, &[2, 3]),
+            1.0,
+            NfftParams::default_for_dim(2),
+        )),
+    ];
+    let op = KernelOperator::new(subs, 0.5, 0.05);
+    let b_vec = rng.normal_vec(n);
+    let mut b = Bencher::new(BenchConfig::quick());
+    let r_mvm = b.bench("operator MVM (n=10k, P=2)", || {
+        black_box(op.apply_vec(&b_vec));
+    });
+    let iters = 10;
+    let r_cg = b.bench("CG 10 iters (n=10k)", || {
+        black_box(cg(&op, &b_vec, &CgOptions { tol: 1e-30, max_iter: iters, relative: true }));
+    });
+    let overhead = (r_cg.median - iters as f64 * r_mvm.median) / r_cg.median;
+    println!(
+        "    CG non-MVM overhead: {:.1}% of total (target < 5%)",
+        overhead.max(0.0) * 100.0
+    );
+    b.bench("SLQ logdet (5 probes × 10 steps)", || {
+        black_box(slq_logdet(
+            &op,
+            &SlqOptions { num_probes: 5, steps: 10, seed: 1, reorth: true },
+        ));
+    });
+    b.save_csv(std::path::Path::new("results/bench_cg.csv")).ok();
+}

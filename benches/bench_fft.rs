@@ -1,0 +1,38 @@
+//! FFT substrate micro-bench: the 1-d/2-d/3-d power-of-two transforms
+//! backing the NFFT grids (m = 32, σm = 64).
+
+use fourier_gp::fft::{Complex, FftNdPlan, FftPlan};
+use fourier_gp::util::bench::{black_box, Bencher};
+use fourier_gp::util::rng::Rng;
+
+fn signal(n: usize, seed: u64) -> Vec<Complex> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    for &n in &[64usize, 256, 1024, 4096] {
+        let plan = FftPlan::new(n);
+        let mut x = signal(n, n as u64);
+        let r = b.bench(&format!("fft 1d n={n}"), || {
+            plan.forward(&mut x);
+            black_box(&x);
+        });
+        let flops = 5.0 * n as f64 * (n as f64).log2();
+        println!("    ~{:.2} GFLOP/s", flops / r.median / 1e9);
+    }
+    for &m in &[64usize] {
+        // The NFFT oversampled grids used in production.
+        for d in [2usize, 3] {
+            let shape = vec![m; d];
+            let plan = FftNdPlan::new(&shape);
+            let mut x = signal(m.pow(d as u32), 7);
+            b.bench(&format!("fft {d}d grid {m}^{d}"), || {
+                plan.forward(&mut x);
+                black_box(&x);
+            });
+        }
+    }
+    b.save_csv(std::path::Path::new("results/bench_fft.csv")).ok();
+}

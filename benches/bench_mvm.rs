@@ -1,0 +1,50 @@
+//! Headline complexity micro-bench: exact O(n²) vs NFFT O(n log n)
+//! sub-kernel MVM, plus the per-component NFFT cost split (spread /
+//! FFT / gather is implicit in the plan; we time plan construction and
+//! apply separately).
+
+use fourier_gp::coordinator::experiments::mvm_scaling;
+use fourier_gp::coordinator::mvm::{NfftRustMvm, SubKernelMvm};
+use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::NfftParams;
+use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::util::rng::Rng;
+
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    let sizes: Vec<usize> = if full {
+        vec![1000, 2000, 4000, 8000, 16000, 32000, 64000, 128000, 326155]
+    } else {
+        vec![1000, 2000, 4000, 8000, 16000]
+    };
+    mvm_scaling(&sizes);
+
+    // Plan-build vs apply split at a representative size.
+    let n = 20_000;
+    let mut rng = Rng::new(1);
+    let mut x = Matrix::zeros(n, 2);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 10.0);
+    }
+    let wp = WindowedPoints::extract(&x, &[0, 1]);
+    let v = rng.normal_vec(n);
+    let mut b = Bencher::new(BenchConfig::quick());
+    b.bench("nfft plan build (n=20k,d=2)", || {
+        black_box(NfftRustMvm::new(
+            KernelFn::Gaussian,
+            &wp,
+            1.0,
+            NfftParams::default_for_dim(2),
+        ));
+    });
+    let engine = NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+    b.bench("nfft apply (n=20k,d=2)", || {
+        black_box(engine.apply(&v, false));
+    });
+    b.bench("nfft apply deriv (n=20k,d=2)", || {
+        black_box(engine.apply(&v, true));
+    });
+    b.save_csv(std::path::Path::new("results/bench_mvm.csv")).ok();
+}

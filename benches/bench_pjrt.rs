@@ -1,0 +1,63 @@
+//! PJRT dispatch micro-bench: artifact compile time, per-call dispatch
+//! overhead, and PJRT engines vs their pure-rust twins (DESIGN.md §Perf
+//! target: dispatch <1 ms/call; interpret-mode Pallas is a correctness
+//! target, not a speed target).
+
+use fourier_gp::coordinator::mvm::{EngineKind, ExactRustMvm, NfftRustMvm, SubKernelMvm};
+use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::NfftParams;
+use fourier_gp::runtime::{engine::build_pjrt_sub_mvm, PjrtRuntime};
+use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let dir = PjrtRuntime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts`; skipping bench_pjrt");
+        return;
+    }
+    let rt = Arc::new(PjrtRuntime::load(&dir).unwrap());
+    let n = 512;
+    let mut rng = Rng::new(1);
+    let mut x = Matrix::zeros(n, 2);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 5.0);
+    }
+    let wp = WindowedPoints::extract(&x, &[0, 1]);
+    let v = rng.normal_vec(n);
+    let mut b = Bencher::new(BenchConfig::quick());
+
+    // Compile (first call) vs warm dispatch.
+    let t0 = std::time::Instant::now();
+    let nfft_pjrt =
+        build_pjrt_sub_mvm(EngineKind::NfftPjrt, rt.clone(), KernelFn::Gaussian, wp.clone(), 1.0)
+            .unwrap();
+    let _ = nfft_pjrt.apply(&v, false);
+    println!(
+        "nfft-pjrt cold start (load+compile+first call): {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+    b.bench("nfft-pjrt warm apply (n=512,d=2)", || {
+        black_box(nfft_pjrt.apply(&v, false));
+    });
+    let nfft_rust = NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+    b.bench("nfft-rust apply (n=512,d=2)", || {
+        black_box(nfft_rust.apply(&v, false));
+    });
+    let exact_pjrt =
+        build_pjrt_sub_mvm(EngineKind::ExactPjrt, rt.clone(), KernelFn::Gaussian, wp.clone(), 1.0)
+            .unwrap();
+    let _ = exact_pjrt.apply(&v, false);
+    b.bench("exact-pjrt warm apply (n=512,d=2)", || {
+        black_box(exact_pjrt.apply(&v, false));
+    });
+    let exact_rust = ExactRustMvm::new(KernelFn::Gaussian, wp, 1.0);
+    b.bench("exact-rust apply (n=512,d=2)", || {
+        black_box(exact_rust.apply(&v, false));
+    });
+    println!("compiled executables: {}", rt.compiled_count());
+    b.save_csv(std::path::Path::new("results/bench_pjrt.csv")).ok();
+}

@@ -1,0 +1,53 @@
+//! AAFN preconditioner micro-bench: geometry build (FPS + KNN pattern,
+//! once per dataset) vs numeric refresh (per Adam step) vs apply, and the
+//! Nyström ablation. Also reports the iteration savings it buys.
+
+use fourier_gp::kernels::additive::AdditiveKernel;
+use fourier_gp::kernels::{KernelFn, Windows};
+use fourier_gp::precond::{AafnGeometry, AafnPrecond, AfnOptions, NystromPrecond};
+use fourier_gp::solvers::cg::{cg, pcg, CgOptions};
+use fourier_gp::solvers::Precond;
+use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::util::rng::Rng;
+
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    let n = if full { 3000 } else { 1500 };
+    let x = fourier_gp::data::synthetic::fig5_dataset(n, 5);
+    let ak = AdditiveKernel::new(
+        KernelFn::Gaussian,
+        Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]),
+    );
+    let (ell, sf2, se2) = (2.0, 0.5, 0.01);
+    let opts = AfnOptions { k_per_window: 100, max_rank: 200, fill: 20 };
+    let mut b = Bencher::new(BenchConfig::quick());
+    b.bench(&format!("AAFN geometry build (n={n})"), || {
+        black_box(AafnGeometry::new(&x, &ak, &opts));
+    });
+    let geo = AafnGeometry::new(&x, &ak, &opts);
+    b.bench(&format!("AAFN numeric refresh (n={n}, rank≤200)"), || {
+        black_box(AafnPrecond::build_with(&ak, ell, sf2, se2, &geo));
+    });
+    let p = AafnPrecond::build_with(&ak, ell, sf2, se2, &geo);
+    let mut rng = Rng::new(9);
+    let v = rng.normal_vec(n);
+    b.bench("AAFN apply (solve)", || {
+        black_box(p.solve(&v));
+    });
+    b.bench(&format!("Nyström build (n={n}, rank=200)"), || {
+        black_box(NystromPrecond::build(&x, &ak, ell, sf2, se2, 200));
+    });
+    // Iteration savings on the paper's hard middle-ℓ regime.
+    let k = ak.gram_full(&x, ell, sf2, se2);
+    let bvec: Vec<f64> = (0..n).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+    let cgo = CgOptions { tol: 1e-4, max_iter: 400, relative: true };
+    let plain = cg(&k, &bvec, &cgo);
+    let pre = pcg(&k, &p, &bvec, &cgo);
+    let ny = NystromPrecond::build(&x, &ak, ell, sf2, se2, 200);
+    let pre_ny = pcg(&k, &ny, &bvec, &cgo);
+    println!(
+        "    iterations: CG={} AAFN-PCG={} Nyström-PCG={} (ablation)",
+        plain.iterations, pre.iterations, pre_ny.iterations
+    );
+    b.save_csv(std::path::Path::new("results/bench_precond.csv")).ok();
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper fig2 (see DESIGN.md experiment index).
+//! Scaled-down by default; FGP_FULL=1 for paper scale.
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    run(full);
+}
+fn run(_full: bool) {
+    fourier_gp::coordinator::experiments::fig2();
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper fig5 (see DESIGN.md experiment index).
+//! Scaled-down by default; FGP_FULL=1 for paper scale.
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    run(full);
+}
+fn run(full: bool) {
+    fourier_gp::coordinator::experiments::fig5(if full { 3000 } else { 800 });
+}

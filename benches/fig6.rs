@@ -1,0 +1,10 @@
+//! Regenerates paper fig6 (see DESIGN.md experiment index).
+//! Scaled-down by default; FGP_FULL=1 for paper scale.
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    run(full);
+}
+fn run(full: bool) {
+    let (n, reps) = if full { (3000, 10) } else { (600, 5) };
+    fourier_gp::coordinator::experiments::fig6(n, reps);
+}

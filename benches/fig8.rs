@@ -1,0 +1,10 @@
+//! Regenerates paper fig8 (see DESIGN.md experiment index).
+//! Scaled-down by default; FGP_FULL=1 for paper scale.
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    run(full);
+}
+fn run(full: bool) {
+    let (n, iters) = if full { (3000, 500) } else { (800, 40) };
+    fourier_gp::coordinator::experiments::fig8(n, iters);
+}

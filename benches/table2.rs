@@ -1,0 +1,10 @@
+//! Regenerates paper table2 (see DESIGN.md experiment index).
+//! Scaled-down by default; FGP_FULL=1 for paper scale.
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    run(full);
+}
+fn run(full: bool) {
+    let (n, iters) = if full { (4000, 200) } else { (800, 15) };
+    fourier_gp::coordinator::experiments::table2(n, iters);
+}

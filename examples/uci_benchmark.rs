@@ -1,0 +1,17 @@
+//! Tables 1–3 pipeline on the offline UCI simulacra: MIS/EN feature
+//! grouping, RMSE comparison of NFFT-additive vs exact vs SVGP.
+//!
+//! Run: `cargo run --release --example uci_benchmark [--full]`
+
+use fourier_gp::coordinator::experiments as exp;
+use fourier_gp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["full"]);
+    let full = args.has_flag("full");
+    let (max_n, iters) = if full { (4000, 200) } else { (800, 15) };
+    exp::table1();
+    exp::table2(max_n, iters);
+    exp::table3(max_n, iters);
+    println!("rows written to results/table1.csv .. table3.csv");
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: every (engine, kernel, deriv, d, n) variant of the L2
+graphs -> artifacts/<name>.hlo.txt + artifacts/manifest.json.
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from .model import exact_mvm_fn, nfft_mvm_fn
+
+KERNELS = ("gaussian", "matern12")
+EXACT_N = 512
+NFFT_NS = (512, 4096)
+M = 32
+SIGMA = 2.0
+S_FOR_D = {1: 10, 2: 8, 3: 5}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large array constants as `{...}`,
+    # which xla_extension 0.5.1's text parser silently turns into zeros —
+    # print_large_constants must be on. Metadata is stripped to keep the
+    # text within what the 0.5.1 parser accepts.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def lower_exact(kind, deriv, n, d):
+    fn = exact_mvm_fn(kind, deriv, n, d)
+    wrapped = lambda xr, xc, v, ell: (fn(xr, xc, v, ell),)
+    return jax.jit(wrapped).lower(spec((n, d)), spec((n, d)), spec((n,)), spec((1,)))
+
+
+def lower_nfft(kind, deriv, n, d):
+    fn = nfft_mvm_fn(kind, d, n, M, SIGMA, S_FOR_D[d], deriv=deriv)
+    wrapped = lambda pts, v, ell: (fn(pts, v, ell),)
+    return jax.jit(wrapped).lower(spec((n, d)), spec((n,)), spec((1,)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small subset for CI (d<=2, n=512)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"m": M, "sigma": SIGMA, "artifacts": []}
+
+    def emit(name, lowered, meta):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append({"name": name, "file": f"{name}.hlo.txt", **meta})
+        print(f"  wrote {name}")
+
+    exact_ds = (1, 2) if args.quick else (1, 2, 3)
+    for kind in KERNELS:
+        for deriv in (False, True):
+            tag = "der" if deriv else "k"
+            for d in exact_ds:
+                name = f"exact_{kind}_{tag}_d{d}_n{EXACT_N}"
+                emit(name, lower_exact(kind, deriv, EXACT_N, d),
+                     {"engine": "exact", "kernel": kind, "deriv": deriv,
+                      "d": d, "n": EXACT_N})
+    nfft_variants = []
+    nfft_ds = (1, 2) if args.quick else (1, 2, 3)
+    for d in nfft_ds:
+        for n in ((512,) if (args.quick or d == 3) else NFFT_NS):
+            nfft_variants.append((d, n))
+    for kind in KERNELS:
+        for deriv in (False, True):
+            tag = "der" if deriv else "k"
+            for d, n in nfft_variants:
+                name = f"nfft_{kind}_{tag}_d{d}_n{n}_m{M}"
+                emit(name, lower_nfft(kind, deriv, n, d),
+                     {"engine": "nfft", "kernel": kind, "deriv": deriv,
+                      "d": d, "n": n, "m": M, "sigma": SIGMA,
+                      "s": S_FOR_D[d]})
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

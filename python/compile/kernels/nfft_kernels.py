@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: NFFT Kaiser–Bessel window-weight evaluation.
+
+For every nonequispaced point the NFFT needs, per axis, the first grid
+index of its 2s-wide stencil and the 2s window values
+phi(x - u/M) (paper Appendix A). That per-point elementwise work — floor,
+shifted differences, sinh-window — is the spreading/gathering hot spot,
+so it lives in a Pallas kernel; the scatter-add / FFT / gather around it
+stay in the L2 jnp graph (XLA's scatter and FFT run on the VPU on TPU).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def kb_phi(x, s: int, big_m: int, b: float):
+    """Kaiser–Bessel window phi(x) (truncated), vectorized."""
+    arg2 = s * s - (big_m * x) * (big_m * x)
+    t = jnp.sqrt(jnp.maximum(arg2, 0.0))
+    small = b / math.pi * (1.0 + (b * t) ** 2 / 6.0)
+    main = jnp.sinh(b * t) / (math.pi * jnp.maximum(t, 1e-300))
+    val = jnp.where(t < 1e-8, small, main)
+    return jnp.where(arg2 >= 0.0, val, 0.0)
+
+
+def _weights_kernel(s, big_m, b, pts_ref, base_ref, w_ref):
+    x = pts_ref[...]  # (TILE, d)
+    c = jnp.floor(x * big_m)
+    base = c - (s - 1)  # first stencil index, (TILE, d)
+    offs = jnp.arange(2 * s, dtype=x.dtype)  # (2s,)
+    u = base[:, :, None] + offs[None, None, :]  # (TILE, d, 2s)
+    t = x[:, :, None] - u / big_m
+    w = kb_phi(t, s, big_m, b)
+    base_ref[...] = base.astype(jnp.int32)
+    w_ref[...] = w
+
+
+def nfft_weights(n: int, d: int, s: int, big_m: int, sigma: float):
+    """Return fn(pts) -> (base_i32 (n,d), weights (n,d,2s))."""
+    if n % TILE != 0:
+        raise ValueError(f"n={n} must be a multiple of TILE={TILE}")
+    b = math.pi * (2.0 - 1.0 / sigma)
+
+    def fn(pts):
+        return pl.pallas_call(
+            functools.partial(_weights_kernel, s, big_m, b),
+            grid=(n // TILE,),
+            in_specs=[pl.BlockSpec((TILE, d), lambda i: (i, 0))],
+            out_specs=[
+                pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+                pl.BlockSpec((TILE, d, 2 * s), lambda i: (i, 0, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n, d), jnp.int32),
+                jax.ShapeDtypeStruct((n, d, 2 * s), pts.dtype),
+            ],
+            interpret=True,
+        )(pts)
+
+    return fn
+
+
+def kb_phihat(ks, s: int, big_m: int, sigma: float):
+    """Fourier coefficients c_k(phi~) of the KB window (series I0)."""
+    b = math.pi * (2.0 - 1.0 / sigma)
+    w = 2.0 * math.pi * ks / big_m
+    arg2 = b * b - w * w
+    # inside the main lobe for all k in I_m (|w| <= pi/sigma < b)
+    z = s * jnp.sqrt(jnp.maximum(arg2, 0.0))
+    return _i0_series(z) / big_m
+
+
+def _i0_series(z, terms: int = 64):
+    """Modified Bessel I0 by fixed-length power series (portable, f64)."""
+    x2 = z * z / 4.0
+    term = jnp.ones_like(z)
+    acc = jnp.ones_like(z)
+    for k in range(1, terms):
+        term = term * x2 / (k * k)
+        acc = acc + term
+    return acc

@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels and the L2
+NFFT pipeline — the CORE correctness signal of the python test suite."""
+
+import jax.numpy as jnp
+
+
+def kernel_eval_ref(kind: str, deriv: bool, r2, ell):
+    if kind == "gaussian":
+        k = jnp.exp(-r2 / (2.0 * ell * ell))
+        return r2 / (ell**3) * k if deriv else k
+    if kind == "matern12":
+        r = jnp.sqrt(r2)
+        k = jnp.exp(-r / ell)
+        return r / (ell * ell) * k if deriv else k
+    raise ValueError(kind)
+
+
+def dense_mvm_ref(kind: str, deriv: bool, xr, xc, v, ell):
+    """out_i = sum_j kappa(||xr_i - xc_j||; ell) v_j, dense O(n^2)."""
+    diff = xr[:, None, :] - xc[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    k = kernel_eval_ref(kind, deriv, r2, ell)
+    return k @ v
+
+
+def kb_phi_ref(x, s, big_m, b):
+    """Scalar/ndarray Kaiser-Bessel window reference (numpy)."""
+    import numpy as np
+
+    x = np.asarray(x, dtype=float)
+    arg2 = s * s - (big_m * x) ** 2
+    out = np.zeros_like(x)
+    m = arg2 >= 0
+    t = np.sqrt(np.maximum(arg2, 0.0))
+    tiny = t < 1e-8
+    out[m & ~tiny] = np.sinh(b * t[m & ~tiny]) / (np.pi * t[m & ~tiny])
+    out[m & tiny] = b / np.pi
+    return out

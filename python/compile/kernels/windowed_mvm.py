@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled windowed Gram MVM (paper eq. (2.2)/(2.3)).
+
+Computes one cross-tile of the exact sub-kernel matrix–vector product
+
+    out_i = sum_j kappa(||xr_i - xc_j||; ell) * v_j,   i in a row tile,
+
+for the Gaussian / Matérn(1/2) kernels and their ell-derivatives. The
+pallas grid walks row tiles; each instance keeps a (TILE, d) block of row
+points plus the full column block resident (VMEM-sized: TILE=256, n<=4096,
+d<=3 → ≤ 96 KiB + v), computes the squared-distance tile on the VPU and
+contracts against v.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; kernel *structure* (block shapes, VMEM footprint) is written
+for TPU per DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def kernel_eval(kind: str, deriv: bool, r2, ell):
+    """Elementwise kernel value from squared distance."""
+    if kind == "gaussian":
+        k = jnp.exp(-r2 / (2.0 * ell * ell))
+        if deriv:
+            return r2 / (ell**3) * k
+        return k
+    if kind == "matern12":
+        r = jnp.sqrt(r2 + 1e-300)
+        k = jnp.exp(-r / ell)
+        if deriv:
+            return r / (ell * ell) * k
+        return k
+    raise ValueError(f"unknown kernel {kind!r}")
+
+
+def _gram_mvm_kernel(kind, deriv, xr_ref, xc_ref, v_ref, ell_ref, o_ref):
+    xr = xr_ref[...]  # (TILE, d) row block
+    xc = xc_ref[...]  # (n, d)   all column points
+    v = v_ref[...]  # (n,)
+    ell = ell_ref[0]
+    diff = xr[:, None, :] - xc[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    k = kernel_eval(kind, deriv, r2, ell)
+    o_ref[...] = k @ v
+
+
+def windowed_mvm(kind: str, deriv: bool, n: int, d: int):
+    """Return fn(xr, xc, v, ell) -> (n,) with all shapes static.
+
+    xr, xc: (n, d) float64; v: (n,); ell: (1,).
+    """
+    if n % TILE != 0:
+        raise ValueError(f"n={n} must be a multiple of TILE={TILE}")
+
+    def fn(xr, xc, v, ell):
+        return pl.pallas_call(
+            functools.partial(_gram_mvm_kernel, kind, deriv),
+            grid=(n // TILE,),
+            in_specs=[
+                pl.BlockSpec((TILE, d), lambda i: (i, 0)),
+                pl.BlockSpec((n, d), lambda i: (0, 0)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n,), xr.dtype),
+            interpret=True,
+        )(xr, xc, v, ell)
+
+    return fn

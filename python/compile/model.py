@@ -1,0 +1,94 @@
+"""L2 JAX model graphs: exact windowed Gram MVM (calling the L1 Pallas
+tile kernel) and the full NFFT fast-summation pipeline (paper eq. (3.3)):
+
+    h = trafo( b_k(kappa_R) * adjoint(v) )
+
+with the kernel coefficients b_k computed in-graph from ell (eq. (3.2)),
+the spread/gather window weights from the L1 Pallas kernel, and XLA
+scatter/FFT/gather in between. AOT-lowered to HLO text by aot.py; Python
+never runs on the rust request path.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.nfft_kernels import kb_phihat, nfft_weights
+from .kernels.windowed_mvm import kernel_eval, windowed_mvm
+
+
+def exact_mvm_fn(kind: str, deriv: bool, n: int, d: int):
+    """(xr (n,d), xc (n,d), v (n,), ell (1,)) -> (n,) via Pallas tiles."""
+    return windowed_mvm(kind, deriv, n, d)
+
+
+def _dft_freqs(m: int):
+    """Signed frequencies in DFT layout: [0..m/2-1, -m/2..-1]."""
+    return jnp.where(jnp.arange(m) < m // 2, jnp.arange(m), jnp.arange(m) - m)
+
+
+def kernel_coefficients(kind: str, deriv: bool, d: int, m: int, ell):
+    """b_k(kappa_R): FFT of kernel samples on the m^d grid / m^d."""
+    ls = _dft_freqs(m).astype(jnp.float64) / m  # coords in [-1/2, 1/2)
+    grids = jnp.meshgrid(*([ls] * d), indexing="ij")
+    r2 = sum(g * g for g in grids)
+    samples = kernel_eval(kind, deriv, r2, ell)
+    return jnp.fft.fftn(samples) / (m**d)
+
+
+def nfft_mvm_fn(kind: str, d: int, n: int, m: int, sigma: float, s: int,
+                deriv: bool = False):
+    """(pts (n,d) in [-1/4,1/4)^d, v (n,), ell (1,)) -> (n,)."""
+    big_m = int(round(sigma * m))
+    weights_fn = nfft_weights(n, d, s, big_m, sigma)
+    two_s = 2 * s
+    # static stencil offset combos ((2s)^d, d)
+    import itertools
+
+    offs = jnp.array(list(itertools.product(range(two_s), repeat=d)),
+                     dtype=jnp.int32)  # (S, d)
+    S = offs.shape[0]
+    ks = _dft_freqs(m)
+    phihat_axis = kb_phihat(ks.astype(jnp.float64), s, big_m, sigma)  # (m,)
+
+    def fn(pts, v, ell):
+        base, w = weights_fn(pts)  # (n,d) i32, (n,d,2s)
+        idx = (base[:, None, :] + offs[None, :, :]) % big_m  # (n,S,d)
+        # tensor-product weights: prod over axes of w[i, ax, offs[S, ax]]
+        wprod = jnp.ones((n, S), dtype=pts.dtype)
+        for ax in range(d):
+            wprod = wprod * w[:, ax, :][:, offs[:, ax]]
+        # flatten grid index
+        flat = idx[..., 0]
+        for ax in range(1, d):
+            flat = flat * big_m + idx[..., ax]
+        # ---- adjoint: spread + FFT + deconvolve, restricted to I_m ----
+        grid = jnp.zeros((big_m**d,), dtype=pts.dtype)
+        grid = grid.at[flat.reshape(-1)].add((wprod * v[:, None]).reshape(-1))
+        ghat_big = jnp.fft.fftn(grid.reshape((big_m,) * d)) / (big_m**d)
+        # extract I_m block (DFT layout) per axis
+        sel = _dft_freqs(m) % big_m
+        sub = ghat_big
+        for ax in range(d):
+            sub = jnp.take(sub, sel, axis=ax)
+        deconv = phihat_axis
+        for _ax in range(1, d):
+            deconv = deconv[..., None] * phihat_axis
+        # deconv is now the d-fold tensor product of phihat
+        ghat = sub / deconv
+        # ---- multiply by kernel coefficients ----
+        bhat = kernel_coefficients(kind, deriv, d, m, ell[0])
+        ahat = ghat * bhat
+        # ---- trafo: deconvolve + zero-pad + iFFT + gather ----
+        hhat_small = ahat / deconv
+        big = jnp.zeros((big_m,) * d, dtype=ahat.dtype)
+        ix = jnp.ix_(*([sel] * d))
+        big = big.at[ix].set(hhat_small)
+        hgrid = jnp.fft.ifftn(big)  # includes 1/M^d
+        hflat = hgrid.reshape(-1)
+        out = jnp.sum(jnp.take(hflat, flat) * wprod, axis=1)
+        return jnp.real(out)
+    return fn

@@ -1,0 +1,38 @@
+"""AOT pipeline sanity: HLO text emission + manifest integrity."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.aot import lower_exact, lower_nfft, to_hlo_text
+
+
+def test_exact_lowering_emits_hlo_text():
+    txt = to_hlo_text(lower_exact("gaussian", False, 512, 2))
+    assert txt.startswith("HloModule")
+    assert "f64[512,2]" in txt
+    assert "f64[512]" in txt
+
+
+def test_nfft_lowering_contains_fft():
+    txt = to_hlo_text(lower_nfft("matern12", True, 512, 2))
+    assert "fft" in txt.lower()
+    assert "scatter" in txt.lower()
+
+
+def test_manifest_if_built():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        return  # artifacts not built in this environment
+    with open(path) as f:
+        man = json.load(f)
+    assert man["m"] == 32
+    names = set()
+    for a in man["artifacts"]:
+        assert a["name"] not in names
+        names.add(a["name"])
+        hlo = os.path.join(os.path.dirname(path), a["file"])
+        assert os.path.exists(hlo), a["file"]

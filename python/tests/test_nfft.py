@@ -1,0 +1,111 @@
+"""L2 NFFT fast-summation pipeline vs the dense oracle, with tolerances
+derived from the paper's error analysis (Thm 4.4: O(1/(ell*m)) for
+Matérn(1/2); spectrally small for Gaussian)."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import dense_mvm_ref, kb_phi_ref
+from compile.kernels.nfft_kernels import kb_phihat, nfft_weights
+from compile.model import kernel_coefficients, nfft_mvm_fn
+
+M, SIGMA = 32, 2.0
+S = {1: 10, 2: 8, 3: 5}
+
+
+def max_err(kind, deriv, n, d, ell, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-0.25, 0.2499, (n, d))
+    v = rng.normal(size=n)
+    fast = np.asarray(
+        nfft_mvm_fn(kind, d, n, M, SIGMA, S[d], deriv=deriv)(pts, v, np.array([ell]))
+    )
+    ref = np.asarray(dense_mvm_ref(kind, deriv, pts, pts, v, ell))
+    return np.abs(fast - ref).max(), np.abs(v).sum(), np.abs(ref).max()
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_gaussian_close_to_dense(d):
+    err, v1, _ = max_err("gaussian", False, 512, d, 0.08, seed=d)
+    assert err < 1e-7 * v1, f"err={err}, v1={v1}"
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_matern_within_truncation_bound(d):
+    err, v1, _ = max_err("matern12", False, 512, d, 0.08, seed=10 + d)
+    # Thm 4.4-style bound: ||k_ERR|| = O(1/(ell*(m-2sqrt(d)))). Generous
+    # constant 8/pi^2 as in the trivariate case.
+    bound = 8.0 / (np.pi**2 * 0.08 * (M - 2 * np.sqrt(d)))
+    assert err < v1 * bound, f"err={err} allowed={v1 * bound}"
+
+
+def test_derivative_kernel_consistency():
+    # eq. (3.4): derivative fast summation == d/dell of fast summation.
+    n, d, ell, h = 512, 2, 0.1, 1e-5
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(-0.25, 0.2499, (n, d))
+    v = rng.normal(size=n)
+    f = nfft_mvm_fn("matern12", d, n, M, SIGMA, S[d], deriv=False)
+    fd = (np.asarray(f(pts, v, np.array([ell + h])))
+          - np.asarray(f(pts, v, np.array([ell - h])))) / (2 * h)
+    der = np.asarray(
+        nfft_mvm_fn("matern12", d, n, M, SIGMA, S[d], deriv=True)(pts, v, np.array([ell]))
+    )
+    np.testing.assert_allclose(fd, der, rtol=1e-4, atol=1e-4 * np.abs(der).max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    # Sweet-spot regime ell*m in [2, 4]: Gaussian truncation error
+    # ~exp(-pi^2 (ell m)^2 / 2) is below 1e-8 there. Smaller ell needs a
+    # finer grid (paper Fig. 4, m vs ell trade-off); larger ell enters the
+    # periodization regime (Remark 4.6) — fixed cases cover both.
+    ell=st.floats(min_value=0.065, max_value=0.12),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gaussian_sweep_hypothesis(ell, seed):
+    err, v1, _ = max_err("gaussian", False, 512, 2, ell, seed)
+    assert err < 1e-6 * v1
+
+
+def test_gaussian_large_ell_periodization_regime():
+    # At ell = 0.25 the periodization error ~ exp(-1/(8 ell^2)) dominates;
+    # the approximation stays within that analytic envelope.
+    ell = 0.25
+    err, v1, _ = max_err("gaussian", False, 512, 2, ell, seed=99)
+    envelope = 4.0 * np.exp(-0.125 / ell**2)
+    assert err < v1 * envelope, f"err={err} envelope={v1 * envelope}" 
+
+
+def test_weights_kernel_matches_reference_window():
+    n, d = 256, 1
+    rng = np.random.default_rng(4)
+    pts = rng.uniform(-0.25, 0.2499, (n, d))
+    big_m = int(SIGMA * M)
+    base, w = nfft_weights(n, d, S[d], big_m, SIGMA)(pts)
+    base, w = np.asarray(base), np.asarray(w)
+    b = np.pi * (2.0 - 1.0 / SIGMA)
+    for i in range(0, n, 37):
+        for t in range(2 * S[d]):
+            u = base[i, 0] + t
+            want = kb_phi_ref(pts[i, 0] - u / big_m, S[d], big_m, b)
+            np.testing.assert_allclose(w[i, 0, t], want, rtol=1e-10, atol=1e-12)
+
+
+def test_kernel_coefficients_symmetry():
+    # kappa_R even -> b_k real and symmetric under k -> -k.
+    bh = np.asarray(kernel_coefficients("matern12", False, 2, M, 0.1))
+    assert np.abs(bh.imag).max() < 1e-12
+    flipped = np.roll(bh[::-1, ::-1], (1, 1), axis=(0, 1))
+    np.testing.assert_allclose(bh.real, flipped.real, atol=1e-12)
+
+
+def test_phihat_positive_in_band():
+    ks = np.where(np.arange(M) < M // 2, np.arange(M), np.arange(M) - M)
+    ph = np.asarray(kb_phihat(ks.astype(float), S[2], int(SIGMA * M), SIGMA))
+    assert np.all(ph > 0)

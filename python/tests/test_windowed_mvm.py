@@ -1,0 +1,63 @@
+"""L1 Pallas tile kernel vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import dense_mvm_ref
+from compile.model import exact_mvm_fn
+
+KERNELS = ("gaussian", "matern12")
+
+
+def run_case(kind, deriv, n, d, ell, seed):
+    rng = np.random.default_rng(seed)
+    xr = rng.uniform(-1.0, 1.0, (n, d))
+    xc = rng.uniform(-1.0, 1.0, (n, d))
+    v = rng.normal(size=n)
+    out = np.asarray(exact_mvm_fn(kind, deriv, n, d)(xr, xc, v, np.array([ell])))
+    ref = np.asarray(dense_mvm_ref(kind, deriv, xr, xc, v, ell))
+    np.testing.assert_allclose(out, ref, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("kind", KERNELS)
+@pytest.mark.parametrize("deriv", [False, True])
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_kernel_matches_ref_grid(kind, deriv, d):
+    run_case(kind, deriv, 256, d, 0.5, seed=d * 7 + deriv)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kind=st.sampled_from(KERNELS),
+    deriv=st.booleans(),
+    d=st.integers(min_value=1, max_value=3),
+    tiles=st.integers(min_value=1, max_value=3),
+    ell=st.floats(min_value=0.05, max_value=5.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_hypothesis(kind, deriv, d, tiles, ell, seed):
+    run_case(kind, deriv, 256 * tiles, d, ell, seed)
+
+
+def test_gaussian_row_sums_bounded():
+    # kappa <= 1 entries: |out_i| <= sum|v| for the plain kernel.
+    n, d = 256, 2
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (n, d))
+    v = rng.normal(size=n)
+    out = np.asarray(exact_mvm_fn("gaussian", False, n, d)(x, x, v, np.array([1.0])))
+    assert np.all(np.abs(out) <= np.abs(v).sum() + 1e-9)
+
+
+def test_derivative_sign_at_zero_distance():
+    # derivative kernel vanishes at r=0, so diag contributes nothing.
+    n, d = 256, 1
+    x = np.zeros((n, d))
+    v = np.ones(n)
+    out = np.asarray(exact_mvm_fn("gaussian", True, n, d)(x, x, v, np.array([0.7])))
+    np.testing.assert_allclose(out, 0.0, atol=1e-12)

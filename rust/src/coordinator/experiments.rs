@@ -1,0 +1,569 @@
+//! Experiment harnesses — one function per paper figure/table, shared by
+//! the CLI (`fourier-gp experiment <id>`) and the bench binaries
+//! (`cargo bench --bench figN`). Each prints the paper-style series/rows
+//! and writes CSV under `results/`.
+
+use crate::coordinator::mvm::{EngineKind, ExactRustMvm, NfftRustMvm, SubKernelMvm};
+use crate::coordinator::operator::KernelOperator;
+use crate::data::synthetic;
+use crate::data::uci;
+use crate::features::{en_windows, mis_windows, SelectionRule};
+use crate::gp::{GpConfig, GpModel, NllOptions, PrecondKind, Svgp, SvgpConfig};
+use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
+use crate::kernels::KernelFn;
+use crate::linalg::Matrix;
+use crate::nfft::fastsum::error_bounds;
+use crate::nfft::{kernel_coefficients, NfftParams};
+use crate::precond::{AafnPrecond, AfnOptions};
+use crate::solvers::cg::{cg, pcg, CgOptions};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+pub use crate::nfft::fastsum::error_bounds as bounds;
+
+/// `--full` switch: paper-scale runs (env `FGP_FULL=1`).
+pub fn full_scale() -> bool {
+    std::env::var("FGP_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+fn results_path(name: &str) -> std::path::PathBuf {
+    Path::new("results").join(format!("{name}.csv"))
+}
+
+fn announce(id: &str, detail: &str, scale_note: &str) {
+    println!("=== {id}: {detail} ===");
+    if !scale_note.is_empty() {
+        println!("    [{scale_note}]");
+    }
+}
+
+// ---------------------------------------------------------------- Fig 1 --
+
+/// Fig. 1: unpreconditioned CG iterations + spectra over 20 length-scales,
+/// n points in R⁶ (three 2-d disc windows), tol 1e-3.
+pub fn fig1(n: usize) -> Table {
+    announce(
+        "Fig 1",
+        "CG iterations & spectra vs ℓ (additive Gaussian, 3×2-d windows)",
+        &format!("n={n} (paper: 1000)"),
+    );
+    let x = synthetic::fig1_dataset(n, 11);
+    let windows = Windows(vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+    let ak = AdditiveKernel::new(KernelFn::Gaussian, windows.clone());
+    let sigma_f2 = 1.0 / 3.0;
+    let sigma_eps2 = 0.01;
+    let mut rng = Rng::new(7);
+    let b: Vec<f64> = rng.normal_vec(n);
+    let ells = crate::util::logspace(0.05, 500.0, 20);
+    let mut t = Table::with_cols(&["ell", "cg_iters", "lambda_max", "lambda_min", "lambda_median"]);
+    for &ell in &ells {
+        let k = ak.gram_full(&x, ell, sigma_f2, sigma_eps2);
+        let res = cg(&k, &b, &CgOptions { tol: 1e-3, max_iter: 1000, relative: true });
+        let eig = crate::linalg::eig::sym_eigenvalues(&k);
+        t.push_row(&[ell, res.iterations as f64, eig[n - 1], eig[0], eig[n / 2]]);
+        println!(
+            "  ell={ell:9.3}  iters={:4}  λmax={:.3e} λmin={:.3e}",
+            res.iterations,
+            eig[n - 1],
+            eig[0]
+        );
+    }
+    t.save(&results_path("fig1")).ok();
+    t
+}
+
+// ------------------------------------------------------------- Fig 2/3 --
+
+/// Fig. 2: 1-d kernel, periodic continuation and Fourier approximation
+/// (m = 8) — emits the plot series.
+pub fn fig2() -> Table {
+    announce("Fig 2", "κ, κ_R, κ_RF in 1-d (m=8)", "");
+    let m = 8usize;
+    let ell = 0.15;
+    let kernel = KernelFn::Gaussian;
+    let bhat = kernel_coefficients(kernel, 1, m, ell, false);
+    let mut t = Table::with_cols(&["r", "kappa", "kappa_rf"]);
+    for i in 0..=400 {
+        let r = -0.5 + i as f64 / 400.0;
+        // κ_RF(r) = Σ_k b_k e^{2πi k r}
+        let mut krf = 0.0;
+        for (tt, bk) in bhat.iter().enumerate() {
+            let k = if tt < m / 2 { tt as f64 } else { tt as f64 - m as f64 };
+            krf += bk.re * (2.0 * std::f64::consts::PI * k * r).cos()
+                - bk.im * (2.0 * std::f64::consts::PI * k * r).sin();
+        }
+        t.push_row(&[r, kernel.eval_r(r.abs(), ell), krf]);
+    }
+    t.save(&results_path("fig2")).ok();
+    println!("  series written to results/fig2.csv (401 samples)");
+    t
+}
+
+/// Fig. 3: Matérn(½) and its 1-periodization (ℓ = 0.2).
+pub fn fig3() -> Table {
+    announce("Fig 3", "Matérn(½) vs 1-periodization, ℓ=0.2", "");
+    let ell = 0.2;
+    let mut t = Table::with_cols(&["r", "kappa", "kappa_periodized"]);
+    for i in 0..=400 {
+        let r = -0.5 + i as f64 / 400.0;
+        let k = KernelFn::Matern12.eval_r(r.abs(), ell);
+        // 1-periodization: Σ_l κ(r + l), truncated
+        let mut kp = 0.0;
+        for l in -6i32..=6 {
+            kp += KernelFn::Matern12.eval_r((r + l as f64).abs(), ell);
+        }
+        t.push_row(&[r, k, kp]);
+    }
+    t.save(&results_path("fig3")).ok();
+    println!("  series written to results/fig3.csv");
+    t
+}
+
+// ---------------------------------------------------------------- Fig 4 --
+
+/// Fig. 4: measured trivariate Fourier approximation error vs the
+/// Theorem 4.4/4.5 estimates over ℓ, for m ∈ {16,32,64}.
+pub fn fig4(npts: usize) -> Table {
+    announce(
+        "Fig 4",
+        "measured ‖κ−κ_RF‖∞ vs Thm 4.4/4.5 bounds (trivariate Matérn ½)",
+        &format!("n={npts} sample points (paper: 10⁴ pairs)"),
+    );
+    let mut rng = Rng::new(13);
+    let pts: Vec<f64> = (0..npts * 3).map(|_| rng.uniform_in(-0.25, 0.25)).collect();
+    let ells = crate::util::logspace(0.01, 1.0, 13);
+    let mut t = Table::with_cols(&[
+        "m", "ell", "measured_k", "bound_k", "measured_der", "bound_der",
+    ]);
+    for &m in &[16usize, 32, 64] {
+        for &ell in &ells {
+            let (mk, md) = measured_fourier_error(&pts, npts, m, ell);
+            let bk = error_bounds::matern_trivariate(ell, m);
+            let bd = error_bounds::matern_deriv_trivariate(ell, m);
+            t.push_row(&[m as f64, ell, mk, bk, md, bd]);
+            println!(
+                "  m={m:2} ell={ell:7.3}  κ: meas={mk:.3e} bound={bk:.3e}   κ': meas={md:.3e} bound={bd:.3e}"
+            );
+        }
+    }
+    t.save(&results_path("fig4")).ok();
+    t
+}
+
+/// max |κ(r) − κ_RF(r)| over a fine uniform grid of offsets r, and the
+/// same for the derivative kernel. κ_RF is a degree-m trigonometric
+/// polynomial, so zero-padding b_k to a 2m grid and inverse-FFTing
+/// evaluates it *exactly* at r = u/(2m) — O((2m)³ log m) instead of the
+/// naive O(pairs · m³) sum.
+fn measured_fourier_error(_pts: &[f64], _n: usize, m: usize, ell: f64) -> (f64, f64) {
+    use crate::fft::{ifftn, Complex};
+    let m2 = 2 * m; // evaluation grid per axis (power of two)
+    let eval = |deriv: bool| -> f64 {
+        let bhat = kernel_coefficients(KernelFn::Matern12, 3, m, ell, deriv);
+        let mut grid = vec![Complex::ZERO; m2 * m2 * m2];
+        // Pad DFT-layout b_k (m³) into the 2m grid.
+        for (flat, bk) in bhat.iter().enumerate() {
+            let k = crate::nfft::plan::ndft::unflatten(flat, 3, m);
+            let mut big = 0usize;
+            for &kc in &k {
+                big = big * m2 + kc.rem_euclid(m2 as i64) as usize;
+            }
+            grid[big] = *bk;
+        }
+        ifftn(&[m2, m2, m2], &mut grid);
+        let scale = (m2 * m2 * m2) as f64; // undo ifftn's 1/N: κ_RF = N·ifft
+        let mut worst = 0.0f64;
+        for (flat, g) in grid.iter().enumerate() {
+            let u = crate::nfft::plan::ndft::unflatten(flat, 3, m2);
+            let r2 = u.iter().map(|&c| {
+                let x = c as f64 / m2 as f64;
+                x * x
+            }).sum::<f64>();
+            let truth = if deriv {
+                KernelFn::Matern12.deriv_ell_r2(r2, ell)
+            } else {
+                KernelFn::Matern12.eval_r2(r2, ell)
+            };
+            worst = worst.max((truth - g.re * scale).abs());
+        }
+        worst
+    };
+    (eval(false), eval(true))
+}
+
+// ---------------------------------------------------------------- Fig 5 --
+
+/// Fig. 5: CG vs AAFN-PCG iterations over ℓ for Gaussian and Matérn(½),
+/// n points in a hypercube of side ∛n, windows [[1,2,3],[4,5,6]].
+pub fn fig5(n: usize) -> Table {
+    announce(
+        "Fig 5",
+        "CG vs AAFN-PCG iterations vs ℓ (tol 1e-4, maxit 200)",
+        &format!("n={n} (paper: 3000, rank 300, fill 100)"),
+    );
+    let x = synthetic::fig5_dataset(n, 23);
+    let windows = Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    let sigma_f2 = 0.5;
+    let sigma_eps2 = 0.01;
+    let mut rng = Rng::new(29);
+    let b: Vec<f64> = (0..n).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+    let opts = CgOptions { tol: 1e-4, max_iter: 200, relative: true };
+    let rank = (n / 10).clamp(30, 300);
+    let afn = AfnOptions { k_per_window: rank / 2, max_rank: rank, fill: 30 };
+    let ells = crate::util::logspace(0.05, 100.0, 12);
+    let mut t = Table::with_cols(&["kernel", "ell", "cg_iters", "pcg_iters"]);
+    for (kid, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
+        let ak = AdditiveKernel::new(*kernel, windows.clone());
+        for &ell in &ells {
+            let k = ak.gram_full(&x, ell, sigma_f2, sigma_eps2);
+            let plain = cg(&k, &b, &opts);
+            let p = AafnPrecond::build(&x, &ak, ell, sigma_f2, sigma_eps2, &afn);
+            let pre = pcg(&k, &p, &b, &opts);
+            t.push_row(&[kid as f64, ell, plain.iterations as f64, pre.iterations as f64]);
+            println!(
+                "  {:<9} ell={ell:8.3}  CG={:4}  AAFN-PCG={:3}",
+                kernel.name(),
+                plain.iterations,
+                pre.iterations
+            );
+        }
+    }
+    t.save(&results_path("fig5")).ok();
+    t
+}
+
+// ---------------------------------------------------------------- Fig 6 --
+
+/// Fig. 6: mean ± 95% CI of Z̃ and ∂Z̃/∂ℓ vs iteration count (1..10),
+/// unpreconditioned vs AAFN, Gaussian kernel, ℓ=2, σ_ε²=1.
+pub fn fig6(n: usize, reps: usize) -> Table {
+    announce(
+        "Fig 6",
+        "estimator mean ± CI vs iteration count, plain vs AAFN",
+        &format!("n={n}, {reps} repetitions (paper: 3000)"),
+    );
+    let ds = synthetic::fig6_dataset(n, 31);
+    let windows = Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    let ak = AdditiveKernel::new(KernelFn::Gaussian, windows.clone());
+    let (ell, sf2, se2) = (2.0, 0.5, 1.0);
+    let subs: Vec<Box<dyn SubKernelMvm>> = windows
+        .0
+        .iter()
+        .map(|w| {
+            Box::new(ExactRustMvm::new(
+                KernelFn::Gaussian,
+                WindowedPoints::extract(&ds.x, w),
+                ell,
+            )) as Box<dyn SubKernelMvm>
+        })
+        .collect();
+    let op = KernelOperator::new(subs, sf2, se2);
+    // Paper configuration: maximum rank 100, fill 100 — the preconditioner
+    // must capture the smooth kernel's numerical rank for the
+    // variance-reduction effect to appear.
+    let rank = 100.min(n / 3);
+    let p = AafnPrecond::build(
+        &ds.x,
+        &ak,
+        ell,
+        sf2,
+        se2,
+        &AfnOptions { k_per_window: rank, max_rank: rank, fill: 40.min(n / 10) },
+    );
+    let mut t = Table::with_cols(&[
+        "iters", "plain_nll_mean", "plain_nll_ci", "pre_nll_mean", "pre_nll_ci",
+        "plain_dell_mean", "plain_dell_ci", "pre_dell_mean", "pre_dell_ci",
+    ]);
+    for iters in 1..=10usize {
+        let mut vals = [[0.0f64; 2]; 4]; // (sum, sumsq) per series
+        let mut collect = |slot: usize, v: f64, acc: &mut [[f64; 2]; 4]| {
+            acc[slot][0] += v;
+            acc[slot][1] += v * v;
+        };
+        for rep in 0..reps {
+            let opts = NllOptions {
+                train_cg_iters: iters,
+                num_probes: 5,
+                slq_steps: iters,
+                cg_tol: 1e-12,
+                seed: 1000 + rep as u64,
+            };
+            let plain = crate::gp::nll::estimate_nll(&op, None, &ds.y, &opts);
+            let g_plain =
+                crate::gp::nll::estimate_grad(&op, None, &plain.alpha, &opts);
+            let pre = crate::gp::nll::estimate_nll(&op, Some(&p), &ds.y, &opts);
+            let g_pre = crate::gp::nll::estimate_grad(&op, Some(&p), &pre.alpha, &opts);
+            collect(0, plain.value, &mut vals);
+            collect(1, pre.value, &mut vals);
+            collect(2, g_plain.grad[1], &mut vals);
+            collect(3, g_pre.grad[1], &mut vals);
+        }
+        let stat = |acc: [f64; 2]| {
+            let mean = acc[0] / reps as f64;
+            let var = (acc[1] / reps as f64 - mean * mean).max(0.0);
+            (mean, 1.96 * (var / reps as f64).sqrt())
+        };
+        let (pm, pc) = stat(vals[0]);
+        let (qm, qc) = stat(vals[1]);
+        let (gm, gc) = stat(vals[2]);
+        let (hm, hc) = stat(vals[3]);
+        t.push_row(&[iters as f64, pm, pc, qm, qc, gm, gc, hm, hc]);
+        println!(
+            "  iters={iters:2}  Z̃ plain={pm:10.2}±{pc:6.2}  AAFN={qm:10.2}±{qc:6.2}  ∂Z̃/∂ℓ plain={gm:8.3}±{gc:5.3}  AAFN={hm:8.3}±{hc:5.3}"
+        );
+    }
+    t.save(&results_path("fig6")).ok();
+    t
+}
+
+// ------------------------------------------------------------- Fig 7/8 --
+
+/// Fig. 7: 1-d GRF, exact vs NFFT GP (both kernels): loss curves + RMSE.
+pub fn fig7(iters: usize) -> Table {
+    announce("Fig 7", "1-d GRF: exact vs NFFT GPs", &format!("{iters} Adam iters (paper: 500)"));
+    let ds = synthetic::fig7_dataset(1000, 37);
+    let (train, test) = ds.split(0.8, 41);
+    let mut t = Table::with_cols(&["kernel", "engine", "iter", "loss", "rmse"]);
+    for (kid, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
+        for (eid, engine) in [EngineKind::ExactRust, EngineKind::NfftRust].iter().enumerate() {
+            let mut cfg = GpConfig::new(*kernel, Windows(vec![vec![0]]));
+            cfg.engine = *engine;
+            // 1-d Matérn(½) needs a finer Fourier grid: the derivative
+            // kernel's truncation error is O(1/(ℓ²m)) (Thm 4.5) and the
+            // scaled ℓ here is ≈ 0.04 — m = 128 keeps gradients faithful
+            // (the paper's ℓπm > 1 guidance, applied to the data scale).
+            cfg.nfft = Some(NfftParams::default_for_dim(1).with_m(128));
+            cfg.max_iters = iters;
+            cfg.adam_lr = 0.05;
+            cfg.loss_every = (iters / 20).max(1);
+            cfg.precond = PrecondKind::Aafn(AfnOptions {
+                k_per_window: 40,
+                max_rank: 80,
+                fill: 10,
+            });
+            let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+            let pred = trained.predict_mean(&test.x);
+            let rmse = crate::util::rmse(&pred, &test.y);
+            for &(it, loss) in &trained.loss_trace {
+                t.push_row(&[kid as f64, eid as f64, it as f64, loss, rmse]);
+            }
+            println!(
+                "  {:<9} {:<10} final loss={:9.2}  test RMSE={:.4}  (σf={:.3} ℓ={:.3} σε={:.3})",
+                kernel.name(),
+                engine.name(),
+                trained.loss_trace.last().map(|x| x.1).unwrap_or(f64::NAN),
+                rmse,
+                trained.hyper.sigma_f,
+                trained.hyper.ell,
+                trained.hyper.sigma_eps
+            );
+        }
+    }
+    t.save(&results_path("fig7")).ok();
+    t
+}
+
+/// Fig. 8: R²⁰ GRF on six features, EN grouping, exact vs NFFT additive GP.
+pub fn fig8(n: usize, iters: usize) -> Table {
+    announce(
+        "Fig 8",
+        "R²⁰ GRF: EN grouping + additive GPs (exact vs NFFT)",
+        &format!("n={n}, {iters} Adam iters (paper: 3000, 500)"),
+    );
+    let ds = synthetic::fig8_dataset(n, 43);
+    let (windows, scores) = en_windows(&ds.x, &ds.y, 0.01, &SelectionRule::Count(9), 1000, 1);
+    println!("  EN windows: {} (scores head: {:?})", windows.to_one_based_string(),
+             &scores[..6.min(scores.len())]);
+    let (train, test) = ds.split(0.8, 47);
+    let mut t = Table::with_cols(&["kernel", "engine", "iter", "loss", "rmse"]);
+    for (kid, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
+        for (eid, engine) in [EngineKind::ExactRust, EngineKind::NfftRust].iter().enumerate() {
+            let mut cfg = GpConfig::new(*kernel, windows.clone());
+            cfg.engine = *engine;
+            cfg.max_iters = iters;
+            cfg.adam_lr = 0.05;
+            cfg.loss_every = (iters / 20).max(1);
+            let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+            let pred = trained.predict_mean(&test.x);
+            let rmse = crate::util::rmse(&pred, &test.y);
+            for &(it, loss) in &trained.loss_trace {
+                t.push_row(&[kid as f64, eid as f64, it as f64, loss, rmse]);
+            }
+            println!(
+                "  {:<9} {:<10} final loss={:9.2}  test RMSE={:.4}",
+                kernel.name(),
+                engine.name(),
+                trained.loss_trace.last().map(|x| x.1).unwrap_or(f64::NAN),
+                rmse
+            );
+        }
+    }
+    t.save(&results_path("fig8")).ok();
+    t
+}
+
+// ------------------------------------------------------------ Tables ----
+
+/// Table 1: MIS feature windows at d_ratio ∈ {⅓, ⅔, 1}.
+pub fn table1() -> Table {
+    announce("Table 1", "MIS feature windows per d_ratio", "UCI simulacra (see DESIGN.md)");
+    let mut t = Table::with_cols(&["dataset", "ratio", "num_windows", "num_features"]);
+    for (di, name) in ["bike", "elevators", "poletele"].iter().enumerate() {
+        let ds = uci::by_name(name, 0).unwrap().subsample(4000, 3);
+        for (ri, ratio) in [(1.0 / 3.0), (2.0 / 3.0), 1.0].iter().enumerate() {
+            let (w, _) = mis_windows(&ds.x, &ds.y, &SelectionRule::Ratio(*ratio), 1000, 5);
+            println!("  {name:<10} ratio={ratio:.2}  W = {}", w.to_one_based_string());
+            t.push_row(&[di as f64, ri as f64, w.len() as f64, w.total_features() as f64]);
+        }
+    }
+    t.save(&results_path("table1")).ok();
+    t
+}
+
+/// Shared train/eval for Tables 2–3.
+pub fn run_gp_rmse(
+    ds: &crate::data::Dataset,
+    kernel: KernelFn,
+    windows: &Windows,
+    engine: EngineKind,
+    iters: usize,
+    seed: u64,
+) -> f64 {
+    let (train, test) = ds.split(0.8, seed);
+    let mut cfg = GpConfig::new(kernel, windows.clone());
+    cfg.engine = engine;
+    cfg.max_iters = iters;
+    cfg.adam_lr = 0.05;
+    cfg.loss_every = 0;
+    cfg.nll = NllOptions { train_cg_iters: 10, num_probes: 5, slq_steps: 10, cg_tol: 1e-10, seed };
+    cfg.precond = PrecondKind::Aafn(AfnOptions { k_per_window: 10, max_rank: 100, fill: 10 });
+    let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+    let pred = trained.predict_mean(&test.x);
+    crate::util::rmse(&pred, &test.y)
+}
+
+/// Table 2: RMSE of NFFT-additive GPs at MIS ratios vs exact single-kernel.
+pub fn table2(max_n: usize, iters: usize) -> Table {
+    announce(
+        "Table 2",
+        "RMSE: NFFT-additive at MIS ratios vs exact GP",
+        &format!("subsampled to ≤{max_n} rows, {iters} Adam iters (paper: full data, 500)"),
+    );
+    let mut t = Table::with_cols(&["dataset", "kernel", "ratio", "rmse", "rmse_exact"]);
+    for (di, name) in ["bike", "elevators", "poletele"].iter().enumerate() {
+        let mut ds = uci::by_name(name, 0).unwrap().subsample(max_n, 3);
+        ds.standardize();
+        for (ki, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
+            // exact single-kernel baseline: one window with ≤3 top features
+            // per chunk over ALL features
+            let all = Windows::consecutive(ds.p(), 3);
+            let exact_rmse =
+                run_gp_rmse(&ds, *kernel, &all, EngineKind::ExactRust, iters, 71);
+            for (ri, ratio) in [1.0 / 3.0, 2.0 / 3.0, 1.0].iter().enumerate() {
+                let (w, _) =
+                    mis_windows(&ds.x, &ds.y, &SelectionRule::Ratio(*ratio), 1000, 5);
+                let rmse =
+                    run_gp_rmse(&ds, *kernel, &w, EngineKind::NfftRust, iters, 73);
+                println!(
+                    "  {name:<10} {:<9} ratio={ratio:.2}  rmse={rmse:.3}  (exact={exact_rmse:.3})",
+                    kernel.name()
+                );
+                t.push_row(&[di as f64, ki as f64, ri as f64, rmse, exact_rmse]);
+            }
+        }
+    }
+    t.save(&results_path("table2")).ok();
+    t
+}
+
+/// Table 3: RMSE of EN-grouped NFFT-additive vs exact vs SVGP (+ road3d).
+pub fn table3(max_n: usize, iters: usize) -> Table {
+    announce(
+        "Table 3",
+        "RMSE: EN-grouped NFFT-additive vs exact vs SVGP",
+        &format!("subsampled to ≤{max_n} rows, {iters} Adam iters"),
+    );
+    let mut t = Table::with_cols(&["dataset", "svgp", "exact_g", "exact_m", "additive_g", "additive_m"]);
+    for (di, name) in ["bike", "elevators", "poletele", "road3d"].iter().enumerate() {
+        let cap = if *name == "road3d" { max_n * 4 } else { max_n };
+        let mut ds = uci::by_name(name, 0).unwrap().subsample(cap, 3);
+        ds.standardize();
+        let (w, _) = if ds.p() > 3 {
+            en_windows(&ds.x, &ds.y, 0.01, &SelectionRule::Count(9), 1000, 5)
+        } else {
+            (Windows::consecutive(ds.p(), 3), vec![])
+        };
+        println!("  {name:<10} EN windows: {}", w.to_one_based_string());
+        let all = Windows::consecutive(ds.p(), 3);
+        // SVGP baseline (Gaussian kernel, as in the paper's source [1]).
+        let ak = AdditiveKernel::new(KernelFn::Gaussian, all.clone());
+        let (tr, te) = ds.split(0.8, 79);
+        let svgp = Svgp::new(SvgpConfig {
+            num_inducing: 100,
+            max_iters: iters.min(60),
+            adam_lr: 0.05,
+            init: Default::default(),
+        })
+        .fit(&ak, &tr.x, &tr.y);
+        let svgp_rmse = crate::util::rmse(&svgp.predict_mean(&te.x), &te.y);
+        // Exact engines on the full windows (the "exact GP" column; dense
+        // MVM, so bounded by max_n); road3d uses high-accuracy NFFT as the
+        // exact surrogate per DESIGN.md.
+        let exact_engine = if *name == "road3d" {
+            EngineKind::NfftRust
+        } else {
+            EngineKind::ExactRust
+        };
+        let exact_g = run_gp_rmse(&ds, KernelFn::Gaussian, &all, exact_engine, iters, 83);
+        let exact_m = run_gp_rmse(&ds, KernelFn::Matern12, &all, exact_engine, iters, 89);
+        let add_g = run_gp_rmse(&ds, KernelFn::Gaussian, &w, EngineKind::NfftRust, iters, 97);
+        let add_m = run_gp_rmse(&ds, KernelFn::Matern12, &w, EngineKind::NfftRust, iters, 101);
+        println!(
+            "  {name:<10} SVGP-G={svgp_rmse:.3}  exact G={exact_g:.3} M={exact_m:.3}  additive G={add_g:.3} M={add_m:.3}"
+        );
+        t.push_row(&[di as f64, svgp_rmse, exact_g, exact_m, add_g, add_m]);
+    }
+    t.save(&results_path("table3")).ok();
+    t
+}
+
+// ------------------------------------------------------ MVM scaling ------
+
+/// Headline complexity: exact O(n²) vs NFFT O(n log n) MVM scaling.
+pub fn mvm_scaling(sizes: &[usize]) -> Table {
+    announce("MVM scaling", "exact vs NFFT sub-kernel MVM wall-clock", "");
+    let mut t = Table::with_cols(&["n", "exact_s", "nfft_s", "speedup"]);
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64);
+        let mut x = Matrix::zeros(n, 2);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 10.0);
+        }
+        let wp = WindowedPoints::extract(&x, &[0, 1]);
+        let v = rng.normal_vec(n);
+        let exact = ExactRustMvm::new(KernelFn::Gaussian, wp.clone(), 1.0);
+        let nfft = NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+        let time = |f: &dyn Fn() -> Vec<f64>| {
+            let mut best = f64::INFINITY;
+            let reps = if n <= 20_000 { 5 } else { 2 };
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                let out = f();
+                crate::util::bench::black_box(out);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let te = if n <= 50_000 {
+            time(&|| exact.apply(&v, false))
+        } else {
+            f64::NAN // dense MVM impractically slow; report NFFT only
+        };
+        let tn = time(&|| nfft.apply(&v, false));
+        println!("  n={n:7}  exact={te:10.4}s  nfft={tn:10.4}s  speedup={:7.1}x", te / tn);
+        t.push_row(&[n as f64, te, tn, te / tn]);
+    }
+    t.save(&results_path("mvm_scaling")).ok();
+    t
+}

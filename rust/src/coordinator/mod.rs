@@ -1,0 +1,6 @@
+//! L3 coordinator: MVM engines, the additive kernel operator, experiment
+//! harnesses, and training orchestration.
+
+pub mod experiments;
+pub mod mvm;
+pub mod operator;

@@ -1,0 +1,207 @@
+//! The regularized additive kernel operator
+//! K̂ = σ_f² (K₁ + … + K_P) + σ_ε² I as a `LinOp`, with its hyperparameter
+//! derivatives — the object every solver in the GP stack multiplies by.
+
+use super::mvm::SubKernelMvm;
+use crate::solvers::LinOp;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct KernelOperator {
+    pub subs: Vec<Box<dyn SubKernelMvm>>,
+    pub sigma_f2: f64,
+    pub sigma_eps2: f64,
+    n: usize,
+    /// MVM counter (for complexity/benchmark reporting).
+    pub mvm_count: AtomicUsize,
+}
+
+impl KernelOperator {
+    pub fn new(subs: Vec<Box<dyn SubKernelMvm>>, sigma_f2: f64, sigma_eps2: f64) -> Self {
+        assert!(!subs.is_empty());
+        let n = subs[0].n();
+        for s in &subs {
+            assert_eq!(s.n(), n);
+        }
+        Self { subs, sigma_f2, sigma_eps2, n, mvm_count: AtomicUsize::new(0) }
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn set_hyper(&mut self, ell: f64, sigma_f2: f64, sigma_eps2: f64) {
+        for s in &mut self.subs {
+            s.set_ell(ell);
+        }
+        self.sigma_f2 = sigma_f2;
+        self.sigma_eps2 = sigma_eps2;
+    }
+
+    /// y = σ_f² Σ_s K_s v  (the kernel part, no noise term).
+    pub fn kernel_mvm(&self, v: &[f64]) -> Vec<f64> {
+        self.mvm_count.fetch_add(1, Ordering::Relaxed);
+        let mut acc = vec![0.0; self.n];
+        for s in &self.subs {
+            let y = s.apply(v, false);
+            for (a, b) in acc.iter_mut().zip(&y) {
+                *a += b;
+            }
+        }
+        for a in &mut acc {
+            *a *= self.sigma_f2;
+        }
+        acc
+    }
+
+    /// y = (∂K̂/∂ℓ) v = σ_f² Σ_s K_s^der v.
+    pub fn deriv_ell_mvm(&self, v: &[f64]) -> Vec<f64> {
+        self.mvm_count.fetch_add(1, Ordering::Relaxed);
+        let mut acc = vec![0.0; self.n];
+        for s in &self.subs {
+            let y = s.apply(v, true);
+            for (a, b) in acc.iter_mut().zip(&y) {
+                *a += b;
+            }
+        }
+        for a in &mut acc {
+            *a *= self.sigma_f2;
+        }
+        acc
+    }
+
+    /// y = (∂K̂/∂σ_f) v = 2σ_f Σ K_s v = (2/σ_f)·(K̂v − σ_ε²v).
+    pub fn deriv_sigma_f_mvm(&self, v: &[f64]) -> Vec<f64> {
+        let kv = self.kernel_mvm(v); // σ_f² Σ K_s v
+        let sf = self.sigma_f2.sqrt();
+        kv.iter().map(|k| 2.0 * k / sf).collect()
+    }
+
+    /// (∂K̂/∂σ_ε) v = 2σ_ε v.
+    pub fn deriv_sigma_eps_mvm(&self, v: &[f64]) -> Vec<f64> {
+        let se = self.sigma_eps2.sqrt();
+        v.iter().map(|x| 2.0 * se * x).collect()
+    }
+
+    pub fn mvms_performed(&self) -> usize {
+        self.mvm_count.load(Ordering::Relaxed)
+    }
+}
+
+impl LinOp for KernelOperator {
+    fn dim(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let kv = self.kernel_mvm(x);
+        for i in 0..self.n {
+            y[i] = kv[i] + self.sigma_eps2 * x[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::mvm::ExactRustMvm;
+    use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
+    use crate::kernels::KernelFn;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn make_operator(n: usize, seed: u64, ell: f64, sf2: f64, se2: f64) -> (KernelOperator, Matrix, AdditiveKernel) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 4);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 3.0);
+        }
+        let windows = Windows(vec![vec![0, 1], vec![2, 3]]);
+        let ak = AdditiveKernel::new(KernelFn::Gaussian, windows.clone());
+        let subs: Vec<Box<dyn SubKernelMvm>> = windows
+            .0
+            .iter()
+            .map(|w| {
+                Box::new(ExactRustMvm::new(
+                    KernelFn::Gaussian,
+                    WindowedPoints::extract(&x, w),
+                    ell,
+                )) as Box<dyn SubKernelMvm>
+            })
+            .collect();
+        (KernelOperator::new(subs, sf2, se2), x, ak)
+    }
+
+    #[test]
+    fn operator_matches_dense_gram() {
+        let (op, x, ak) = make_operator(60, 1, 0.8, 0.5, 0.01);
+        let dense = ak.gram_full(&x, 0.8, 0.5, 0.01);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(60);
+        let got = op.apply_vec(&v);
+        let want = dense.matvec(&v);
+        for i in 0..60 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn derivative_operators_match_finite_differences() {
+        let n = 50;
+        let (ell, sf2, se2) = (0.9, 0.6, 0.05);
+        let h = 1e-6;
+        let (op, x, ak) = make_operator(n, 3, ell, sf2, se2);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(n);
+
+        // dK/dℓ
+        let kp = ak.gram_full(&x, ell + h, sf2, se2).matvec(&v);
+        let km = ak.gram_full(&x, ell - h, sf2, se2).matvec(&v);
+        let fd: Vec<f64> = kp.iter().zip(&km).map(|(a, b)| (a - b) / (2.0 * h)).collect();
+        let an = op.deriv_ell_mvm(&v);
+        for i in 0..n {
+            assert!((fd[i] - an[i]).abs() < 1e-5 * (1.0 + an[i].abs()), "ell i={i}");
+        }
+
+        // dK/dσ_f (σ_f = sqrt(sf2))
+        let sf = sf2.sqrt();
+        let kp = ak.gram_full(&x, ell, (sf + h) * (sf + h), se2).matvec(&v);
+        let km = ak.gram_full(&x, ell, (sf - h) * (sf - h), se2).matvec(&v);
+        let fd: Vec<f64> = kp.iter().zip(&km).map(|(a, b)| (a - b) / (2.0 * h)).collect();
+        let an = op.deriv_sigma_f_mvm(&v);
+        for i in 0..n {
+            assert!((fd[i] - an[i]).abs() < 1e-5 * (1.0 + an[i].abs()), "sf i={i}");
+        }
+
+        // dK/dσ_ε
+        let se = se2.sqrt();
+        let kp = ak.gram_full(&x, ell, sf2, (se + h) * (se + h)).matvec(&v);
+        let km = ak.gram_full(&x, ell, sf2, (se - h) * (se - h)).matvec(&v);
+        let fd: Vec<f64> = kp.iter().zip(&km).map(|(a, b)| (a - b) / (2.0 * h)).collect();
+        let an = op.deriv_sigma_eps_mvm(&v);
+        for i in 0..n {
+            assert!((fd[i] - an[i]).abs() < 1e-5 * (1.0 + an[i].abs()), "se i={i}");
+        }
+    }
+
+    #[test]
+    fn set_hyper_changes_operator() {
+        let (mut op, x, ak) = make_operator(40, 5, 1.0, 0.5, 0.01);
+        op.set_hyper(0.5, 0.8, 0.1);
+        let dense = ak.gram_full(&x, 0.5, 0.8, 0.1);
+        let mut rng = Rng::new(6);
+        let v = rng.normal_vec(40);
+        let got = op.apply_vec(&v);
+        let want = dense.matvec(&v);
+        for i in 0..40 {
+            assert!((got[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mvm_counter_increments() {
+        let (op, _, _) = make_operator(20, 7, 1.0, 0.5, 0.01);
+        let v = vec![1.0; 20];
+        let _ = op.apply_vec(&v);
+        let _ = op.deriv_ell_mvm(&v);
+        assert_eq!(op.mvms_performed(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! Dataset container: features + labels, standardization, train/test
+//! splits, CSV round-trip.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub x_mean: Vec<f64>,
+    pub x_std: Vec<f64>,
+    pub y_mean: f64,
+    pub y_std: f64,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Matrix, y: Vec<f64>) -> Dataset {
+        assert_eq!(x.rows, y.len());
+        Dataset { x, y, name: name.to_string() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Standardize features and labels in place; returns the transform so
+    /// predictions can be de-standardized.
+    pub fn standardize(&mut self) -> Standardizer {
+        let p = self.p();
+        let mut x_mean = vec![0.0; p];
+        let mut x_std = vec![0.0; p];
+        for c in 0..p {
+            let col = self.x.col(c);
+            x_mean[c] = crate::util::mean(&col);
+            x_std[c] = crate::util::variance(&col).sqrt().max(1e-12);
+            for r in 0..self.n() {
+                self.x[(r, c)] = (self.x[(r, c)] - x_mean[c]) / x_std[c];
+            }
+        }
+        let y_mean = crate::util::mean(&self.y);
+        let y_std = crate::util::variance(&self.y).sqrt().max(1e-12);
+        for v in &mut self.y {
+            *v = (*v - y_mean) / y_std;
+        }
+        Standardizer { x_mean, x_std, y_mean, y_std }
+    }
+
+    /// Random train/test split (deterministic under seed).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.n();
+        let ntrain = ((n as f64) * train_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| -> Dataset {
+            let mut x = Matrix::zeros(ids.len(), self.p());
+            let mut y = vec![0.0; ids.len()];
+            for (r, &i) in ids.iter().enumerate() {
+                x.row_mut(r).copy_from_slice(self.x.row(i));
+                y[r] = self.y[i];
+            }
+            Dataset::new(&self.name, x, y)
+        };
+        (take(&idx[..ntrain]), take(&idx[ntrain..]))
+    }
+
+    /// Keep a random subsample of at most `max_rows` rows.
+    pub fn subsample(&self, max_rows: usize, seed: u64) -> Dataset {
+        if self.n() <= max_rows {
+            return self.clone();
+        }
+        let mut rng = Rng::new(seed);
+        let idx = rng.sample_indices(self.n(), max_rows);
+        let mut x = Matrix::zeros(max_rows, self.p());
+        let mut y = vec![0.0; max_rows];
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.x.row(i));
+            y[r] = self.y[i];
+        }
+        Dataset::new(&self.name, x, y)
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut cols: Vec<String> = (0..self.p()).map(|c| format!("x{c}")).collect();
+        cols.push("y".to_string());
+        let mut t = crate::util::csv::Table::new(cols);
+        for r in 0..self.n() {
+            let mut row = self.x.row(r).to_vec();
+            row.push(self.y[r]);
+            t.push_row(&row);
+        }
+        t.save(path)
+    }
+
+    pub fn load_csv(name: &str, path: &std::path::Path) -> anyhow::Result<Dataset> {
+        let t = crate::util::csv::Table::load(path)?;
+        let p = t.ncols() - 1;
+        let n = t.nrows();
+        let mut x = Matrix::zeros(n, p);
+        let mut y = vec![0.0; n];
+        for r in 0..n {
+            let row = t.row(r);
+            x.row_mut(r).copy_from_slice(&row[..p]);
+            y[r] = row[p];
+        }
+        Ok(Dataset::new(name, x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut rng = Rng::new(1);
+        let mut x = Matrix::zeros(n, 3);
+        for v in &mut x.data {
+            *v = rng.uniform_in(5.0, 10.0);
+        }
+        let y: Vec<f64> = (0..n).map(|i| x[(i, 0)] * 2.0).collect();
+        Dataset::new("toy", x, y)
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut d = toy(500);
+        let st = d.standardize();
+        for c in 0..3 {
+            let col = d.x.col(c);
+            assert!(crate::util::mean(&col).abs() < 1e-10);
+            assert!((crate::util::variance(&col) - 1.0).abs() < 1e-6);
+        }
+        assert!(crate::util::mean(&d.y).abs() < 1e-10);
+        assert!(st.y_std > 0.0);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy(100);
+        let (tr, te) = d.split(0.8, 42);
+        assert_eq!(tr.n(), 80);
+        assert_eq!(te.n(), 20);
+        // determinism
+        let (tr2, _) = d.split(0.8, 42);
+        assert_eq!(tr.y, tr2.y);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let d = toy(20);
+        let path = std::env::temp_dir().join("fgp_ds_test/toy.csv");
+        d.save_csv(&path).unwrap();
+        let e = Dataset::load_csv("toy", &path).unwrap();
+        assert_eq!(d.x.data, e.x.data);
+        assert_eq!(d.y, e.y);
+    }
+
+    #[test]
+    fn subsample_bounds() {
+        let d = toy(100);
+        let s = d.subsample(30, 7);
+        assert_eq!(s.n(), 30);
+        let t = d.subsample(1000, 7);
+        assert_eq!(t.n(), 100);
+    }
+}

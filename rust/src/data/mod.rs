@@ -1,0 +1,8 @@
+//! Datasets: container/standardization/splits, the paper's synthetic
+//! workload generators, and the offline UCI simulacra.
+
+pub mod dataset;
+pub mod synthetic;
+pub mod uci;
+
+pub use dataset::{Dataset, Standardizer};

@@ -1,0 +1,224 @@
+//! UCI dataset simulacra (DESIGN.md §substitutions).
+//!
+//! The container has no network access, so the four UCI benchmarks of
+//! paper §5.2 (Table 3) are replaced by seeded synthetic regression tasks
+//! with the same (n, p) and a *planted additive structure*: a handful of
+//! informative features drive the response through smooth univariate and
+//! low-order interaction terms, the remaining features are correlated
+//! nuisance. This preserves what the experiments measure — the relative
+//! behaviour of exact / additive-NFFT / SVGP models and of MIS/EN feature
+//! grouping — while remaining fully reproducible offline.
+
+use super::dataset::Dataset;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Paper Table 3 shapes.
+pub const BIKE: (usize, usize) = (13034, 13);
+pub const ELEVATORS: (usize, usize) = (13279, 18);
+pub const POLETELE: (usize, usize) = (4406, 19);
+pub const ROAD3D: (usize, usize) = (326_155, 2);
+
+pub fn by_name(name: &str, seed: u64) -> anyhow::Result<Dataset> {
+    match name.to_ascii_lowercase().as_str() {
+        "bike" => Ok(bike(seed)),
+        "elevators" => Ok(elevators(seed)),
+        "poletele" => Ok(poletele(seed)),
+        "road3d" => Ok(road3d(seed)),
+        other => anyhow::bail!("unknown dataset {other:?} (bike|elevators|poletele|road3d)"),
+    }
+}
+
+/// Correlated feature matrix: z-scored AR(1)-mixed Gaussians, giving the
+/// mild collinearity real tabular data has.
+fn feature_matrix(n: usize, p: usize, rho: f64, rng: &mut Rng) -> Matrix {
+    let mut x = Matrix::zeros(n, p);
+    for i in 0..n {
+        let mut prev = rng.normal();
+        for c in 0..p {
+            let fresh = rng.normal();
+            let v = rho * prev + (1.0 - rho * rho).sqrt() * fresh;
+            x[(i, c)] = v;
+            prev = v;
+        }
+    }
+    x
+}
+
+/// bike (13034 × 13): seasonal/temperature-like drivers — smooth periodic
+/// + saturating terms on ~9 informative features.
+pub fn bike(seed: u64) -> Dataset {
+    let (n, p) = BIKE;
+    let mut rng = Rng::new(seed ^ 0xb1ce);
+    let x = feature_matrix(n, p, 0.3, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            // active: 1,2,3,4,5,6,8,9,11 (0-based), mimicking hour/temp/
+            // season/humidity-type drivers.
+            (2.0 * r[1]).sin() + 0.8 * r[2] + (r[3] * r[4]).tanh()
+                + 0.6 * (r[5] - 0.5).powi(2)
+                + 0.7 * r[6].max(0.0)
+                + 0.4 * (r[8] + r[9]).sin()
+                + 0.3 * r[11]
+                + 0.25 * rng.normal()
+        })
+        .collect();
+    Dataset::new("bike", x, y)
+}
+
+/// elevators (13279 × 18): control-surface style response — mostly linear
+/// in a few features with a couple of smooth nonlinearities.
+pub fn elevators(seed: u64) -> Dataset {
+    let (n, p) = ELEVATORS;
+    let mut rng = Rng::new(seed ^ 0xe1ef);
+    let x = feature_matrix(n, p, 0.4, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            1.0 * r[9] + 0.8 * r[10] + 0.6 * r[11] + 0.5 * (r[12] * r[17]).tanh()
+                + 0.4 * (r[5]).sin()
+                + 0.3 * r[3] * r[1]
+                + 0.2 * rng.normal()
+        })
+        .collect();
+    Dataset::new("elevators", x, y)
+}
+
+/// poletele (4406 × 19): telecomm pole response — strong low-index
+/// features (the paper's MIS windows start [[1,2,4],…]).
+pub fn poletele(seed: u64) -> Dataset {
+    let (n, p) = POLETELE;
+    let mut rng = Rng::new(seed ^ 0x901e);
+    let x = feature_matrix(n, p, 0.35, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            1.2 * (r[0]).tanh() + 1.0 * r[1] + 0.8 * (r[3] * 1.5).sin()
+                + 0.5 * r[6] * r[6].signum()
+                + 0.4 * (r[18] + r[16]).tanh()
+                + 0.3 * r[2]
+                + 0.15 * rng.normal()
+        })
+        .collect();
+    Dataset::new("poletele", x, y)
+}
+
+/// road3d (326155 × 2): smooth terrain altitude over (lon, lat) — a
+/// low-dimensional spatial regression like the 3D Road Network dataset.
+/// Terrain = a few long-wavelength "ridges" + medium-scale bumps.
+pub fn road3d(seed: u64) -> Dataset {
+    let (n, p) = ROAD3D;
+    let mut rng = Rng::new(seed ^ 0x80ad);
+    let mut x = Matrix::zeros(n, p);
+    // Roads: sample along meandering paths to mimic road-network geometry.
+    let mut lon = rng.uniform_in(-1.0, 1.0);
+    let mut lat = rng.uniform_in(-1.0, 1.0);
+    for i in 0..n {
+        if rng.uniform() < 0.001 {
+            lon = rng.uniform_in(-1.0, 1.0);
+            lat = rng.uniform_in(-1.0, 1.0);
+        }
+        lon = (lon + 0.01 * rng.normal()).clamp(-1.0, 1.0);
+        lat = (lat + 0.01 * rng.normal()).clamp(-1.0, 1.0);
+        x[(i, 0)] = lon;
+        x[(i, 1)] = lat;
+    }
+    // Fixed random Fourier terrain (smooth, deterministic under seed).
+    let mut terrain_rng = Rng::new(seed ^ 0x7e44a1);
+    let nf = 24;
+    let freqs: Vec<(f64, f64, f64, f64)> = (0..nf)
+        .map(|k| {
+            let scale = if k < 6 { 1.5 } else { 6.0 };
+            (
+                terrain_rng.normal() * scale,
+                terrain_rng.normal() * scale,
+                terrain_rng.uniform_in(0.0, 2.0 * std::f64::consts::PI),
+                terrain_rng.normal() / (1.0 + k as f64 * 0.3),
+            )
+        })
+        .collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let (a, b) = (x[(i, 0)], x[(i, 1)]);
+            let mut alt = 0.0;
+            for &(fa, fb, ph, amp) in &freqs {
+                alt += amp * (fa * a + fb * b + ph).sin();
+            }
+            alt + 0.05 * rng.normal()
+        })
+        .collect();
+    Dataset::new("road3d", x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper_table3() {
+        assert_eq!(bike(0).x.rows, 13034);
+        assert_eq!(bike(0).x.cols, 13);
+        assert_eq!(elevators(0).x.cols, 18);
+        assert_eq!(poletele(0).x.rows, 4406);
+        assert_eq!(poletele(0).x.cols, 19);
+        let r = road3d(0);
+        assert_eq!(r.x.rows, 326_155);
+        assert_eq!(r.x.cols, 2);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = poletele(5);
+        let b = poletele(5);
+        assert_eq!(a.y, b.y);
+        let c = poletele(6);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn informative_features_learnable() {
+        // A linear model on the planted features must beat the noise floor
+        // (sanity that the simulacra carry signal).
+        let d = elevators(1).subsample(2000, 0);
+        let w = crate::features::elastic_net(
+            &d.x,
+            &d.y,
+            &crate::features::ElasticNetOptions { lambda: 0.01, ..Default::default() },
+        );
+        // strongest coefficients at planted features 9, 10, 11
+        let mut order: Vec<usize> = (0..d.p()).collect();
+        order.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+        assert!(order[..3].contains(&9), "{order:?}");
+        assert!(order[..3].contains(&10), "{order:?}");
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert!(by_name("bike", 0).is_ok());
+        assert!(by_name("nope", 0).is_err());
+    }
+
+    #[test]
+    fn road3d_labels_smooth_in_space() {
+        let d = road3d(2);
+        // Points nearby in space have similar altitude (spatial smoothness
+        // is what makes NFFT-GP effective on this workload).
+        let mut close = Vec::new();
+        let mut far = Vec::new();
+        for k in 0..4000 {
+            let i = k * 17 % d.n();
+            let j = (k * 31 + 1) % d.n();
+            let dx = d.x[(i, 0)] - d.x[(j, 0)];
+            let dy = d.x[(i, 1)] - d.x[(j, 1)];
+            let dist = (dx * dx + dy * dy).sqrt();
+            let dv = (d.y[i] - d.y[j]).abs();
+            if dist < 0.01 {
+                close.push(dv);
+            } else if dist > 0.5 {
+                far.push(dv);
+            }
+        }
+        assert!(crate::util::mean(&close) < crate::util::mean(&far));
+    }
+}

@@ -1,0 +1,120 @@
+//! Mutual information score (MIS) feature ranking [3] (paper §2.2):
+//! I(X_j; Y) estimated from a quantile-binned joint histogram — a
+//! univariate measure of how much label information each feature carries.
+
+use crate::linalg::Matrix;
+
+/// Equal-frequency bin edges (quantiles) for `nbins` bins.
+fn quantile_edges(values: &[f64], nbins: usize) -> Vec<f64> {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (1..nbins)
+        .map(|k| sorted[(k * sorted.len()) / nbins])
+        .collect()
+}
+
+fn bin_of(edges: &[f64], v: f64) -> usize {
+    // first edge greater than v
+    match edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+        Ok(mut i) => {
+            // place ties deterministically in the right bin
+            while i < edges.len() && edges[i] <= v {
+                i += 1;
+            }
+            i
+        }
+        Err(i) => i,
+    }
+}
+
+/// Mutual information (nats) between binned `x` and binned `y`.
+pub fn mutual_information(x: &[f64], y: &[f64], nbins: usize) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let ex = quantile_edges(x, nbins);
+    let ey = quantile_edges(y, nbins);
+    let mut joint = vec![0.0f64; nbins * nbins];
+    let mut px = vec![0.0f64; nbins];
+    let mut py = vec![0.0f64; nbins];
+    let w = 1.0 / n as f64;
+    for i in 0..n {
+        let bx = bin_of(&ex, x[i]).min(nbins - 1);
+        let by = bin_of(&ey, y[i]).min(nbins - 1);
+        joint[bx * nbins + by] += w;
+        px[bx] += w;
+        py[by] += w;
+    }
+    let mut mi = 0.0;
+    for bx in 0..nbins {
+        for by in 0..nbins {
+            let pj = joint[bx * nbins + by];
+            if pj > 0.0 {
+                mi += pj * (pj / (px[bx] * py[by])).ln();
+            }
+        }
+    }
+    mi.max(0.0)
+}
+
+/// MIS for every feature column of `x` against the labels.
+pub fn mis_scores(x: &Matrix, y: &[f64], nbins: usize) -> Vec<f64> {
+    assert_eq!(x.rows, y.len());
+    (0..x.cols)
+        .map(|c| mutual_information(&x.col(c), y, nbins))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn deterministic_function_has_high_mi() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..5000).map(|_| rng.uniform()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v * v).collect();
+        let mi = mutual_information(&x, &y, 16);
+        // deterministic monotone map ≈ ln(nbins) under quantile binning
+        assert!(mi > 2.0, "mi={mi}");
+    }
+
+    #[test]
+    fn independent_variables_have_low_mi() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let mi = mutual_information(&x, &y, 16);
+        assert!(mi < 0.08, "mi={mi}");
+    }
+
+    #[test]
+    fn relevant_features_rank_above_noise() {
+        let mut rng = Rng::new(3);
+        let n = 3000;
+        let mut x = Matrix::zeros(n, 5);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let y: Vec<f64> = (0..n)
+            .map(|i| x[(i, 1)].sin() + 0.8 * x[(i, 3)] + 0.1 * rng.normal())
+            .collect();
+        let s = mis_scores(&x, &y, 16);
+        assert!(s[1] > s[0] && s[1] > s[2] && s[1] > s[4], "{s:?}");
+        assert!(s[3] > s[0] && s[3] > s[2] && s[3] > s[4], "{s:?}");
+    }
+
+    #[test]
+    fn mi_nonnegative_and_symmetric() {
+        let mut rng = Rng::new(4);
+        let x: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v + 0.5 * rng.normal()).collect();
+        let a = mutual_information(&x, &y, 12);
+        let b = mutual_information(&y, &x, 12);
+        assert!(a >= 0.0);
+        assert!((a - b).abs() < 0.05, "{a} vs {b}");
+    }
+}

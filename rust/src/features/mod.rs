@@ -1,0 +1,11 @@
+//! Feature importance + grouping techniques (paper §2.2): mutual
+//! information scores, elastic-net regression, and the window chunking
+//! policies (d_ratio / thres / d_EN, d_max = 3).
+
+pub mod elastic_net;
+pub mod grouping;
+pub mod mis;
+
+pub use elastic_net::{elastic_net, ElasticNetOptions};
+pub use grouping::{en_windows, mis_windows, windows_from_scores, SelectionRule, D_MAX};
+pub use mis::{mis_scores, mutual_information};

@@ -1,0 +1,180 @@
+//! Iterative radix-2 Cooley–Tukey FFT for power-of-two lengths, with a
+//! reusable plan (bit-reversal permutation + twiddle tables).
+//!
+//! Convention: `forward` computes X[k] = Σ_j x[j] e^{-2πi jk/n} (negative
+//! exponent), `inverse` the conjugate transform scaled by 1/n, so
+//! `inverse(forward(x)) == x`.
+
+use super::complex::Complex;
+
+#[derive(Clone, Debug)]
+pub struct FftPlan {
+    pub n: usize,
+    bitrev: Vec<u32>,
+    /// twiddles[s] holds the n/2 roots for stage of half-size `1<<s`.
+    twiddles: Vec<Vec<Complex>>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "FFT length must be a power of two, got {n}");
+        let log2n = n.trailing_zeros();
+        let mut bitrev = vec![0u32; n];
+        for (i, b) in bitrev.iter_mut().enumerate() {
+            *b = (i as u32).reverse_bits() >> (32 - log2n.max(1));
+        }
+        if n == 1 {
+            bitrev[0] = 0;
+        }
+        // Stage s has butterflies of half-width m = 2^s; twiddle w_m^j for
+        // j in 0..m with w_m = exp(-2πi / 2^{s+1}).
+        let mut twiddles = Vec::with_capacity(log2n as usize);
+        for s in 0..log2n {
+            let m = 1usize << s;
+            let step = -std::f64::consts::PI / m as f64;
+            let tw: Vec<Complex> = (0..m).map(|j| Complex::cis(step * j as f64)).collect();
+            twiddles.push(tw);
+        }
+        Self { n, bitrev, twiddles }
+    }
+
+    fn permute(&self, data: &mut [Complex]) {
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+    }
+
+    fn butterfly_passes(&self, data: &mut [Complex]) {
+        for tw in &self.twiddles {
+            let m = tw.len(); // half-width
+            let width = m * 2;
+            let mut base = 0;
+            while base < self.n {
+                for j in 0..m {
+                    let t = tw[j] * data[base + j + m];
+                    let u = data[base + j];
+                    data[base + j] = u + t;
+                    data[base + j + m] = u - t;
+                }
+                base += width;
+            }
+        }
+    }
+
+    /// In-place forward DFT (negative exponent, unscaled).
+    pub fn forward(&self, data: &mut [Complex]) {
+        assert_eq!(data.len(), self.n);
+        if self.n == 1 {
+            return;
+        }
+        self.permute(data);
+        self.butterfly_passes(data);
+    }
+
+    /// In-place inverse DFT (positive exponent, scaled by 1/n).
+    pub fn inverse(&self, data: &mut [Complex]) {
+        assert_eq!(data.len(), self.n);
+        if self.n == 1 {
+            return;
+        }
+        for v in data.iter_mut() {
+            *v = v.conj();
+        }
+        self.permute(data);
+        self.butterfly_passes(data);
+        let scale = 1.0 / self.n as f64;
+        for v in data.iter_mut() {
+            *v = v.conj().scale(scale);
+        }
+    }
+}
+
+/// Naive O(n²) DFT for testing.
+#[cfg(test)]
+pub fn dft_naive(x: &[Complex], sign: f64) -> Vec<Complex> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut s = Complex::ZERO;
+            for (j, &xj) in x.iter().enumerate() {
+                s += xj * Complex::cis(sign * 2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64);
+            }
+            s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_signal(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for &n in &[1usize, 2, 4, 8, 32, 128] {
+            let x = random_signal(n, n as u64);
+            let want = dft_naive(&x, -1.0);
+            let plan = FftPlan::new(n);
+            let mut got = x.clone();
+            plan.forward(&mut got);
+            for k in 0..n {
+                assert!(
+                    (got[k] - want[k]).abs() < 1e-9 * (n as f64),
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        for &n in &[2usize, 16, 64, 256] {
+            let x = random_signal(n, 100 + n as u64);
+            let plan = FftPlan::new(n);
+            let mut y = x.clone();
+            plan.forward(&mut y);
+            plan.inverse(&mut y);
+            for k in 0..n {
+                assert!((y[k] - x[k]).abs() < 1e-12, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let n = 16;
+        let mut x = vec![Complex::ZERO; n];
+        x[0] = Complex::ONE;
+        FftPlan::new(n).forward(&mut x);
+        for v in &x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 64;
+        let x = random_signal(n, 7);
+        let mut y = x.clone();
+        FftPlan::new(n).forward(&mut y);
+        let ex: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        FftPlan::new(12);
+    }
+}

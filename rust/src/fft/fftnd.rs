@@ -1,0 +1,204 @@
+//! Multi-dimensional FFT over row-major data via 1-d transforms along each
+//! axis. Dimensions d ≤ 3 are what the additive-kernel NFFT needs
+//! (d_max = 3 in the paper), but the implementation is generic in d.
+
+use super::complex::Complex;
+use super::fft1d::FftPlan;
+
+#[derive(Clone, Debug)]
+pub struct FftNdPlan {
+    pub shape: Vec<usize>,
+    plans: Vec<FftPlan>, // one per distinct axis length, indexed by axis
+}
+
+impl FftNdPlan {
+    pub fn new(shape: &[usize]) -> Self {
+        let plans = shape.iter().map(|&n| FftPlan::new(n)).collect();
+        Self { shape: shape.to_vec(), plans }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// In-place forward transform (negative exponent, unscaled).
+    pub fn forward(&self, data: &mut [Complex]) {
+        self.transform(data, true);
+    }
+
+    /// In-place inverse transform (positive exponent, scaled by 1/N).
+    pub fn inverse(&self, data: &mut [Complex]) {
+        self.transform(data, false);
+    }
+
+    fn transform(&self, data: &mut [Complex], fwd: bool) {
+        assert_eq!(data.len(), self.len());
+        let d = self.shape.len();
+        // Row-major strides.
+        let mut strides = vec![1usize; d];
+        for ax in (0..d.saturating_sub(1)).rev() {
+            strides[ax] = strides[ax + 1] * self.shape[ax + 1];
+        }
+        let total = self.len();
+        let mut scratch = vec![Complex::ZERO; *self.shape.iter().max().unwrap_or(&1)];
+        for ax in 0..d {
+            let n = self.shape[ax];
+            let stride = strides[ax];
+            let plan = &self.plans[ax];
+            // Iterate over all 1-d lines along `ax`.
+            let nlines = total / n;
+            for line in 0..nlines {
+                // Compute the base offset of this line: decompose `line`
+                // over the other axes.
+                let mut rem = line;
+                let mut base = 0usize;
+                for (ax2, &len2) in self.shape.iter().enumerate().rev() {
+                    if ax2 == ax {
+                        continue;
+                    }
+                    let idx = rem % len2;
+                    rem /= len2;
+                    base += idx * strides[ax2];
+                }
+                if stride == 1 {
+                    let seg = &mut data[base..base + n];
+                    if fwd {
+                        plan.forward(seg);
+                    } else {
+                        plan.inverse(seg);
+                    }
+                } else {
+                    for (k, s) in scratch[..n].iter_mut().enumerate() {
+                        *s = data[base + k * stride];
+                    }
+                    if fwd {
+                        plan.forward(&mut scratch[..n]);
+                    } else {
+                        plan.inverse(&mut scratch[..n]);
+                    }
+                    for (k, s) in scratch[..n].iter().enumerate() {
+                        data[base + k * stride] = *s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One-shot n-dimensional forward FFT.
+pub fn fftn(shape: &[usize], data: &mut [Complex]) {
+    FftNdPlan::new(shape).forward(data);
+}
+
+/// One-shot n-dimensional inverse FFT.
+pub fn ifftn(shape: &[usize], data: &mut [Complex]) {
+    FftNdPlan::new(shape).inverse(data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(npts: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Rng::new(seed);
+        (0..npts)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    /// Naive d-dimensional DFT.
+    fn dftn_naive(shape: &[usize], x: &[Complex]) -> Vec<Complex> {
+        let total: usize = shape.iter().product();
+        let d = shape.len();
+        let idx = |flat: usize| -> Vec<usize> {
+            let mut rem = flat;
+            let mut out = vec![0usize; d];
+            for ax in (0..d).rev() {
+                out[ax] = rem % shape[ax];
+                rem /= shape[ax];
+            }
+            out
+        };
+        (0..total)
+            .map(|kf| {
+                let k = idx(kf);
+                let mut s = Complex::ZERO;
+                for (jf, &xj) in x.iter().enumerate() {
+                    let j = idx(jf);
+                    let mut phase = 0.0;
+                    for ax in 0..d {
+                        phase += (j[ax] * k[ax]) as f64 / shape[ax] as f64;
+                    }
+                    s += xj * Complex::cis(-2.0 * std::f64::consts::PI * phase);
+                }
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_2d() {
+        let shape = [8usize, 4];
+        let x = random(32, 1);
+        let want = dftn_naive(&shape, &x);
+        let mut got = x.clone();
+        fftn(&shape, &mut got);
+        for k in 0..32 {
+            assert!((got[k] - want[k]).abs() < 1e-10, "k={k}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_3d() {
+        let shape = [4usize, 2, 8];
+        let x = random(64, 2);
+        let want = dftn_naive(&shape, &x);
+        let mut got = x.clone();
+        fftn(&shape, &mut got);
+        for k in 0..64 {
+            assert!((got[k] - want[k]).abs() < 1e-10, "k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let shape = [8usize, 8, 8];
+        let x = random(512, 3);
+        let mut y = x.clone();
+        let plan = FftNdPlan::new(&shape);
+        plan.forward(&mut y);
+        plan.inverse(&mut y);
+        for k in 0..512 {
+            assert!((y[k] - x[k]).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn one_d_equals_fft1d() {
+        let x = random(64, 4);
+        let mut a = x.clone();
+        fftn(&[64], &mut a);
+        let mut b = x.clone();
+        crate::fft::FftPlan::new(64).forward(&mut b);
+        for k in 0..64 {
+            assert!((a[k] - b[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn separable_impulse_2d() {
+        // delta at origin -> flat spectrum.
+        let shape = [4usize, 4];
+        let mut x = vec![Complex::ZERO; 16];
+        x[0] = Complex::ONE;
+        fftn(&shape, &mut x);
+        for v in &x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Power-of-two FFT substrate (no external FFT library offline).
+//!
+//! The NFFT grids the paper uses are m ∈ {16, 32, 64} with oversampling
+//! σ = 2, i.e. all transforms are small powers of two; we implement an
+//! iterative radix-2 Cooley–Tukey with precomputed twiddles and bit-reversal
+//! tables, plus multi-dimensional transforms along axes (d ≤ 3).
+
+mod complex;
+mod fft1d;
+mod fftnd;
+
+pub use complex::Complex;
+pub use fft1d::FftPlan;
+pub use fftnd::{fftn, ifftn, FftNdPlan};

@@ -1,0 +1,85 @@
+//! Adam optimizer (paper §5.2: learning rate 0.01, up to 500 iterations).
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// One update: params ← params − lr·m̂/(√v̂ + ε), minimizing.
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            params[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = (x-3)² + (y+1)²
+        let mut p = vec![0.0, 0.0];
+        let mut opt = Adam::new(2, 0.05);
+        for _ in 0..2000 {
+            let g = vec![2.0 * (p[0] - 3.0), 2.0 * (p[1] + 1.0)];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 1e-3, "{p:?}");
+        assert!((p[1] + 1.0).abs() < 1e-3, "{p:?}");
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // Adam's debiased first step has magnitude ≈ lr·sign(grad).
+        let mut p = vec![0.0];
+        let mut opt = Adam::new(1, 0.01);
+        opt.step(&mut p, &[5.0]);
+        assert!((p[0] + 0.01).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn rosenbrock_descends() {
+        let mut p = vec![-1.0, 1.0];
+        let f = |p: &[f64]| (1.0 - p[0]).powi(2) + 100.0 * (p[1] - p[0] * p[0]).powi(2);
+        let f0 = f(&p);
+        let mut opt = Adam::new(2, 0.01);
+        for _ in 0..500 {
+            let g = vec![
+                -2.0 * (1.0 - p[0]) - 400.0 * p[0] * (p[1] - p[0] * p[0]),
+                200.0 * (p[1] - p[0] * p[0]),
+            ];
+            opt.step(&mut p, &g);
+        }
+        assert!(f(&p) < f0 * 0.1);
+    }
+}

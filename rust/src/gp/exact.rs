@@ -1,0 +1,200 @@
+//! Exact small-n GP oracle: direct Cholesky NLL (eq. (1.2)) and analytic
+//! gradient. O(n³) — used to validate the stochastic estimators and as
+//! ground truth in unit tests.
+
+use crate::kernels::additive::{gram, AdditiveKernel, WindowedPoints};
+use crate::linalg::{Cholesky, Matrix};
+
+pub struct ExactGp<'a> {
+    ak: &'a AdditiveKernel,
+    x: &'a Matrix,
+    y: &'a [f64],
+    wps: Vec<WindowedPoints>,
+}
+
+impl<'a> ExactGp<'a> {
+    pub fn new(ak: &'a AdditiveKernel, x: &'a Matrix, y: &'a [f64]) -> Self {
+        assert_eq!(x.rows, y.len());
+        let wps = ak
+            .windows
+            .0
+            .iter()
+            .map(|w| WindowedPoints::extract(x, w))
+            .collect();
+        Self { ak, x, y, wps }
+    }
+
+    fn khat(&self, ell: f64, sf2: f64, se2: f64) -> Matrix {
+        self.ak.gram_full(self.x, ell, sf2, se2)
+    }
+
+    /// Exact negative log marginal likelihood (eq. (1.2)).
+    pub fn nll(&self, ell: f64, sf2: f64, se2: f64) -> f64 {
+        let k = self.khat(ell, sf2, se2);
+        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+        let alpha = ch.solve(self.y);
+        let n = self.y.len() as f64;
+        0.5 * (crate::linalg::dot(self.y, &alpha)
+            + ch.logdet()
+            + n * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Exact gradient d NLL / d (σ_f, ℓ, σ_ε):
+    /// ½( tr(K̂⁻¹ ∂K̂) − αᵀ ∂K̂ α ).
+    pub fn grad(&self, ell: f64, sf2: f64, se2: f64) -> [f64; 3] {
+        let n = self.y.len();
+        let k = self.khat(ell, sf2, se2);
+        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+        let alpha = ch.solve(self.y);
+        // ∂K̂ for each parameter (dense).
+        let sf = sf2.sqrt();
+        let se = se2.sqrt();
+        // sum of sub-kernel grams and their ℓ-derivatives
+        let mut ksum = Matrix::zeros(n, n);
+        let mut kder = Matrix::zeros(n, n);
+        for wp in &self.wps {
+            ksum.add_assign(&gram(self.ak.kernel, wp, ell, false));
+            kder.add_assign(&gram(self.ak.kernel, wp, ell, true));
+        }
+        let mut d_sf = ksum.clone();
+        d_sf.scale(2.0 * sf);
+        let mut d_ell = kder;
+        d_ell.scale(sf2);
+        // d_se = 2σε I handled analytically below.
+        let mut out = [0.0; 3];
+        for (j, dk) in [&d_sf, &d_ell].iter().enumerate() {
+            // tr(K̂⁻¹ ∂K̂) by solving against each column.
+            let mut tr = 0.0;
+            for c in 0..n {
+                let col = dk.col(c);
+                let s = ch.solve(&col);
+                tr += s[c];
+            }
+            let da = dk.matvec(&alpha);
+            out[j] = 0.5 * (tr - crate::linalg::dot(&alpha, &da));
+        }
+        // σ_ε: tr(K̂⁻¹·2σεI) = 2σε tr(K̂⁻¹); αᵀ2σεα.
+        let mut tr_inv = 0.0;
+        for c in 0..n {
+            let mut e = vec![0.0; n];
+            e[c] = 1.0;
+            tr_inv += ch.solve(&e)[c];
+        }
+        out[2] = 0.5 * (2.0 * se * tr_inv - 2.0 * se * crate::linalg::dot(&alpha, &alpha));
+        out
+    }
+
+    /// Exact posterior mean and variance at test points.
+    pub fn predict(
+        &self,
+        xtest: &Matrix,
+        ell: f64,
+        sf2: f64,
+        se2: f64,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let k = self.khat(ell, sf2, se2);
+        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+        let alpha = ch.solve(self.y);
+        let ntest = xtest.rows;
+        let n = self.x.rows;
+        let p = self.ak.windows.len() as f64;
+        let mut mean = vec![0.0; ntest];
+        let mut var = vec![0.0; ntest];
+        for t in 0..ntest {
+            // cross-covariance column k* (additive over windows)
+            let mut kstar = vec![0.0; n];
+            for (w, wp) in self.ak.windows.0.iter().zip(&self.wps) {
+                let xt: Vec<f64> = w.iter().map(|&c| xtest[(t, c)]).collect();
+                for i in 0..n {
+                    kstar[i] += self
+                        .ak
+                        .kernel
+                        .eval_r2(crate::linalg::dist2(&xt, wp.point(i)), ell);
+                }
+            }
+            for ki in kstar.iter_mut() {
+                *ki *= sf2;
+            }
+            mean[t] = crate::linalg::dot(&kstar, &alpha);
+            let s = ch.solve(&kstar);
+            let prior = sf2 * p + se2;
+            var[t] = (prior - crate::linalg::dot(&kstar, &s)).max(1e-12);
+        }
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, Windows};
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, Vec<f64>, AdditiveKernel) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 4);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 2.0);
+        }
+        let y = rng.normal_vec(n);
+        let ak = AdditiveKernel::new(
+            KernelFn::Gaussian,
+            Windows(vec![vec![0, 1], vec![2, 3]]),
+        );
+        (x, y, ak)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (x, y, ak) = setup(40, 1);
+        let gp = ExactGp::new(&ak, &x, &y);
+        let (ell, sf2, se2) = (0.8, 0.6, 0.3);
+        let g = gp.grad(ell, sf2, se2);
+        let h = 1e-5;
+        let sf = sf2.sqrt();
+        let se = se2.sqrt();
+        let fd_sf = (gp.nll(ell, (sf + h) * (sf + h), se2)
+            - gp.nll(ell, (sf - h) * (sf - h), se2))
+            / (2.0 * h);
+        let fd_ell = (gp.nll(ell + h, sf2, se2) - gp.nll(ell - h, sf2, se2)) / (2.0 * h);
+        let fd_se = (gp.nll(ell, sf2, (se + h) * (se + h))
+            - gp.nll(ell, sf2, (se - h) * (se - h)))
+            / (2.0 * h);
+        assert!((g[0] - fd_sf).abs() < 1e-4 * (1.0 + fd_sf.abs()), "sf: {} vs {fd_sf}", g[0]);
+        assert!((g[1] - fd_ell).abs() < 1e-4 * (1.0 + fd_ell.abs()), "ell: {} vs {fd_ell}", g[1]);
+        assert!((g[2] - fd_se).abs() < 1e-4 * (1.0 + fd_se.abs()), "se: {} vs {fd_se}", g[2]);
+    }
+
+    #[test]
+    fn prediction_interpolates_training_data_at_low_noise() {
+        // Targets in the range of K (y = K w) so that interpolation is
+        // well-posed despite the smooth kernel's tiny eigenvalues.
+        let (x, _, ak) = setup(50, 2);
+        let k = ak.gram_full(&x, 0.8, 1.0, 0.0);
+        let mut rng = Rng::new(22);
+        let w: Vec<f64> = rng.normal_vec(50);
+        let y = k.matvec(&w);
+        let gp = ExactGp::new(&ak, &x, &y);
+        let (mean, var) = gp.predict(&x, 0.8, 1.0, 1e-6);
+        let yscale = crate::util::variance(&y).sqrt();
+        for i in 0..50 {
+            assert!((mean[i] - y[i]).abs() < 1e-3 * yscale, "i={i}");
+            assert!(var[i] < 1e-2);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let (x, y, ak) = setup(50, 3);
+        let gp = ExactGp::new(&ak, &x, &y);
+        let mut far = Matrix::zeros(1, 4);
+        for c in 0..4 {
+            far[(0, c)] = 50.0; // far outside [0,2]^4
+        }
+        let (_, var_far) = gp.predict(&far, 0.5, 1.0, 0.01);
+        let (_, var_near) = gp.predict(&x.submatrix(&[0], &[0, 1, 2, 3]), 0.5, 1.0, 0.01);
+        assert!(var_far[0] > var_near[0]);
+        // At infinity: prior variance σf²P + σε².
+        assert!((var_far[0] - (1.0 * 2.0 + 0.01)).abs() < 1e-6);
+    }
+}

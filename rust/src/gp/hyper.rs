@@ -1,0 +1,140 @@
+//! GP hyperparameters θ = (σ_f, ℓ, σ_ε) with the softplus
+//! reparameterization the paper trains in (§5.2: "we train them in R and
+//! apply the softplus function", initial raw value 0).
+
+/// softplus(x) = ln(1 + eˣ), numerically stable.
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// d softplus / dx = sigmoid(x).
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Inverse softplus: y > 0 → x with softplus(x) = y.
+pub fn softplus_inv(y: f64) -> f64 {
+    assert!(y > 0.0);
+    if y > 30.0 {
+        y
+    } else {
+        (y.exp() - 1.0).ln()
+    }
+}
+
+/// Raw (unconstrained) hyperparameters in training order (σ_f, ℓ, σ_ε).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RawHyper(pub [f64; 3]);
+
+impl Default for RawHyper {
+    /// Paper default: all three raw values start at 0.
+    fn default() -> Self {
+        RawHyper([0.0; 3])
+    }
+}
+
+/// Transformed (positive) hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hyper {
+    pub sigma_f: f64,
+    pub ell: f64,
+    pub sigma_eps: f64,
+}
+
+impl RawHyper {
+    pub fn transform(&self) -> Hyper {
+        Hyper {
+            sigma_f: softplus(self.0[0]),
+            ell: softplus(self.0[1]),
+            sigma_eps: softplus(self.0[2]),
+        }
+    }
+
+    /// Chain-rule factors dθ/draw for gradient pullback.
+    pub fn jacobian(&self) -> [f64; 3] {
+        [sigmoid(self.0[0]), sigmoid(self.0[1]), sigmoid(self.0[2])]
+    }
+
+    pub fn from_hyper(h: &Hyper) -> RawHyper {
+        RawHyper([
+            softplus_inv(h.sigma_f),
+            softplus_inv(h.ell),
+            softplus_inv(h.sigma_eps),
+        ])
+    }
+}
+
+impl Hyper {
+    pub fn new(sigma_f: f64, ell: f64, sigma_eps: f64) -> Self {
+        Self { sigma_f, ell, sigma_eps }
+    }
+
+    pub fn sigma_f2(&self) -> f64 {
+        self.sigma_f * self.sigma_f
+    }
+
+    pub fn sigma_eps2(&self) -> f64 {
+        self.sigma_eps * self.sigma_eps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softplus_properties() {
+        assert!((softplus(0.0) - 2f64.ln()).abs() < 1e-15);
+        assert!(softplus(-50.0) > 0.0);
+        assert!((softplus(50.0) - 50.0).abs() < 1e-12);
+        // monotone
+        assert!(softplus(1.0) > softplus(0.5));
+    }
+
+    #[test]
+    fn softplus_inverse_roundtrip() {
+        for &y in &[0.01, 0.5, 1.0, 3.0, 40.0] {
+            let x = softplus_inv(y);
+            assert!((softplus(x) - y).abs() < 1e-10, "y={y}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_is_softplus_derivative() {
+        let h = 1e-6;
+        for &x in &[-3.0, -0.5, 0.0, 1.0, 4.0] {
+            let fd = (softplus(x + h) - softplus(x - h)) / (2.0 * h);
+            assert!((fd - sigmoid(x)).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn default_raw_gives_ln2() {
+        let h = RawHyper::default().transform();
+        let ln2 = 2f64.ln();
+        assert!((h.sigma_f - ln2).abs() < 1e-15);
+        assert!((h.ell - ln2).abs() < 1e-15);
+        assert!((h.sigma_eps - ln2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_hyper_roundtrip() {
+        let h = Hyper::new(0.7, 2.0, 0.1);
+        let r = RawHyper::from_hyper(&h);
+        let h2 = r.transform();
+        assert!((h.sigma_f - h2.sigma_f).abs() < 1e-10);
+        assert!((h.ell - h2.ell).abs() < 1e-10);
+        assert!((h.sigma_eps - h2.sigma_eps).abs() < 1e-10);
+    }
+}

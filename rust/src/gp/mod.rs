@@ -1,0 +1,15 @@
+//! Gaussian process regression: hyperparameters, stochastic objective +
+//! gradient (eqs. (1.4)–(1.5)), Adam, the training/prediction driver, the
+//! exact small-n oracle, and the SVGP baseline.
+
+pub mod adam;
+pub mod exact;
+pub mod hyper;
+pub mod model;
+pub mod nll;
+pub mod svgp;
+
+pub use hyper::{Hyper, RawHyper};
+pub use model::{GpConfig, GpModel, PrecondKind, TrainedGp};
+pub use nll::NllOptions;
+pub use svgp::{Svgp, SvgpConfig};

@@ -1,0 +1,419 @@
+//! Additive windowed kernel structure (paper §2.1).
+//!
+//! K = σ_f² (K₁ + … + K_P) with each sub-kernel K_s acting on the feature
+//! subset W_s (|W_s| ≤ d_max = 3). This module provides window bookkeeping,
+//! windowed point extraction, dense Gram assembly, and the tiled exact MVM
+//! used by the `exact-rust` engine and as the correctness oracle for NFFT.
+
+use super::KernelFn;
+use crate::linalg::Matrix;
+use crate::util::parallel;
+
+/// Feature windows W = [W₁, …, W_P]; each inner vec holds 0-based feature
+/// indices (the paper prints them 1-based).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Windows(pub Vec<Vec<usize>>);
+
+impl Windows {
+    /// All `p` features chunked consecutively into windows of size ≤ d_max.
+    pub fn consecutive(p: usize, d_max: usize) -> Windows {
+        assert!(d_max >= 1);
+        let mut out = Vec::new();
+        let mut s = 0;
+        while s < p {
+            let e = (s + d_max).min(p);
+            out.push((s..e).collect());
+            s = e;
+        }
+        Windows(out)
+    }
+
+    /// Parse "[[1,2,3],[4,5,6]]" (1-based, as printed in the paper) into
+    /// 0-based windows.
+    pub fn parse_one_based(s: &str) -> anyhow::Result<Windows> {
+        let json = crate::util::json::Json::parse(s)
+            .map_err(|e| anyhow::anyhow!("windows: {e}"))?;
+        let arr = json
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("windows must be a JSON array"))?;
+        let mut out = Vec::new();
+        for w in arr {
+            let idx = w
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("window must be an array"))?;
+            let mut ws = Vec::new();
+            for v in idx {
+                let i = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("window index must be a number"))?;
+                anyhow::ensure!(i >= 1, "windows are 1-based in this format");
+                ws.push(i - 1);
+            }
+            out.push(ws);
+        }
+        Ok(Windows(out))
+    }
+
+    /// Render 1-based, paper style.
+    pub fn to_one_based_string(&self) -> String {
+        let inner: Vec<String> = self
+            .0
+            .iter()
+            .map(|w| {
+                let xs: Vec<String> = w.iter().map(|i| (i + 1).to_string()).collect();
+                format!("[{}]", xs.join(","))
+            })
+            .collect();
+        format!("[{}]", inner.join(","))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Total number of features used (Σ d_s).
+    pub fn total_features(&self) -> usize {
+        self.0.iter().map(|w| w.len()).sum()
+    }
+
+    /// Validate against feature dimension p: indices in range, disjoint.
+    pub fn validate(&self, p: usize) -> anyhow::Result<()> {
+        let mut seen = vec![false; p];
+        for w in &self.0 {
+            anyhow::ensure!(!w.is_empty(), "empty window");
+            for &i in w {
+                anyhow::ensure!(i < p, "window index {i} out of range (p={p})");
+                anyhow::ensure!(!seen[i], "feature {i} appears in two windows");
+                seen[i] = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Points restricted to one window, stored contiguously (n × d row-major).
+#[derive(Clone, Debug)]
+pub struct WindowedPoints {
+    pub n: usize,
+    pub d: usize,
+    pub pts: Vec<f64>,
+}
+
+impl WindowedPoints {
+    pub fn extract(x: &Matrix, window: &[usize]) -> WindowedPoints {
+        let n = x.rows;
+        let d = window.len();
+        let mut pts = Vec::with_capacity(n * d);
+        for r in 0..n {
+            let row = x.row(r);
+            for &c in window {
+                pts.push(row[c]);
+            }
+        }
+        WindowedPoints { n, d, pts }
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.pts[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Per-coordinate (min, max) bounding box.
+    pub fn bounds(&self) -> Vec<(f64, f64)> {
+        let mut b = vec![(f64::INFINITY, f64::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            for (c, &v) in self.point(i).iter().enumerate() {
+                b[c].0 = b[c].0.min(v);
+                b[c].1 = b[c].1.max(v);
+            }
+        }
+        b
+    }
+
+    /// Scale all coordinates into [-1/4, 1/4)^d as the NFFT requires
+    /// (paper §3.1); one common scale factor preserves radial symmetry.
+    /// Returns (scaled points, scale factor applied to coordinates).
+    pub fn scale_to_quarter_box(&self) -> (WindowedPoints, f64) {
+        let b = self.bounds();
+        // Center each coordinate, then scale by the largest half-width so
+        // max |coordinate| <= 1/4 - eps (strictly inside the box).
+        let mut centers = vec![0.0; self.d];
+        let mut half = 0.0f64;
+        for (c, &(lo, hi)) in b.iter().enumerate() {
+            centers[c] = 0.5 * (lo + hi);
+            half = half.max(0.5 * (hi - lo));
+        }
+        let margin = 0.25 * (1.0 - 1e-9);
+        let scale = if half > 0.0 { margin / half } else { 1.0 };
+        let mut pts = self.pts.clone();
+        for i in 0..self.n {
+            for c in 0..self.d {
+                pts[i * self.d + c] = (pts[i * self.d + c] - centers[c]) * scale;
+            }
+        }
+        (WindowedPoints { n: self.n, d: self.d, pts }, scale)
+    }
+}
+
+/// The additive kernel: shared length-scale ℓ across sub-kernels (paper
+/// eq. (2.2)), windows W, and the base radial kernel.
+#[derive(Clone, Debug)]
+pub struct AdditiveKernel {
+    pub kernel: KernelFn,
+    pub windows: Windows,
+}
+
+impl AdditiveKernel {
+    pub fn new(kernel: KernelFn, windows: Windows) -> Self {
+        Self { kernel, windows }
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Dense sub-kernel Gram matrix K_s (no σ_f²).
+    pub fn gram_window(&self, wp: &WindowedPoints, ell: f64) -> Matrix {
+        gram(self.kernel, wp, ell, false)
+    }
+
+    /// Full dense additive kernel matrix σ_f²ΣK_s + σ_ε²I.
+    pub fn gram_full(
+        &self,
+        x: &Matrix,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+    ) -> Matrix {
+        let n = x.rows;
+        let mut k = Matrix::zeros(n, n);
+        for w in &self.windows.0 {
+            let wp = WindowedPoints::extract(x, w);
+            let g = gram(self.kernel, &wp, ell, false);
+            k.add_assign(&g);
+        }
+        k.scale(sigma_f2);
+        k.add_diag(sigma_eps2);
+        k
+    }
+}
+
+/// Dense Gram matrix of one windowed sub-kernel (or its ℓ-derivative).
+pub fn gram(kernel: KernelFn, wp: &WindowedPoints, ell: f64, deriv: bool) -> Matrix {
+    let n = wp.n;
+    let mut m = Matrix::zeros(n, n);
+    let d = wp.d;
+    let pts = &wp.pts;
+    parallel::parallel_rows(&mut m.data, n, n, |i, row| {
+        let pi = &pts[i * d..(i + 1) * d];
+        for (j, out) in row.iter_mut().enumerate() {
+            let pj = &pts[j * d..(j + 1) * d];
+            let r2 = crate::linalg::dist2(pi, pj);
+            *out = if deriv {
+                kernel.deriv_ell_r2(r2, ell)
+            } else {
+                kernel.eval_r2(r2, ell)
+            };
+        }
+    });
+    m
+}
+
+/// Cross Gram block K(X_I, X_J) for index subsets (preconditioner blocks,
+/// GP prediction).
+pub fn gram_cross(
+    kernel: KernelFn,
+    wp_a: &WindowedPoints,
+    wp_b: &WindowedPoints,
+    ell: f64,
+) -> Matrix {
+    assert_eq!(wp_a.d, wp_b.d);
+    let mut m = Matrix::zeros(wp_a.n, wp_b.n);
+    let (d, nb) = (wp_a.d, wp_b.n);
+    let (pa, pb) = (&wp_a.pts, &wp_b.pts);
+    parallel::parallel_rows(&mut m.data, wp_a.n, nb, |i, row| {
+        let pi = &pa[i * d..(i + 1) * d];
+        for (j, out) in row.iter_mut().enumerate() {
+            let pj = &pb[j * d..(j + 1) * d];
+            *out = kernel.eval_r2(crate::linalg::dist2(pi, pj), ell);
+        }
+    });
+    m
+}
+
+/// Exact tiled MVM `out = K_s · v` for one windowed sub-kernel, computed
+/// on the fly (never materializes K_s). `deriv` selects ∂K_s/∂ℓ.
+pub fn dense_mvm(
+    kernel: KernelFn,
+    wp: &WindowedPoints,
+    ell: f64,
+    v: &[f64],
+    deriv: bool,
+    out: &mut [f64],
+) {
+    let n = wp.n;
+    assert_eq!(v.len(), n);
+    assert_eq!(out.len(), n);
+    let d = wp.d;
+    let pts = &wp.pts;
+    parallel::parallel_rows(out, n, 1, |i, acc| {
+        let pi = &pts[i * d..(i + 1) * d];
+        let mut s = 0.0;
+        match (kernel, deriv) {
+            // Specialized Gaussian path: no sqrt, fused loop.
+            (KernelFn::Gaussian, false) => {
+                let inv2 = 1.0 / (2.0 * ell * ell);
+                for j in 0..n {
+                    let pj = &pts[j * d..(j + 1) * d];
+                    let r2 = crate::linalg::dist2(pi, pj);
+                    s += v[j] * (-r2 * inv2).exp();
+                }
+            }
+            _ => {
+                for j in 0..n {
+                    let pj = &pts[j * d..(j + 1) * d];
+                    let r2 = crate::linalg::dist2(pi, pj);
+                    s += v[j]
+                        * if deriv {
+                            kernel.deriv_ell_r2(r2, ell)
+                        } else {
+                            kernel.eval_r2(r2, ell)
+                        };
+                }
+            }
+        }
+        acc[0] = s;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_points(n: usize, p: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, p);
+        for v in &mut x.data {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        x
+    }
+
+    #[test]
+    fn windows_consecutive() {
+        let w = Windows::consecutive(7, 3);
+        assert_eq!(w.0, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+        assert_eq!(w.total_features(), 7);
+        w.validate(7).unwrap();
+    }
+
+    #[test]
+    fn windows_parse_paper_format() {
+        let w = Windows::parse_one_based("[[1,2,3],[4,5,6]]").unwrap();
+        assert_eq!(w.0, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        assert_eq!(w.to_one_based_string(), "[[1,2,3],[4,5,6]]");
+    }
+
+    #[test]
+    fn windows_validate_catches_overlap() {
+        let w = Windows(vec![vec![0, 1], vec![1, 2]]);
+        assert!(w.validate(3).is_err());
+        let w2 = Windows(vec![vec![0, 5]]);
+        assert!(w2.validate(3).is_err());
+    }
+
+    #[test]
+    fn extract_and_scale() {
+        let x = random_points(50, 6, 1);
+        let wp = WindowedPoints::extract(&x, &[1, 4]);
+        assert_eq!(wp.n, 50);
+        assert_eq!(wp.d, 2);
+        assert_eq!(wp.point(3)[0], x[(3, 1)]);
+        assert_eq!(wp.point(3)[1], x[(3, 4)]);
+        let (scaled, scale) = wp.scale_to_quarter_box();
+        assert!(scale > 0.0);
+        for i in 0..50 {
+            for &c in scaled.point(i) {
+                assert!(c >= -0.25 && c < 0.25, "coordinate {c} outside box");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_unit_diag() {
+        let x = random_points(30, 4, 2);
+        let wp = WindowedPoints::extract(&x, &[0, 1, 2]);
+        let g = gram(KernelFn::Matern12, &wp, 0.5, false);
+        for i in 0..30 {
+            assert!((g[(i, i)] - 1.0).abs() < 1e-14);
+            for j in 0..i {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mvm_matches_gram() {
+        let x = random_points(64, 6, 3);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(64);
+        for kernel in [KernelFn::Gaussian, KernelFn::Matern12] {
+            for deriv in [false, true] {
+                let wp = WindowedPoints::extract(&x, &[2, 3]);
+                let g = gram(kernel, &wp, 0.7, deriv);
+                let want = g.matvec(&v);
+                let mut got = vec![0.0; 64];
+                dense_mvm(kernel, &wp, 0.7, &v, deriv, &mut got);
+                for i in 0..64 {
+                    assert!(
+                        (got[i] - want[i]).abs() < 1e-11,
+                        "{kernel:?} deriv={deriv} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn additive_gram_psd() {
+        // additive kernel of PSD sub-kernels must be PSD (paper §2.1);
+        // with σ_ε² > 0 it is PD, so Cholesky succeeds.
+        let x = random_points(40, 6, 5);
+        let ak = AdditiveKernel::new(
+            KernelFn::Gaussian,
+            Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]),
+        );
+        let k = ak.gram_full(&x, 1.0, 0.5, 1e-2);
+        assert!(crate::linalg::Cholesky::factor(&k).is_ok());
+    }
+
+    #[test]
+    fn gram_cross_consistent_with_gram() {
+        let x = random_points(20, 3, 6);
+        let wp = WindowedPoints::extract(&x, &[0, 1]);
+        let full = gram(KernelFn::Gaussian, &wp, 0.9, false);
+        let idx_a: Vec<usize> = (0..8).collect();
+        let idx_b: Vec<usize> = (8..20).collect();
+        let sub_a = WindowedPoints {
+            n: 8,
+            d: 2,
+            pts: idx_a.iter().flat_map(|&i| wp.point(i).to_vec()).collect(),
+        };
+        let sub_b = WindowedPoints {
+            n: 12,
+            d: 2,
+            pts: idx_b.iter().flat_map(|&i| wp.point(i).to_vec()).collect(),
+        };
+        let cross = gram_cross(KernelFn::Gaussian, &sub_a, &sub_b, 0.9);
+        for (i, &gi) in idx_a.iter().enumerate() {
+            for (j, &gj) in idx_b.iter().enumerate() {
+                assert!((cross[(i, j)] - full[(gi, gj)]).abs() < 1e-14);
+            }
+        }
+    }
+}

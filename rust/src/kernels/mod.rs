@@ -1,0 +1,258 @@
+//! Covariance kernel functions and the additive windowed structure
+//! (paper §1 eq. (1.1), §2.1 eq. (2.1)–(2.3)).
+
+pub mod additive;
+
+pub use additive::{AdditiveKernel, WindowedPoints, Windows};
+
+/// Which radial kernel a sub-kernel uses. All are *unit-variance*
+/// sub-kernels: the prior variance σ_f² is applied by the additive
+/// assembly, matching K = σ_f²(K₁ + … + K_P).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFn {
+    /// κ(r) = exp(-r² / (2ℓ²))
+    Gaussian,
+    /// κ(r) = exp(-r/ℓ)   (Matérn ν = 1/2, a.k.a. exponential)
+    Matern12,
+    /// κ(r) = (1 + √3 r/ℓ) exp(-√3 r/ℓ)
+    Matern32,
+}
+
+impl KernelFn {
+    pub fn parse(s: &str) -> anyhow::Result<KernelFn> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "rbf" | "g" => Ok(KernelFn::Gaussian),
+            "matern" | "matern12" | "m" | "matern0.5" => Ok(KernelFn::Matern12),
+            "matern32" | "matern1.5" => Ok(KernelFn::Matern32),
+            other => anyhow::bail!("unknown kernel {other:?}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelFn::Gaussian => "gaussian",
+            KernelFn::Matern12 => "matern12",
+            KernelFn::Matern32 => "matern32",
+        }
+    }
+
+    /// κ(r) at Euclidean distance r ≥ 0.
+    #[inline]
+    pub fn eval_r(self, r: f64, ell: f64) -> f64 {
+        match self {
+            KernelFn::Gaussian => (-r * r / (2.0 * ell * ell)).exp(),
+            KernelFn::Matern12 => (-r / ell).exp(),
+            KernelFn::Matern32 => {
+                let t = 3f64.sqrt() * r / ell;
+                (1.0 + t) * (-t).exp()
+            }
+        }
+    }
+
+    /// κ evaluated from the *squared* distance (saves a sqrt for Gaussian).
+    #[inline]
+    pub fn eval_r2(self, r2: f64, ell: f64) -> f64 {
+        match self {
+            KernelFn::Gaussian => (-r2 / (2.0 * ell * ell)).exp(),
+            _ => self.eval_r(r2.sqrt(), ell),
+        }
+    }
+
+    /// ∂κ/∂ℓ at distance r — eq. (2.3) for Gaussian / Matérn(½).
+    #[inline]
+    pub fn deriv_ell_r(self, r: f64, ell: f64) -> f64 {
+        match self {
+            KernelFn::Gaussian => {
+                (r * r / (ell * ell * ell)) * (-r * r / (2.0 * ell * ell)).exp()
+            }
+            KernelFn::Matern12 => (r / (ell * ell)) * (-r / ell).exp(),
+            KernelFn::Matern32 => {
+                // d/dℓ (1+t)e^{-t}, t = √3 r/ℓ:  t²/ℓ · e^{-t}
+                let t = 3f64.sqrt() * r / ell;
+                t * t / ell * (-t).exp()
+            }
+        }
+    }
+
+    #[inline]
+    pub fn deriv_ell_r2(self, r2: f64, ell: f64) -> f64 {
+        match self {
+            KernelFn::Gaussian => {
+                (r2 / (ell * ell * ell)) * (-r2 / (2.0 * ell * ell)).exp()
+            }
+            _ => self.deriv_ell_r(r2.sqrt(), ell),
+        }
+    }
+
+    /// d-dimensional radial Fourier transform κ̂(‖ω‖) in the
+    /// \hat f(ω) = ∫ f(x) e^{-2πi ωᵀx} dx convention (paper §4).
+    pub fn fourier(self, omega: f64, ell: f64, d: usize) -> f64 {
+        let pi = std::f64::consts::PI;
+        match self {
+            KernelFn::Gaussian => {
+                // (2πℓ²)^{d/2} exp(-2π²ℓ²ω²)
+                (2.0 * pi * ell * ell).powf(d as f64 / 2.0)
+                    * (-2.0 * pi * pi * ell * ell * omega * omega).exp()
+            }
+            KernelFn::Matern12 => {
+                // Γ((d+1)/2)/π^{(d+1)/2} · α/(α²+ω²)^{(d+1)/2}, α = 1/(2πℓ)
+                let alpha = 1.0 / (2.0 * pi * ell);
+                gamma_half_int(d + 1) / pi.powf((d as f64 + 1.0) / 2.0) * alpha
+                    / (alpha * alpha + omega * omega).powf((d as f64 + 1.0) / 2.0)
+            }
+            KernelFn::Matern32 => {
+                // Matérn(3/2) with length-scale l: paper eq. (4.10), ν=3/2:
+                // S(ω) = 2^d π^{d/2} Γ(ν+d/2) (2ν)^ν / (Γ(ν) l^{2ν})
+                //        · (2ν/l² + 4π²ω²)^{-(ν+d/2)}
+                let nu = 1.5;
+                let l = ell;
+                let gamma_nu = 0.5 * pi.sqrt(); // Γ(3/2)
+                let gamma_nu_d2 = gamma_general(nu + d as f64 / 2.0);
+                let two_nu: f64 = 3.0;
+                2f64.powi(d as i32) * pi.powf(d as f64 / 2.0) * gamma_nu_d2
+                    * two_nu.powf(nu) / (gamma_nu * l.powf(2.0 * nu))
+                    * (two_nu / (l * l) + 4.0 * pi * pi * omega * omega)
+                        .powf(-(nu + d as f64 / 2.0))
+            }
+        }
+    }
+}
+
+/// Γ(n/2) for positive integer n (exact for the half-integers we need).
+fn gamma_half_int(n: usize) -> f64 {
+    // Γ(1/2)=√π, Γ(1)=1, Γ(x+1)=xΓ(x)
+    let pi = std::f64::consts::PI;
+    if n % 2 == 0 {
+        // integer argument n/2
+        let m = n / 2;
+        (1..m).map(|k| k as f64).product::<f64>().max(1.0)
+    } else {
+        let mut g = pi.sqrt();
+        let mut x = 0.5;
+        while (x - n as f64 / 2.0).abs() > 1e-9 {
+            g *= x;
+            x += 1.0;
+        }
+        g
+    }
+}
+
+/// Γ(x) via Lanczos approximation (for Matérn(3/2) spectral density).
+fn gamma_general(x: f64) -> f64 {
+    // Lanczos, g=7, n=9 coefficients.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    let pi = std::f64::consts::PI;
+    if x < 0.5 {
+        pi / ((pi * x).sin() * gamma_general(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * pi).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_values_at_zero() {
+        for k in [KernelFn::Gaussian, KernelFn::Matern12, KernelFn::Matern32] {
+            assert!((k.eval_r(0.0, 0.7) - 1.0).abs() < 1e-15, "{k:?}");
+            assert!(k.eval_r(10.0, 0.1) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn eval_r2_consistent() {
+        for k in [KernelFn::Gaussian, KernelFn::Matern12, KernelFn::Matern32] {
+            for &r in &[0.0, 0.3, 1.7] {
+                assert!((k.eval_r2(r * r, 0.8) - k.eval_r(r, 0.8)).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let h = 1e-6;
+        for k in [KernelFn::Gaussian, KernelFn::Matern12, KernelFn::Matern32] {
+            for &r in &[0.1, 0.5, 1.3] {
+                for &ell in &[0.3, 1.0, 2.5] {
+                    let fd = (k.eval_r(r, ell + h) - k.eval_r(r, ell - h)) / (2.0 * h);
+                    let an = k.deriv_ell_r(r, ell);
+                    assert!(
+                        (fd - an).abs() < 1e-6 * (1.0 + an.abs()),
+                        "{k:?} r={r} ell={ell}: fd={fd} an={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_values() {
+        assert!((gamma_general(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_general(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_general(3.0) - 2.0).abs() < 1e-10);
+        assert!((gamma_general(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        assert!((gamma_general(2.5) - 1.329_340_388_179_137).abs() < 1e-9);
+        assert!((gamma_half_int(1) - std::f64::consts::PI.sqrt()).abs() < 1e-12);
+        assert!((gamma_half_int(2) - 1.0).abs() < 1e-12);
+        assert!((gamma_half_int(3) - 0.5 * std::f64::consts::PI.sqrt()).abs() < 1e-12);
+        assert!((gamma_half_int(4) - 1.0).abs() < 1e-12);
+        assert!((gamma_half_int(6) - 2.0).abs() < 1e-12);
+    }
+
+    /// κ̂ must integrate back to κ(0)=1: ∫κ̂(ω)dω over R^d = κ(0).
+    /// Check in 1-d by simple quadrature.
+    #[test]
+    fn fourier_integrates_to_one_1d() {
+        for k in [KernelFn::Gaussian, KernelFn::Matern12, KernelFn::Matern32] {
+            let ell = 0.25;
+            let mut s = 0.0;
+            let (n, h) = (400_000, 0.001);
+            for i in -(n as i64)..=(n as i64) {
+                s += k.fourier((i as f64) * h, ell, 1) * h;
+            }
+            // Matérn(½) has 1/ω² tails; the truncated quadrature misses
+            // ≈ 2α/(π·ω_max) ≈ 1e-3 of mass at ω_max = 400.
+            assert!((s - 1.0).abs() < 2.5e-3, "{k:?}: integral={s}");
+        }
+    }
+
+    /// Paper eq. (4.9): trivariate Matérn(½) FT closed form.
+    #[test]
+    fn matern_fourier_matches_eq49() {
+        let pi = std::f64::consts::PI;
+        let ell = 0.2;
+        for &w in &[0.5, 1.0, 4.0, 16.0] {
+            let want = 1.0 / (pi * pi) * 1.0 / (2.0 * pi * ell)
+                / (1.0 / (4.0 * pi * pi * ell * ell) + w * w).powi(2);
+            let got = KernelFn::Matern12.fourier(w, ell, 3);
+            assert!((got - want).abs() < 1e-12 * want.max(1.0), "w={w}");
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(KernelFn::parse("Gaussian").unwrap(), KernelFn::Gaussian);
+        assert_eq!(KernelFn::parse("matern").unwrap(), KernelFn::Matern12);
+        assert_eq!(KernelFn::parse("matern32").unwrap(), KernelFn::Matern32);
+        assert!(KernelFn::parse("bogus").is_err());
+    }
+}

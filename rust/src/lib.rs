@@ -1,0 +1,17 @@
+//! fourier-gp: Preconditioned Additive Gaussian Processes with Fourier
+//! Acceleration — a three-layer (Rust + JAX + Pallas) reproduction.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod coordinator;
+pub mod data;
+pub mod features;
+pub mod fft;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod nfft;
+pub mod precond;
+pub mod solvers;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,206 @@
+//! Cholesky factorization and triangular solves for SPD matrices.
+//!
+//! Used by the exact-GP oracle, the AAFN landmark block, the SVGP
+//! baseline, and GRF sampling. Stores the lower factor L with A = L Lᵀ.
+
+use super::matrix::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// Lower-triangular factor (full square storage, upper part unused).
+    pub l: Matrix,
+}
+
+#[derive(thiserror::Error, Debug)]
+#[error("matrix not positive definite at pivot {pivot} (value {value:.3e})")]
+pub struct NotSpd {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl Cholesky {
+    /// Factor A = L Lᵀ. A must be symmetric positive definite.
+    pub fn factor(a: &Matrix) -> Result<Cholesky, NotSpd> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = a.clone();
+        for j in 0..n {
+            // d = A[j][j] - sum_k L[j][k]^2
+            let mut d = l[(j, j)];
+            for k in 0..j {
+                let v = l[(j, k)];
+                d -= v * v;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotSpd { pivot: j, value: d });
+            }
+            let dj = d.sqrt();
+            l[(j, j)] = dj;
+            let inv = 1.0 / dj;
+            // Column j below the diagonal.
+            for i in j + 1..n {
+                let mut s = l[(i, j)];
+                // s -= dot(L[i][..j], L[j][..j])
+                let (ri, rj) = (i * n, j * n);
+                let li = &l.data[ri..ri + j];
+                let ljr = &l.data[rj..rj + j];
+                s -= super::matrix::dot(li, ljr);
+                l.data[ri + j] = s * inv;
+            }
+            // Zero the upper part for cleanliness.
+            for c in j + 1..n {
+                l[(j, c)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            s -= super::matrix::dot(&row[..i], &y[..i]);
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve Lᵀ x = b (backward substitution).
+    pub fn solve_upper(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A x = b via the two triangular solves.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// log(det(A)) = 2 Σ log L[i][i].
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// y = L x  (used for GRF sampling: x ~ N(0,I) → Lx ~ N(0,A)).
+    pub fn mul_lower(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            y[i] = super::matrix::dot(&row[..=i], &x[..=i]);
+        }
+        y
+    }
+
+    /// Solve A X = B column-wise for a matrix right-hand side.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        assert_eq!(b.rows, self.n());
+        let mut x = Matrix::zeros(b.rows, b.cols);
+        for c in 0..b.cols {
+            let col = b.col(c);
+            let sol = self.solve(&col);
+            for r in 0..b.rows {
+                x[(r, c)] = sol[r];
+            }
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        // A = B Bᵀ + n·I is SPD.
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn factor_solve_roundtrip() {
+        let n = 24;
+        let a = random_spd(n, 1);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(n);
+        let x = ch.solve(&b);
+        let ax = a.matvec(&x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn reconstruction() {
+        let a = random_spd(10, 3);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l.matmul(&ch.l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-9);
+    }
+
+    #[test]
+    fn logdet_vs_2x2() {
+        let a = Matrix::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.logdet() - (11f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn mul_lower_consistent() {
+        let a = random_spd(8, 5);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rng = Rng::new(7);
+        let x = rng.normal_vec(8);
+        let y = ch.mul_lower(&x);
+        // L (L^T)... check L x against dense multiply with the factor.
+        let want = ch.l.matvec(&x);
+        for i in 0..8 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triangular_solves_inverse_of_mul() {
+        let a = random_spd(12, 9);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(12);
+        let y = ch.mul_lower(&x);
+        let back = ch.solve_lower(&y);
+        for i in 0..12 {
+            assert!((back[i] - x[i]).abs() < 1e-9);
+        }
+    }
+}

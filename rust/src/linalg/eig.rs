@@ -1,0 +1,396 @@
+//! Symmetric eigensolvers.
+//!
+//! - `tridiag_eig`: implicit-QL on a symmetric tridiagonal matrix, with
+//!   optional eigenvectors (EISPACK `tql2`/`tql1` port). SLQ quadrature
+//!   needs the eigenvalues and the *first row* of the eigenvector matrix
+//!   of the Lanczos tridiagonal.
+//! - `sym_eigenvalues`: Householder tridiagonalization (`tred1`) followed
+//!   by QL — full spectra of dense kernel matrices (paper Fig. 1, right).
+
+use super::matrix::Matrix;
+
+/// Eigen-decomposition of a symmetric tridiagonal matrix with diagonal `d`
+/// and off-diagonal `e` (`e.len() == d.len()-1`). Returns eigenvalues in
+/// ascending order; if `want_vectors`, also the orthonormal eigenvector
+/// matrix Z (columns are eigenvectors, in the same order).
+pub fn tridiag_eig(
+    d_in: &[f64],
+    e_in: &[f64],
+    want_vectors: bool,
+) -> (Vec<f64>, Option<Matrix>) {
+    let n = d_in.len();
+    assert!(n >= 1);
+    assert_eq!(e_in.len(), n.saturating_sub(1));
+    let mut d = d_in.to_vec();
+    // e[i] couples (i, i+1); e[n-1] is a zero sentinel.
+    let mut e = vec![0.0; n];
+    e[..n - 1].copy_from_slice(e_in);
+
+    let mut z = if want_vectors {
+        Some(Matrix::identity(n))
+    } else {
+        None
+    };
+
+    // Port of the Algol/EISPACK tql2 procedure (via JAMA, public domain).
+    let eps = f64::EPSILON;
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter < 64, "tridiag QL failed to converge");
+                // Compute implicit shift.
+                let g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for di in d.iter_mut().take(n).skip(l + 2) {
+                    *di -= h;
+                }
+                f += h;
+                // Implicit QL transformation.
+                p = d[m];
+                let mut c = 1.0f64;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    let g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    if let Some(zm) = z.as_mut() {
+                        for k in 0..n {
+                            h = zm[(k, i + 1)];
+                            zm[(k, i + 1)] = s * zm[(k, i)] + c * h;
+                            zm[(k, i)] = c * zm[(k, i)] - s * h;
+                        }
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort ascending (and permute eigenvectors accordingly).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let sorted_d: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let sorted_z = z.map(|zm| {
+        let mut out = Matrix::zeros(n, n);
+        for (new_c, &old_c) in order.iter().enumerate() {
+            for r in 0..n {
+                out[(r, new_c)] = zm[(r, old_c)];
+            }
+        }
+        out
+    });
+    (sorted_d, sorted_z)
+}
+
+/// Householder reduction of a symmetric matrix to tridiagonal form
+/// (eigenvalues-only variant, EISPACK `tred1`). Returns (diagonal, offdiag).
+pub fn householder_tridiag(a: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut a = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 0 {
+            for k in 0..=l {
+                scale += a[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[(i, l)];
+            } else {
+                for k in 0..=l {
+                    a[(i, k)] /= scale;
+                    h += a[(i, k)] * a[(i, k)];
+                }
+                let mut f = a[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    // g = A row j · u
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[(j, k)] * a[(i, k)];
+                    }
+                    for k in j + 1..=l {
+                        g += a[(k, j)] * a[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = a[(i, j)];
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let delta = fj * e[k] + gj * a[(i, k)];
+                        a[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = a[(i, l)];
+        }
+        d[i] = h;
+    }
+    for i in 0..n {
+        d[i] = a[(i, i)];
+    }
+    // e[0] unused; shift to off-diagonal convention e_out[i] couples i,i+1.
+    let mut e_out = vec![0.0; n.saturating_sub(1)];
+    for i in 1..n {
+        e_out[i - 1] = e[i];
+    }
+    (d, e_out)
+}
+
+/// All eigenvalues of a dense symmetric matrix (ascending).
+pub fn sym_eigenvalues(a: &Matrix) -> Vec<f64> {
+    let (d, e) = householder_tridiag(a);
+    tridiag_eig(&d, &e, false).0
+}
+
+/// Cyclic Jacobi eigen-decomposition of a dense symmetric matrix,
+/// returning (eigenvalues ascending, eigenvector matrix V with A = VΛVᵀ).
+/// O(n³) per sweep — intended for the small k×k blocks of low-rank
+/// preconditioners (k ≲ 500), where robustness matters more than speed.
+pub fn jacobi_eig(a_in: &Matrix) -> (Vec<f64>, Matrix) {
+    assert_eq!(a_in.rows, a_in.cols);
+    let n = a_in.rows;
+    let mut a = a_in.clone();
+    let mut v = Matrix::identity(n);
+    for _sweep in 0..64 {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + a_in.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ) on both sides.
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    // Sort ascending, permute V columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| vals[x].partial_cmp(&vals[y]).unwrap());
+    let sorted: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
+    let mut vout = Matrix::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vout[(r, newc)] = v[(r, oldc)];
+        }
+    }
+    vals = sorted;
+    (vals, vout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tridiag_2x2_hand() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3.
+        let (vals, vecs) = tridiag_eig(&[2.0, 2.0], &[1.0], true);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        let z = vecs.unwrap();
+        // Eigenvector for λ=1 is (1,-1)/√2 up to sign.
+        let v = (z[(0, 0)], z[(1, 0)]);
+        assert!((v.0.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        assert!((v.0 + v.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tridiag_diag_only() {
+        let (vals, _) = tridiag_eig(&[3.0, 1.0, 2.0], &[0.0, 0.0], false);
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn tridiag_vectors_orthonormal_and_reconstruct() {
+        let n = 12;
+        let mut rng = Rng::new(5);
+        let d: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.5, 3.0)).collect();
+        let e: Vec<f64> = (0..n - 1).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let (vals, z) = tridiag_eig(&d, &e, true);
+        let z = z.unwrap();
+        // Build T and check T z_i = λ_i z_i.
+        let mut t = Matrix::zeros(n, n);
+        for i in 0..n {
+            t[(i, i)] = d[i];
+        }
+        for i in 0..n - 1 {
+            t[(i, i + 1)] = e[i];
+            t[(i + 1, i)] = e[i];
+        }
+        for c in 0..n {
+            let v = z.col(c);
+            let tv = t.matvec(&v);
+            for r in 0..n {
+                assert!(
+                    (tv[r] - vals[c] * v[r]).abs() < 1e-9,
+                    "eigpair {c}: residual {}",
+                    (tv[r] - vals[c] * v[r]).abs()
+                );
+            }
+        }
+        // Orthonormality.
+        let ztz = z.transpose().matmul(&z);
+        assert!(ztz.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+    }
+
+    #[test]
+    fn dense_sym_eig_trace_det_invariants() {
+        let n = 20;
+        let mut rng = Rng::new(9);
+        let mut b = Matrix::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(1.0);
+        let vals = sym_eigenvalues(&a);
+        assert_eq!(vals.len(), n);
+        // trace = Σλ
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let sum: f64 = vals.iter().sum();
+        assert!((trace - sum).abs() / trace.abs() < 1e-10);
+        // logdet via Cholesky = Σ ln λ
+        let ch = crate::linalg::cholesky::Cholesky::factor(&a).unwrap();
+        let logdet_ch = ch.logdet();
+        let logdet_eig: f64 = vals.iter().map(|v| v.ln()).sum();
+        assert!((logdet_ch - logdet_eig).abs() < 1e-8);
+        // ascending
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn jacobi_matches_ql_and_reconstructs() {
+        let n = 18;
+        let mut rng = Rng::new(31);
+        let mut b = Matrix::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(0.5);
+        let (vals, vecs) = jacobi_eig(&a);
+        let want = sym_eigenvalues(&a);
+        for i in 0..n {
+            assert!((vals[i] - want[i]).abs() < 1e-8 * want[n - 1].abs());
+        }
+        // A V = V Λ
+        for c in 0..n {
+            let v = vecs.col(c);
+            let av = a.matvec(&v);
+            for r in 0..n {
+                assert!((av[r] - vals[c] * v[r]).abs() < 1e-8 * want[n - 1].abs());
+            }
+        }
+        // Orthonormal.
+        let vtv = vecs.transpose().matmul(&vecs);
+        assert!(vtv.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+    }
+
+    #[test]
+    fn known_eigenvalues_laplacian() {
+        // 1-d Laplacian tridiagonal: known eigenvalues 2-2cos(kπ/(n+1)).
+        let n = 16;
+        let d = vec![2.0; n];
+        let e = vec![-1.0; n - 1];
+        let (vals, _) = tridiag_eig(&d, &e, false);
+        for (k, v) in vals.iter().enumerate() {
+            let want =
+                2.0 - 2.0 * ((k + 1) as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos();
+            assert!((v - want).abs() < 1e-10, "k={k} got {v} want {want}");
+        }
+    }
+}

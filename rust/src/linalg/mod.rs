@@ -1,0 +1,9 @@
+//! Dense linear algebra substrate: matrices, Cholesky, symmetric
+//! eigensolvers (Householder + QL), and the hot vector primitives.
+
+pub mod cholesky;
+pub mod eig;
+pub mod matrix;
+
+pub use cholesky::Cholesky;
+pub use matrix::{axpy, dist2, dot, norm2, Matrix};

@@ -1,0 +1,237 @@
+//! fourier-gp CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!   train       train a GP on a dataset (CSV or built-in simulacrum)
+//!   predict     train + predict, writing predictions CSV
+//!   experiment  regenerate a paper figure/table (fig1..fig8, table1..3)
+//!   bench-mvm   exact vs NFFT MVM scaling
+//!   info        environment, engines, artifact inventory
+
+use fourier_gp::coordinator::experiments as exp;
+use fourier_gp::coordinator::mvm::EngineKind;
+use fourier_gp::data::{uci, Dataset};
+use fourier_gp::features::{en_windows, mis_windows, SelectionRule};
+use fourier_gp::gp::{GpConfig, GpModel, NllOptions, PrecondKind};
+use fourier_gp::kernels::{KernelFn, Windows};
+use fourier_gp::precond::AfnOptions;
+use fourier_gp::util::cli::Args;
+
+const USAGE: &str = "\
+fourier-gp — Preconditioned Additive Gaussian Processes with Fourier Acceleration
+
+USAGE:
+  fourier-gp train   --data <name|csv> [--kernel gaussian|matern] [--engine nfft-rust|exact-rust|nfft-pjrt|exact-pjrt]
+                     [--grouping en|mis|all] [--iters N] [--max-n N] [--windows '[[1,2],[3]]']
+                     [--precond aafn|nystrom|none] [--seed S] [--lr F]
+  fourier-gp predict --data <name|csv> [--out results/pred.csv] [train options]
+  fourier-gp experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all> [--full]
+  fourier-gp bench-mvm [--sizes 1000,4000,16000]
+  fourier-gp info
+
+Datasets: bike elevators poletele road3d (offline simulacra, see DESIGN.md)
+          or a CSV path with columns x0..xp,y.
+Env: FGP_THREADS, FGP_LOG (error|warn|info|debug), FGP_FULL=1, FGP_ARTIFACTS.
+";
+
+fn main() {
+    let args = Args::from_env(&["full", "help", "variance"]);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_dataset(args: &Args) -> anyhow::Result<Dataset> {
+    let data = args.str_or("data", "bike");
+    let seed = args.u64_or("seed", 0);
+    if data.ends_with(".csv") {
+        Dataset::load_csv(&data, std::path::Path::new(&data))
+    } else {
+        uci::by_name(&data, seed)
+    }
+}
+
+fn build_config(args: &Args, ds: &Dataset) -> anyhow::Result<GpConfig> {
+    let kernel = KernelFn::parse(&args.str_or("kernel", "gaussian"))?;
+    let engine = EngineKind::parse(&args.str_or("engine", "nfft-rust"))?;
+    let windows = if let Some(spec) = args.get("windows") {
+        Windows::parse_one_based(spec)?
+    } else {
+        match args.str_or("grouping", "en").as_str() {
+            "en" => en_windows(&ds.x, &ds.y, 0.01, &SelectionRule::Count(9), 1000, 5).0,
+            "mis" => mis_windows(&ds.x, &ds.y, &SelectionRule::Ratio(2.0 / 3.0), 1000, 5).0,
+            "all" => Windows::consecutive(ds.p(), 3),
+            other => anyhow::bail!("unknown grouping {other:?}"),
+        }
+    };
+    windows.validate(ds.p())?;
+    let mut cfg = GpConfig::new(kernel, windows);
+    cfg.engine = engine;
+    cfg.max_iters = args.usize_or("iters", 100);
+    cfg.adam_lr = args.f64_or("lr", 0.01);
+    cfg.nll = NllOptions {
+        train_cg_iters: args.usize_or("cg-iters", 10),
+        num_probes: args.usize_or("probes", 10),
+        slq_steps: args.usize_or("slq-steps", 10),
+        cg_tol: 1e-10,
+        seed: args.u64_or("seed", 0),
+    };
+    cfg.precond = match args.str_or("precond", "aafn").as_str() {
+        "aafn" => PrecondKind::Aafn(AfnOptions {
+            k_per_window: args.usize_or("rank-per-window", 10),
+            max_rank: args.usize_or("max-rank", 300),
+            fill: args.usize_or("fill", 20),
+        }),
+        "nystrom" => PrecondKind::Nystrom { rank: args.usize_or("max-rank", 100) },
+        "none" => PrecondKind::None,
+        other => anyhow::bail!("unknown preconditioner {other:?}"),
+    };
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args, write_pred: bool) -> anyhow::Result<()> {
+    let mut ds = load_dataset(args)?;
+    let max_n = args.usize_or("max-n", 4000);
+    ds = ds.subsample(max_n, args.u64_or("seed", 0));
+    ds.standardize();
+    let cfg = build_config(args, &ds)?;
+    println!(
+        "dataset={} n={} p={} | kernel={} engine={} windows={} iters={}",
+        ds.name,
+        ds.n(),
+        ds.p(),
+        cfg.kernel.name(),
+        cfg.engine.name(),
+        cfg.windows.to_one_based_string(),
+        cfg.max_iters
+    );
+    let (train, test) = ds.split(0.8, args.u64_or("seed", 0) + 1);
+    let model = GpModel::new(cfg);
+    let trained = model.fit(&train.x, &train.y);
+    println!(
+        "trained in {:.1}s ({} MVMs) | σ_f={:.4} ℓ={:.4} σ_ε={:.4}",
+        trained.train_seconds,
+        trained.mvms,
+        trained.hyper.sigma_f,
+        trained.hyper.ell,
+        trained.hyper.sigma_eps
+    );
+    for (it, loss) in &trained.loss_trace {
+        println!("  iter {it:>4}  Z̃ = {loss:.4}");
+    }
+    let pred = trained.predict_mean(&test.x);
+    let rmse = fourier_gp::util::rmse(&pred, &test.y);
+    println!("test RMSE (standardized): {rmse:.4}");
+    if write_pred {
+        let out = args.str_or("out", "results/predictions.csv");
+        let mut t = fourier_gp::util::csv::Table::with_cols(&["y_true", "y_pred", "variance"]);
+        let var = if args.has_flag("variance") {
+            trained.predict_variance(&test.x, args.usize_or("variance-points", 200))
+        } else {
+            vec![f64::NAN; test.n()]
+        };
+        for i in 0..test.n() {
+            t.push_row(&[test.y[i], pred[i], var[i]]);
+        }
+        t.save(std::path::Path::new(&out))?;
+        println!("predictions written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let full = args.has_flag("full") || exp::full_scale();
+    let (n1, n5, n6, reps6, it7, n8, it8, tmaxn, tit) = if full {
+        (1000, 3000, 3000, 10, 500, 3000, 500, 20000, 200)
+    } else {
+        (400, 800, 600, 5, 60, 800, 40, 800, 15)
+    };
+    let run = |id: &str| -> anyhow::Result<()> {
+        match id {
+            "fig1" => drop(exp::fig1(n1)),
+            "fig2" => drop(exp::fig2()),
+            "fig3" => drop(exp::fig3()),
+            "fig4" => drop(exp::fig4(2000)),
+            "fig5" => drop(exp::fig5(n5)),
+            "fig6" => drop(exp::fig6(n6, reps6)),
+            "fig7" => drop(exp::fig7(it7)),
+            "fig8" => drop(exp::fig8(n8, it8)),
+            "table1" => drop(exp::table1()),
+            "table2" => drop(exp::table2(tmaxn.min(4000), tit)),
+            "table3" => drop(exp::table3(tmaxn.min(4000), tit)),
+            other => anyhow::bail!("unknown experiment {other:?}"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in [
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+            "table1", "table2", "table3",
+        ] {
+            run(id)?;
+        }
+    } else {
+        run(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("fourier-gp {}", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", fourier_gp::util::parallel::num_threads());
+    let dir = fourier_gp::runtime::PjrtRuntime::default_dir();
+    match fourier_gp::runtime::Manifest::load(&dir) {
+        Ok(man) => {
+            println!(
+                "artifacts: {} in {} (m={}, σ={})",
+                man.artifacts.len(),
+                dir.display(),
+                man.m,
+                man.sigma
+            );
+            for a in man.artifacts.iter().take(8) {
+                println!("  {} (d={}, n={})", a.name, a.d, a.n);
+            }
+            if man.artifacts.len() > 8 {
+                println!("  … and {} more", man.artifacts.len() - 8);
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e}) — run `make artifacts`"),
+    }
+    println!("engines: exact-rust nfft-rust exact-pjrt nfft-pjrt");
+    Ok(())
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args, false),
+        Some("predict") => cmd_train(args, true),
+        Some("experiment") => cmd_experiment(args),
+        Some("bench-mvm") => {
+            let sizes = args
+                .f64_list("sizes")
+                .map(|v| v.into_iter().map(|x| x as usize).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec![1000, 2000, 4000, 8000, 16000]);
+            exp::mvm_scaling(&sizes);
+            Ok(())
+        }
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

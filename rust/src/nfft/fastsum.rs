@@ -1,0 +1,410 @@
+//! NFFT-based fast summation (paper §3, eq. (3.1)–(3.3)):
+//!
+//!   h(x_i) = Σ_j v_j κ(x_i − x_j)
+//!          ≈ Σ_{k∈I_m} b_k(κ_R) (Σ_j v_j e^{−2πi kᵀx̃_j}) e^{+2πi kᵀx̃_i}
+//!          = trafo( b ⊙ adjoint(v) ),
+//!
+//! with discrete kernel Fourier coefficients (eq. (3.2))
+//!   b_k(κ_R) = (1/m^d) Σ_{l∈I_m} κ_R(l/m) e^{−2πi lᵀk/m},
+//! i.e. the scaled d-dimensional DFT of kernel samples on the m^d grid.
+//! κ_R is the plain periodic continuation (outer boundary smoothing set to
+//! zero, as in the paper's implementation).
+//!
+//! Derivative-kernel consistency (§3.2): the b_k of ∂κ/∂ℓ are the exact
+//! ℓ-derivatives of the b_k of κ, so the fast summation of the derivative
+//! kernel *is* the derivative of the fast-summed kernel — eq. (3.4).
+
+use super::plan::{NfftParams, NfftPlan};
+use crate::fft::{fftn, Complex};
+use crate::kernels::KernelFn;
+
+/// Fast summation plan for one windowed sub-kernel over a fixed point set
+/// (sources == targets; see [`FastsumCross`] for prediction).
+///
+/// Points must lie in [-1/4, 1/4)^d and `ell` must already be expressed in
+/// the scaled coordinates (the caller applies the same scale factor to
+/// both; see `coordinator::mvm`).
+pub struct Fastsum {
+    pub kernel: KernelFn,
+    pub d: usize,
+    pub ell: f64,
+    pub params: NfftParams,
+    plan: NfftPlan,
+    /// b_k(κ_R) for the kernel, DFT layout over m^d.
+    bhat: Vec<Complex>,
+    /// b_k for the ℓ-derivative kernel.
+    bhat_deriv: Vec<Complex>,
+}
+
+/// Compute b_k(κ_R): sample κ on the m^d grid of step 1/m over
+/// [-1/2, 1/2)^d (DFT layout), forward FFT, scale by 1/m^d.
+pub fn kernel_coefficients(
+    kernel: KernelFn,
+    d: usize,
+    m: usize,
+    ell: f64,
+    deriv: bool,
+) -> Vec<Complex> {
+    let total = m.pow(d as u32);
+    let mut grid = vec![Complex::ZERO; total];
+    for (flat, g) in grid.iter_mut().enumerate() {
+        // DFT-layout index t per axis ↔ signed offset l ∈ [-m/2, m/2).
+        let mut rem = flat;
+        let mut r2 = 0.0;
+        for _ in 0..d {
+            let t = rem % m;
+            rem /= m;
+            let l = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
+            let coord = l as f64 / m as f64;
+            r2 += coord * coord;
+        }
+        let val = if deriv {
+            kernel.deriv_ell_r2(r2, ell)
+        } else {
+            kernel.eval_r2(r2, ell)
+        };
+        *g = Complex::new(val, 0.0);
+    }
+    fftn(&vec![m; d], &mut grid);
+    let scale = 1.0 / total as f64;
+    for g in &mut grid {
+        *g = g.scale(scale);
+    }
+    grid
+}
+
+impl Fastsum {
+    pub fn new(
+        kernel: KernelFn,
+        pts: &[f64],
+        d: usize,
+        ell: f64,
+        params: NfftParams,
+    ) -> Fastsum {
+        let plan = NfftPlan::new(pts, d, params);
+        let bhat = kernel_coefficients(kernel, d, params.m, ell, false);
+        let bhat_deriv = kernel_coefficients(kernel, d, params.m, ell, true);
+        Fastsum { kernel, d, ell, params, plan, bhat, bhat_deriv }
+    }
+
+    pub fn n(&self) -> usize {
+        self.plan.n
+    }
+
+    /// h_i = Σ_j v_j κ(x_i − x_j)  (or the ∂/∂ℓ kernel when `deriv`).
+    pub fn apply(&self, v: &[f64], deriv: bool) -> Vec<f64> {
+        let vc: Vec<Complex> = v.iter().map(|&x| Complex::new(x, 0.0)).collect();
+        let mut ghat = self.plan.adjoint(&vc);
+        let b = if deriv { &self.bhat_deriv } else { &self.bhat };
+        for (g, bk) in ghat.iter_mut().zip(b) {
+            *g = *g * *bk;
+        }
+        let h = self.plan.trafo(&ghat);
+        h.into_iter().map(|c| c.re).collect()
+    }
+
+    /// Refresh the kernel coefficients for a new length-scale without
+    /// re-planning the (fixed) point geometry — the per-Adam-step fast path.
+    pub fn set_ell(&mut self, ell: f64) {
+        if ell != self.ell {
+            self.ell = ell;
+            self.bhat = kernel_coefficients(self.kernel, self.d, self.params.m, ell, false);
+            self.bhat_deriv =
+                kernel_coefficients(self.kernel, self.d, self.params.m, ell, true);
+        }
+    }
+}
+
+/// Fast summation with distinct target points (posterior prediction):
+/// h(t_i) = Σ_j v_j κ(t_i − x_j). Sources and targets share one torus
+/// scaling, so both must lie in [-1/4, 1/4)^d.
+pub struct FastsumCross {
+    source_plan: NfftPlan,
+    target_plan: NfftPlan,
+    bhat: Vec<Complex>,
+}
+
+impl FastsumCross {
+    pub fn new(
+        kernel: KernelFn,
+        sources: &[f64],
+        targets: &[f64],
+        d: usize,
+        ell: f64,
+        params: NfftParams,
+    ) -> FastsumCross {
+        FastsumCross {
+            source_plan: NfftPlan::new(sources, d, params),
+            target_plan: NfftPlan::new(targets, d, params),
+            bhat: kernel_coefficients(kernel, d, params.m, ell, false),
+        }
+    }
+
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let vc: Vec<Complex> = v.iter().map(|&x| Complex::new(x, 0.0)).collect();
+        let mut ghat = self.source_plan.adjoint(&vc);
+        for (g, bk) in ghat.iter_mut().zip(&self.bhat) {
+            *g = *g * *bk;
+        }
+        self.target_plan
+            .trafo(&ghat)
+            .into_iter()
+            .map(|c| c.re)
+            .collect()
+    }
+}
+
+/// The paper's Fourier-truncation error bounds (§4), used as *tolerances*
+/// in property tests and reproduced as curves in Fig. 4.
+pub mod error_bounds {
+    /// Theorem 4.4: ‖κ̃_ERR^m‖_∞ ≤ 8 / (π²ℓ(m − 2√3)) for the trivariate
+    /// Matérn(½) kernel.
+    pub fn matern_trivariate(ell: f64, m: usize) -> f64 {
+        let pi = std::f64::consts::PI;
+        8.0 / (pi * pi * ell * (m as f64 - 2.0 * 3f64.sqrt()))
+    }
+
+    /// Theorem 4.5: derivative Matérn(½) kernel bound.
+    pub fn matern_deriv_trivariate(ell: f64, m: usize) -> f64 {
+        let pi = std::f64::consts::PI;
+        let mm = m as f64 - 2.0 * 3f64.sqrt();
+        32.0 / (ell.powi(4) * pi.powi(4) * 3.0 * mm.powi(3))
+            + 8.0 / (ell * ell * pi * pi * mm)
+    }
+
+    /// Lemma 4.2: periodization error δ^m(ℓ) for the trivariate Matérn(½).
+    pub fn periodization_matern(ell: f64) -> f64 {
+        let s3 = 3f64.sqrt();
+        let a = 1.0 + 2.0 * s3 * ell;
+        3.0 * (-1.0 / (2.0 * s3 * ell)).exp() * a
+            + 3.0 * (-1.0 / (s3 * ell)).exp() * a * a
+            + (-3.0 / (2.0 * s3 * ell)).exp() * a * a * a
+    }
+
+    /// Lemma 4.3: periodization error δ^derm(ℓ) for the derivative kernel.
+    pub fn periodization_matern_deriv(ell: f64) -> f64 {
+        let s3 = 3f64.sqrt();
+        let e = (-1.0 / (2.0 * s3 * ell)).exp();
+        let b = 1.0 + e * (1.0 + 2.0 * s3 * ell);
+        let a = 1.0 + e * (1.0 + 2.0 * s3 * ell + 12.0 * ell * ell);
+        3.0 / (ell * ell) * (b * b * a - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::additive::{dense_mvm, WindowedPoints};
+    use crate::nfft::window::WindowKind;
+    use crate::util::rng::Rng;
+
+    fn random_pts(n: usize, d: usize, seed: u64, half: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.uniform_in(-half, half)).collect()
+    }
+
+    /// Dense reference: h_i = Σ_j v_j κ(‖x_i − x_j‖).
+    fn dense_reference(
+        kernel: KernelFn,
+        pts: &[f64],
+        d: usize,
+        ell: f64,
+        v: &[f64],
+        deriv: bool,
+    ) -> Vec<f64> {
+        let wp = WindowedPoints { n: v.len(), d, pts: pts.to_vec() };
+        let mut out = vec![0.0; v.len()];
+        dense_mvm(kernel, &wp, ell, v, deriv, &mut out);
+        out
+    }
+
+    #[test]
+    fn fastsum_matches_dense_small_ell_1d() {
+        let n = 200;
+        let d = 1;
+        let ell = 0.05;
+        let pts = random_pts(n, d, 1, 0.25);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(n);
+        let params = NfftParams { m: 64, sigma: 2.0, s: 10, window: WindowKind::KaiserBessel };
+        for kernel in [KernelFn::Gaussian, KernelFn::Matern12] {
+            let fs = Fastsum::new(kernel, &pts, d, ell, params);
+            let fast = fs.apply(&v, false);
+            let slow = dense_reference(kernel, &pts, d, ell, &v, false);
+            let v1: f64 = v.iter().map(|x| x.abs()).sum();
+            let max_err = fast
+                .iter()
+                .zip(&slow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            // Principled tolerance from eq. (4.1) + the aliasing bound
+            // (4.6): ‖κ_ERR‖∞ ≤ 2 Σ_{|k| ≥ m/2} κ̂(k).
+            // Floor at f64 roundoff: for the Gaussian the analytic bound
+            // drops below machine precision.
+            let bound = fourier_truncation_bound_1d(kernel, 64, ell).max(1e-13);
+            assert!(
+                max_err < v1 * bound,
+                "{kernel:?}: max_err={max_err:e}, allowed={:e}",
+                v1 * bound
+            );
+        }
+    }
+
+    /// 2 Σ_{|k| ≥ m/2} κ̂(k) — the (4.6) truncation bound in 1-d.
+    fn fourier_truncation_bound_1d(kernel: KernelFn, m: usize, ell: f64) -> f64 {
+        let mut s = 0.0;
+        for k in (m / 2)..200_000 {
+            s += kernel.fourier(k as f64, ell, 1);
+        }
+        4.0 * s // 2 (two tails) × 2 (bound slack for the tail beyond 2e5)
+    }
+
+    #[test]
+    fn fastsum_matches_dense_2d() {
+        let n = 150;
+        let d = 2;
+        let ell = 0.08;
+        let pts = random_pts(n, d, 3, 0.25);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(n);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let fs = Fastsum::new(KernelFn::Gaussian, &pts, d, ell, params);
+        let fast = fs.apply(&v, false);
+        let slow = dense_reference(KernelFn::Gaussian, &pts, d, ell, &v, false);
+        let v1: f64 = v.iter().map(|x| x.abs()).sum();
+        let max_err = fast
+            .iter()
+            .zip(&slow)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(max_err < 1e-3 * v1, "max_err={max_err:e}");
+    }
+
+    #[test]
+    fn fastsum_trivariate_matern_within_theorem_bound() {
+        // Property from Thm 4.4 + eq. (4.1): |h - h≈|_i ≤ ‖v‖₁·‖κ_ERR‖_∞,
+        // with ‖κ_ERR‖∞ ≤ bound + periodization slack (Lemma 4.2).
+        let n = 120;
+        let d = 3;
+        let pts = random_pts(n, d, 5, 0.25);
+        let mut rng = Rng::new(6);
+        let v = rng.normal_vec(n);
+        let params = NfftParams { m: 16, sigma: 2.0, s: 5, window: WindowKind::KaiserBessel };
+        for &ell in &[0.05, 0.1, 0.2] {
+            let fs = Fastsum::new(KernelFn::Matern12, &pts, d, ell, params);
+            let fast = fs.apply(&v, false);
+            let slow = dense_reference(KernelFn::Matern12, &pts, d, ell, &v, false);
+            let v1: f64 = v.iter().map(|x| x.abs()).sum();
+            let bound = error_bounds::matern_trivariate(ell, 16)
+                + error_bounds::periodization_matern(ell);
+            let max_err = fast
+                .iter()
+                .zip(&slow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(
+                max_err <= v1 * bound * 1.05,
+                "ell={ell}: err={max_err:e} bound={:e}",
+                v1 * bound
+            );
+        }
+    }
+
+    #[test]
+    fn derivative_fastsum_matches_dense() {
+        let n = 100;
+        let d = 2;
+        let ell = 0.1;
+        let pts = random_pts(n, d, 7, 0.25);
+        let mut rng = Rng::new(8);
+        let v = rng.normal_vec(n);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        for kernel in [KernelFn::Gaussian, KernelFn::Matern12] {
+            let fs = Fastsum::new(kernel, &pts, d, ell, params);
+            let fast = fs.apply(&v, true);
+            let slow = dense_reference(kernel, &pts, d, ell, &v, true);
+            let v1: f64 = v.iter().map(|x| x.abs()).sum();
+            let denom = slow.iter().map(|x| x.abs()).fold(0.0, f64::max).max(v1);
+            let max_err = fast
+                .iter()
+                .zip(&slow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            // Derivative-kernel Fourier series decay is two orders slower
+            // (Thm 4.5: O(1/ℓ²m) leading term), hence the looser tolerance
+            // for Matérn(½); Gaussian stays tight.
+            let tol = match kernel {
+                KernelFn::Gaussian => 1e-3,
+                _ => 5e-2,
+            };
+            assert!(max_err < tol * denom, "{kernel:?}: {max_err:e} vs {denom:e}");
+        }
+    }
+
+    /// §3.2 consistency: b_k of the derivative kernel equal the analytic
+    /// ℓ-derivative of b_k(ℓ) (checked by central differences).
+    #[test]
+    fn coefficient_derivative_consistency() {
+        let d = 2;
+        let m = 16;
+        let ell = 0.15;
+        let h = 1e-5;
+        for kernel in [KernelFn::Gaussian, KernelFn::Matern12] {
+            let b_plus = kernel_coefficients(kernel, d, m, ell + h, false);
+            let b_minus = kernel_coefficients(kernel, d, m, ell - h, false);
+            let b_der = kernel_coefficients(kernel, d, m, ell, true);
+            for k in 0..b_der.len() {
+                let fd = (b_plus[k].re - b_minus[k].re) / (2.0 * h);
+                assert!(
+                    (fd - b_der[k].re).abs() < 1e-5 * (1.0 + b_der[k].re.abs()),
+                    "{kernel:?} k={k}: fd={fd} an={}",
+                    b_der[k].re
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fastsum_cross_matches_dense() {
+        let ns = 80;
+        let nt = 60;
+        let d = 2;
+        let ell = 0.1;
+        let src = random_pts(ns, d, 9, 0.25);
+        let tgt = random_pts(nt, d, 10, 0.25);
+        let mut rng = Rng::new(11);
+        let v = rng.normal_vec(ns);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let fs = FastsumCross::new(KernelFn::Gaussian, &src, &tgt, d, ell, params);
+        let fast = fs.apply(&v);
+        // dense cross reference
+        let mut slow = vec![0.0; nt];
+        for i in 0..nt {
+            let ti = &tgt[i * d..(i + 1) * d];
+            for j in 0..ns {
+                let sj = &src[j * d..(j + 1) * d];
+                slow[i] += v[j]
+                    * KernelFn::Gaussian.eval_r2(crate::linalg::dist2(ti, sj), ell);
+            }
+        }
+        let v1: f64 = v.iter().map(|x| x.abs()).sum();
+        for i in 0..nt {
+            assert!((fast[i] - slow[i]).abs() < 1e-3 * v1, "i={i}");
+        }
+    }
+
+    #[test]
+    fn set_ell_refreshes_coefficients() {
+        let pts = random_pts(50, 1, 12, 0.25);
+        let mut rng = Rng::new(13);
+        let v = rng.normal_vec(50);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let mut fs = Fastsum::new(KernelFn::Gaussian, &pts, 1, 0.05, params);
+        fs.set_ell(0.2);
+        let via_set = fs.apply(&v, false);
+        let fresh = Fastsum::new(KernelFn::Gaussian, &pts, 1, 0.2, params).apply(&v, false);
+        for i in 0..50 {
+            assert_eq!(via_set[i], fresh[i]);
+        }
+    }
+}

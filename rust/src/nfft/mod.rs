@@ -1,0 +1,15 @@
+//! Non-equispaced FFT and NFFT-based fast summation (paper §3 + App. A).
+//!
+//! Replaces the NFFT3 C library the paper's implementation links against;
+//! see DESIGN.md for the substitution rationale. The module provides:
+//! window functions with closed-form Fourier coefficients (`window`),
+//! the nonequispaced transforms over a precomputed spreading plan (`plan`),
+//! and kernel fast summation with derivative consistency (`fastsum`).
+
+pub mod fastsum;
+pub mod plan;
+pub mod window;
+
+pub use fastsum::{kernel_coefficients, Fastsum, FastsumCross};
+pub use plan::{NfftParams, NfftPlan};
+pub use window::{Window, WindowKind};

@@ -1,0 +1,494 @@
+//! NFFT plan: nonequispaced discrete Fourier transforms via
+//! spread → FFT → deconvolve (adjoint) and deconvolve → FFT → gather
+//! (forward/trafo), following Appendix A of the paper.
+//!
+//! Conventions (matching paper eq. (3.3)):
+//! - adjoint:  ĝ_k = Σ_j v_j e^{−2πi kᵀ x_j},   k ∈ I_m
+//! - trafo:    h_i = Σ_{k∈I_m} f̂_k e^{+2πi kᵀ x_i}
+//!
+//! Points live in [-1/4, 1/4)^d (the fast-summation domain); the window
+//! stencil wraps periodically on the oversampled grid of size M = σm per
+//! axis.
+
+use super::window::{Window, WindowKind};
+use crate::fft::{Complex, FftNdPlan};
+use crate::util::parallel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NfftParams {
+    /// Fourier bandwidth per axis (grid I_m = [-m/2, m/2)^d).
+    pub m: usize,
+    /// Oversampling factor σ ≥ 1 such that σm is a power of two.
+    pub sigma: f64,
+    /// Window support: 2s grid points per axis.
+    pub s: usize,
+    pub window: WindowKind,
+}
+
+impl NfftParams {
+    /// Paper defaults: m = 32, σ = 2, Kaiser–Bessel; support scaled down in
+    /// 3-d to bound the (2s)^d stencil cost.
+    pub fn default_for_dim(d: usize) -> Self {
+        let s = match d {
+            1 => 10,
+            2 => 8,
+            _ => 5,
+        };
+        NfftParams { m: 32, sigma: 2.0, s, window: WindowKind::KaiserBessel }
+    }
+
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.m = m;
+        self
+    }
+
+    pub fn grid_size(&self) -> usize {
+        let big_m = (self.m as f64 * self.sigma).round() as usize;
+        assert!(
+            big_m.is_power_of_two(),
+            "oversampled grid σm = {big_m} must be a power of two"
+        );
+        big_m
+    }
+}
+
+/// Precomputed spreading stencil for a fixed point set.
+#[derive(Clone, Debug)]
+pub struct NfftPlan {
+    pub d: usize,
+    pub n: usize,
+    pub params: NfftParams,
+    pub big_m: usize,
+    /// Per point, per axis: first grid index of the stencil (may be negative
+    /// pre-wrap); length n*d.
+    base: Vec<i32>,
+    /// Per point, per axis, 2s window values; length n*d*2s.
+    weights: Vec<f64>,
+    /// Per point, per axis, 2s *wrapped grid indices* (precomputed so the
+    /// spread/gather hot loops do no modular arithmetic); length n*d*2s.
+    wrapped: Vec<i32>,
+    /// Per-axis deconvolution factors 1/c_k(φ̃) for k ∈ I_m in DFT layout
+    /// (index t ↔ k = t < m/2 ? t : t - m); length m.
+    inv_phihat: Vec<f64>,
+    fft: FftNdPlan,
+}
+
+impl NfftPlan {
+    /// Build a plan for `n` points `pts` (row-major n×d) in [-1/4, 1/4)^d.
+    /// (Any points in [-1/2, 1/2) work for the pure transforms; the
+    /// fast-summation wrapper enforces the quarter box.)
+    pub fn new(pts: &[f64], d: usize, params: NfftParams) -> NfftPlan {
+        assert!(d >= 1 && d <= 3, "NFFT supports d in 1..=3 (d_max = 3)");
+        assert_eq!(pts.len() % d, 0);
+        let n = pts.len() / d;
+        let big_m = params.grid_size();
+        let window = Window::new(params.window, params.s, big_m, params.sigma);
+        let s = params.s;
+        let two_s = 2 * s;
+
+        let mut base = vec![0i32; n * d];
+        let mut weights = vec![0.0f64; n * d * two_s];
+        let mf = big_m as f64;
+        parallel::parallel_rows(&mut weights, n, d * two_s, |i, wrow| {
+            for ax in 0..d {
+                let x = pts[i * d + ax];
+                debug_assert!((-0.5..0.5).contains(&x), "point outside torus: {x}");
+                // Stencil covers u = floor(xM) - s + 1 ..= floor(xM) + s.
+                let c = (x * mf).floor() as i64;
+                let u0 = c - s as i64 + 1;
+                for t in 0..two_s {
+                    let u = u0 + t as i64;
+                    wrow[ax * two_s + t] = window.phi(x - u as f64 / mf);
+                }
+            }
+        });
+        // Base indices + wrapped per-tap grid indices (serial second pass).
+        let mut wrapped = vec![0i32; n * d * two_s];
+        for i in 0..n {
+            for ax in 0..d {
+                let x = pts[i * d + ax];
+                let c = (x * mf).floor() as i64;
+                let u0 = c - s as i64 + 1;
+                base[i * d + ax] = u0 as i32;
+                for t in 0..two_s {
+                    wrapped[(i * d + ax) * two_s + t] =
+                        (u0 + t as i64).rem_euclid(big_m as i64) as i32;
+                }
+            }
+        }
+
+        let m = params.m;
+        let mut inv_phihat = vec![0.0f64; m];
+        for t in 0..m {
+            let k = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
+            inv_phihat[t] = 1.0 / window.phi_hat(k);
+        }
+
+        let fft = FftNdPlan::new(&vec![big_m; d]);
+        NfftPlan { d, n, params, big_m, base, weights, wrapped, inv_phihat, fft }
+    }
+
+    #[inline]
+    fn grid_len(&self) -> usize {
+        self.big_m.pow(self.d as u32)
+    }
+
+    /// Spread coefficients onto the oversampled grid:
+    /// G_u = Σ_j v_j φ̃(x_j − u/M). Complex input to serve both directions.
+    fn spread(&self, v: &[Complex]) -> Vec<Complex> {
+        assert_eq!(v.len(), self.n);
+        let glen = self.grid_len();
+        // Per-chunk private grids reduced at the end — the grid is small
+        // (at most 64³ ≈ 262k entries), so thread-local copies beat atomics.
+        let nchunks = parallel::num_threads().min(16).max(1);
+        let grids = std::sync::Mutex::new(Vec::<Vec<Complex>>::new());
+        parallel::parallel_chunks(self.n, nchunks, |_c, lo, hi| {
+            let mut grid = vec![Complex::ZERO; glen];
+            for j in lo..hi {
+                self.spread_point(j, v[j], &mut grid);
+            }
+            grids.lock().unwrap().push(grid);
+        });
+        let grids = grids.into_inner().unwrap();
+        let mut acc = vec![Complex::ZERO; glen];
+        for g in &grids {
+            for (a, b) in acc.iter_mut().zip(g) {
+                *a += *b;
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    fn spread_point(&self, j: usize, vj: Complex, grid: &mut [Complex]) {
+        let two_s = 2 * self.params.s;
+        let w = &self.weights[j * self.d * two_s..(j + 1) * self.d * two_s];
+        let u = &self.wrapped[j * self.d * two_s..(j + 1) * self.d * two_s];
+        match self.d {
+            1 => {
+                for t in 0..two_s {
+                    grid[u[t] as usize] += vj.scale(w[t]);
+                }
+            }
+            2 => {
+                let mu = self.big_m;
+                for t0 in 0..two_s {
+                    let w0 = w[t0];
+                    let row = u[t0] as usize * mu;
+                    for t1 in 0..two_s {
+                        grid[row + u[two_s + t1] as usize] += vj.scale(w0 * w[two_s + t1]);
+                    }
+                }
+            }
+            _ => {
+                let mu = self.big_m;
+                for t0 in 0..two_s {
+                    let w0 = w[t0];
+                    for t1 in 0..two_s {
+                        let w01 = w0 * w[two_s + t1];
+                        let row = (u[t0] as usize * mu + u[two_s + t1] as usize) * mu;
+                        for t2 in 0..two_s {
+                            grid[row + u[2 * two_s + t2] as usize] +=
+                                vj.scale(w01 * w[2 * two_s + t2]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Gather from the grid at each point: out_j = Σ_u G_u φ̃(x_j − u/M).
+    fn gather(&self, grid: &[Complex]) -> Vec<Complex> {
+        assert_eq!(grid.len(), self.grid_len());
+        let two_s = 2 * self.params.s;
+        let d = self.d;
+        parallel::parallel_map(self.n, |j| {
+            let w = &self.weights[j * d * two_s..(j + 1) * d * two_s];
+            let u = &self.wrapped[j * d * two_s..(j + 1) * d * two_s];
+            let mut acc = Complex::ZERO;
+            match d {
+                1 => {
+                    for t in 0..two_s {
+                        acc += grid[u[t] as usize].scale(w[t]);
+                    }
+                }
+                2 => {
+                    let mu = self.big_m;
+                    for t0 in 0..two_s {
+                        let w0 = w[t0];
+                        let row = u[t0] as usize * mu;
+                        for t1 in 0..two_s {
+                            acc += grid[row + u[two_s + t1] as usize]
+                                .scale(w0 * w[two_s + t1]);
+                        }
+                    }
+                }
+                _ => {
+                    let mu = self.big_m;
+                    for t0 in 0..two_s {
+                        let w0 = w[t0];
+                        for t1 in 0..two_s {
+                            let w01 = w0 * w[two_s + t1];
+                            let row =
+                                (u[t0] as usize * mu + u[two_s + t1] as usize) * mu;
+                            for t2 in 0..two_s {
+                                acc += grid[row + u[2 * two_s + t2] as usize]
+                                    .scale(w01 * w[2 * two_s + t2]);
+                            }
+                        }
+                    }
+                }
+            }
+            acc
+        })
+    }
+
+    /// Map a frequency k ∈ I_m (component-wise DFT layout index over the
+    /// *small* grid m) to the flat index on the oversampled DFT grid.
+    fn pad_index(&self, small_flat: usize) -> usize {
+        let m = self.params.m;
+        let mm = self.big_m;
+        let mut rem = small_flat;
+        let mut out = 0usize;
+        // Row-major over d axes of size m.
+        let mut small_idx = [0usize; 3];
+        for ax in (0..self.d).rev() {
+            small_idx[ax] = rem % m;
+            rem /= m;
+        }
+        for ax in 0..self.d {
+            let t = small_idx[ax];
+            let k = if t < m / 2 {
+                t as i64
+            } else {
+                t as i64 - m as i64
+            };
+            let big_t = k.rem_euclid(mm as i64) as usize;
+            out = out * mm + big_t;
+        }
+        out
+    }
+
+    /// Per-axis deconvolution product Π 1/c_{k_ax}(φ̃) at small flat index.
+    fn deconv(&self, small_flat: usize) -> f64 {
+        let m = self.params.m;
+        let mut rem = small_flat;
+        let mut prod = 1.0;
+        for _ax in 0..self.d {
+            let t = rem % m;
+            rem /= m;
+            prod *= self.inv_phihat[t];
+        }
+        prod
+    }
+
+    /// Number of small-grid coefficients |I_m| = m^d.
+    pub fn num_coeffs(&self) -> usize {
+        self.params.m.pow(self.d as u32)
+    }
+
+    /// Adjoint NFFT: ĝ_k = Σ_j v_j e^{−2πi kᵀx_j} for k ∈ I_m.
+    /// Output in DFT layout over the small m^d grid.
+    pub fn adjoint(&self, v: &[Complex]) -> Vec<Complex> {
+        let mut grid = self.spread(v);
+        self.fft.forward(&mut grid);
+        let scale = 1.0 / self.grid_len() as f64;
+        let ncoef = self.num_coeffs();
+        let mut out = vec![Complex::ZERO; ncoef];
+        for sf in 0..ncoef {
+            let bf = self.pad_index(sf);
+            out[sf] = grid[bf].scale(self.deconv(sf) * scale);
+        }
+        out
+    }
+
+    /// Forward NFFT (trafo): h_j = Σ_{k∈I_m} f̂_k e^{+2πi kᵀx_j}.
+    /// `fhat` in DFT layout over the small m^d grid.
+    pub fn trafo(&self, fhat: &[Complex]) -> Vec<Complex> {
+        assert_eq!(fhat.len(), self.num_coeffs());
+        let glen = self.grid_len();
+        let mut grid = vec![Complex::ZERO; glen];
+        for sf in 0..fhat.len() {
+            let bf = self.pad_index(sf);
+            grid[bf] = fhat[sf].scale(self.deconv(sf));
+        }
+        // g_u = (1/M^d) Σ_k ĥ_k e^{+2πi ku/M}  — our ifftn does exactly this.
+        self.fft.inverse(&mut grid);
+        // Undo ifftn's 1/M^d? No: the analysis wants the 1/M^d (see module
+        // docs) — g must satisfy Σ_u g_u e^{-2πiku/M} = ĥ_k.
+        self.gather(&grid)
+    }
+
+    /// Grid memory footprint in bytes (for perf estimates).
+    pub fn grid_bytes(&self) -> usize {
+        self.grid_len() * std::mem::size_of::<Complex>()
+    }
+}
+
+/// Naive O(n·m^d) nonequispaced DFTs for testing.
+pub mod ndft {
+    use crate::fft::Complex;
+
+    pub fn adjoint(pts: &[f64], d: usize, m: usize, v: &[Complex]) -> Vec<Complex> {
+        let n = pts.len() / d;
+        let ncoef = m.pow(d as u32);
+        let mut out = vec![Complex::ZERO; ncoef];
+        for (sf, o) in out.iter_mut().enumerate() {
+            let k = unflatten(sf, d, m);
+            let mut acc = Complex::ZERO;
+            for j in 0..n {
+                let mut phase = 0.0;
+                for ax in 0..d {
+                    phase += k[ax] as f64 * pts[j * d + ax];
+                }
+                acc += v[j] * Complex::cis(-2.0 * std::f64::consts::PI * phase);
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    pub fn trafo(pts: &[f64], d: usize, m: usize, fhat: &[Complex]) -> Vec<Complex> {
+        let n = pts.len() / d;
+        (0..n)
+            .map(|j| {
+                let mut acc = Complex::ZERO;
+                for (sf, &fk) in fhat.iter().enumerate() {
+                    let k = unflatten(sf, d, m);
+                    let mut phase = 0.0;
+                    for ax in 0..d {
+                        phase += k[ax] as f64 * pts[j * d + ax];
+                    }
+                    acc += fk * Complex::cis(2.0 * std::f64::consts::PI * phase);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// DFT-layout flat index over m^d → signed frequency vector.
+    pub fn unflatten(flat: usize, d: usize, m: usize) -> Vec<i64> {
+        let mut rem = flat;
+        let mut idx = vec![0i64; d];
+        for ax in (0..d).rev() {
+            let t = rem % m;
+            rem /= m;
+            idx[ax] = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_pts(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.uniform_in(-0.25, 0.25)).collect()
+    }
+
+    fn cvec(n: usize, seed: u64) -> Vec<Complex> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Complex::new(rng.normal(), rng.normal()))
+            .collect()
+    }
+
+    #[test]
+    fn adjoint_matches_ndft_1d() {
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(40, 1, 1);
+        let v = cvec(40, 2);
+        let plan = NfftPlan::new(&pts, 1, params);
+        let fast = plan.adjoint(&v);
+        let slow = ndft::adjoint(&pts, 1, 16, &v);
+        let vnorm: f64 = v.iter().map(|c| c.abs()).sum();
+        for k in 0..fast.len() {
+            assert!(
+                (fast[k] - slow[k]).abs() < 1e-9 * vnorm,
+                "k={k}: {:?} vs {:?}",
+                fast[k],
+                slow[k]
+            );
+        }
+    }
+
+    #[test]
+    fn trafo_matches_ndft_1d() {
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(30, 1, 3);
+        let fhat = cvec(16, 4);
+        let plan = NfftPlan::new(&pts, 1, params);
+        let fast = plan.trafo(&fhat);
+        let slow = ndft::trafo(&pts, 1, 16, &fhat);
+        let fnorm: f64 = fhat.iter().map(|c| c.abs()).sum();
+        for j in 0..fast.len() {
+            assert!(
+                (fast[j] - slow[j]).abs() < 1e-9 * fnorm,
+                "j={j}: {:?} vs {:?}",
+                fast[j],
+                slow[j]
+            );
+        }
+    }
+
+    #[test]
+    fn adjoint_matches_ndft_2d() {
+        let params = NfftParams { m: 8, sigma: 2.0, s: 6, window: WindowKind::KaiserBessel };
+        let pts = random_pts(25, 2, 5);
+        let v = cvec(25, 6);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let fast = plan.adjoint(&v);
+        let slow = ndft::adjoint(&pts, 2, 8, &v);
+        let vnorm: f64 = v.iter().map(|c| c.abs()).sum();
+        for k in 0..fast.len() {
+            assert!((fast[k] - slow[k]).abs() < 1e-8 * vnorm, "k={k}");
+        }
+    }
+
+    #[test]
+    fn trafo_matches_ndft_3d() {
+        let params = NfftParams { m: 8, sigma: 2.0, s: 5, window: WindowKind::KaiserBessel };
+        let pts = random_pts(15, 3, 7);
+        let fhat = cvec(512, 8);
+        let plan = NfftPlan::new(&pts, 3, params);
+        let fast = plan.trafo(&fhat);
+        let slow = ndft::trafo(&pts, 3, 8, &fhat);
+        let fnorm: f64 = fhat.iter().map(|c| c.abs()).sum();
+        for j in 0..fast.len() {
+            assert!((fast[j] - slow[j]).abs() < 1e-7 * fnorm, "j={j}");
+        }
+    }
+
+    #[test]
+    fn gaussian_window_also_accurate() {
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::Gaussian };
+        let pts = random_pts(20, 1, 9);
+        let v = cvec(20, 10);
+        let plan = NfftPlan::new(&pts, 1, params);
+        let fast = plan.adjoint(&v);
+        let slow = ndft::adjoint(&pts, 1, 16, &v);
+        let vnorm: f64 = v.iter().map(|c| c.abs()).sum();
+        for k in 0..fast.len() {
+            // Gaussian window error ~e^{-sπ(1-1/(2σ-1))} ≈ 5e-8 at s=8.
+            assert!((fast[k] - slow[k]).abs() < 1e-6 * vnorm, "k={k}");
+        }
+    }
+
+    #[test]
+    fn trafo_of_unit_coefficient_is_exponential() {
+        // fhat = delta at k=3 → h_j = e^{2πi·3·x_j}.
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(10, 1, 11);
+        let mut fhat = vec![Complex::ZERO; 16];
+        fhat[3] = Complex::ONE;
+        let plan = NfftPlan::new(&pts, 1, params);
+        let h = plan.trafo(&fhat);
+        for (j, hj) in h.iter().enumerate() {
+            let want = Complex::cis(2.0 * std::f64::consts::PI * 3.0 * pts[j]);
+            assert!((*hj - want).abs() < 1e-9, "j={j}");
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! AAFN — the Adaptive Factorized Nyström preconditioner of [37] adapted
+//! to additive kernels (paper §2.3): FPS landmarks *per feature window*,
+//! merged into the (1,1) block; Cholesky of the landmark block; and a
+//! KNN-sparse approximation of the Schur complement with bounded fill,
+//! factorized by IC(0).
+//!
+//! In the landmark-first permutation P the preconditioner is
+//!   M = W Wᵀ,  W = [[L₁₁, 0], [E, G]],
+//! with E = A₂₁ L₁₁⁻ᵀ and Ŝ ≈ A₂₂ − E Eᵀ ≈ G Gᵀ, so that
+//!   M = [[A₁₁, A₁₂], [A₂₁, A₂₁A₁₁⁻¹A₁₂ + Ŝ]].
+
+use super::fps::merged_landmarks;
+use super::sparse::{knn_pattern, IcFactor, SparseLower};
+use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
+use crate::linalg::{Cholesky, Matrix};
+use crate::solvers::Precond;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AfnOptions {
+    /// FPS landmarks selected per feature window before merging.
+    pub k_per_window: usize,
+    /// Hard cap on the merged landmark count ("maximum rank").
+    pub max_rank: usize,
+    /// Nearest-neighbour fill per row of the sparse Schur complement.
+    pub fill: usize,
+}
+
+impl Default for AfnOptions {
+    fn default() -> Self {
+        Self { k_per_window: 10, max_rank: 300, fill: 20 }
+    }
+}
+
+/// Hyperparameter-independent part of AAFN: landmark selection, the
+/// permutation, the KNN Schur pattern, and the per-window point subsets.
+/// Built once per dataset; reused across every Adam step.
+pub struct AafnGeometry {
+    pub landmarks: Vec<usize>,
+    pub rest: Vec<usize>,
+    pub perm: Vec<usize>,
+    pub iperm: Vec<usize>,
+    pub pattern: Vec<Vec<usize>>,
+    /// Per window: (landmark subset, rest subset) of the windowed points.
+    pub wps: Vec<(WindowedPoints, WindowedPoints)>,
+}
+
+impl AafnGeometry {
+    pub fn new(x: &Matrix, ak: &AdditiveKernel, opts: &AfnOptions) -> AafnGeometry {
+        let n = x.rows;
+        let mut landmarks = merged_landmarks(x, &ak.windows, opts.k_per_window);
+        landmarks.truncate(opts.max_rank.min(n.saturating_sub(1)).max(1));
+        let is_lm: Vec<bool> = {
+            let mut b = vec![false; n];
+            for &i in &landmarks {
+                b[i] = true;
+            }
+            b
+        };
+        let rest: Vec<usize> = (0..n).filter(|&i| !is_lm[i]).collect();
+        let mut perm = landmarks.clone();
+        perm.extend_from_slice(&rest);
+        let mut iperm = vec![0usize; n];
+        for (p, &orig) in perm.iter().enumerate() {
+            iperm[orig] = p;
+        }
+        let n2 = rest.len();
+        // KNN pattern over the non-landmark points in the concatenated
+        // window feature space.
+        let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
+        let wp_rest_full = subset(&WindowedPoints::extract(x, &concat), &rest);
+        let pattern = knn_pattern(&wp_rest_full, opts.fill.min(n2.saturating_sub(1)));
+        let wps = ak
+            .windows
+            .0
+            .iter()
+            .map(|w| {
+                let wp_all = WindowedPoints::extract(x, w);
+                (subset(&wp_all, &landmarks), subset(&wp_all, &rest))
+            })
+            .collect();
+        AafnGeometry { landmarks, rest, perm, iperm, pattern, wps }
+    }
+}
+
+pub struct AafnPrecond {
+    n: usize,
+    /// Permutation: landmark indices then the rest; perm[p] = original idx.
+    perm: Vec<usize>,
+    k: usize,
+    l11: Cholesky,
+    /// E = A₂₁L₁₁⁻ᵀ, (n−k) × k row-major.
+    e: Matrix,
+    schur: IcFactor,
+}
+
+impl AafnPrecond {
+    /// Build from raw data + additive kernel + hyperparameters; the
+    /// preconditioned operator is M ≈ σ_f²ΣK_s + σ_ε²I.
+    pub fn build(
+        x: &Matrix,
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+        opts: &AfnOptions,
+    ) -> AafnPrecond {
+        let geo = AafnGeometry::new(x, ak, opts);
+        Self::build_with(ak, ell, sigma_f2, sigma_eps2, &geo)
+    }
+
+    /// Rebuild the numeric factors for new hyperparameters over a cached
+    /// geometry — the per-Adam-step path.
+    pub fn build_with(
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+        geo: &AafnGeometry,
+    ) -> AafnPrecond {
+        let k = geo.landmarks.len();
+        let n2 = geo.rest.len();
+        let n = k + n2;
+        // Assemble A11 (k×k) and A21 (n2×k) from the additive kernel.
+        let mut a11 = Matrix::zeros(k, k);
+        let mut a21 = Matrix::zeros(n2, k);
+        for (wp_lm, wp_rest) in &geo.wps {
+            a11.add_assign(&gram_cross(ak.kernel, wp_lm, wp_lm, ell));
+            a21.add_assign(&gram_cross(ak.kernel, wp_rest, wp_lm, ell));
+        }
+        a11.scale(sigma_f2);
+        a21.scale(sigma_f2);
+        a11.add_diag(sigma_eps2);
+
+        let l11 = Cholesky::factor(&a11).unwrap_or_else(|_| {
+            // Kernel blocks are PSD; σ_ε² keeps this PD except under
+            // extreme duplication — add jitter then.
+            let mut a = a11.clone();
+            a.add_diag(1e-10 + 1e-8 * sigma_f2);
+            Cholesky::factor(&a).expect("landmark block not SPD even with jitter")
+        });
+
+        // E = A21 · L11^{-T} ⇒ each row of E is the forward-solve of the
+        // corresponding row of A21 (Eᵀ = L11^{-1} A12).
+        let mut e = Matrix::zeros(n2, k);
+        {
+            let e_data = &mut e.data;
+            crate::util::parallel::parallel_rows(e_data, n2, k, |i, row| {
+                let sol = l11.solve_lower(a21.row(i));
+                row.copy_from_slice(&sol);
+            });
+        }
+
+        // Sparse Schur complement values on the cached pattern.
+        let kernel = ak.kernel;
+        let a22 = |i: usize, j: usize| -> f64 {
+            let mut s = 0.0;
+            for (_, wp_rest) in &geo.wps {
+                s += kernel
+                    .eval_r2(crate::linalg::dist2(wp_rest.point(i), wp_rest.point(j)), ell);
+            }
+            let mut v = sigma_f2 * s;
+            if i == j {
+                v += sigma_eps2;
+            }
+            v
+        };
+        let sp = SparseLower::from_pattern(n2, &geo.pattern, |i, j| {
+            a22(i, j) - crate::linalg::dot(e.row(i), e.row(j))
+        });
+        let schur = sp.ic0();
+
+        AafnPrecond { n, perm: geo.perm.clone(), k, l11, e, schur }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.k
+    }
+
+    pub fn schur_shift(&self) -> f64 {
+        self.schur.shift
+    }
+
+    fn permute(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n).map(|p| x[self.perm[p]]).collect()
+    }
+
+    fn unpermute(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            out[orig] = y[p];
+        }
+        out
+    }
+
+    /// y2 -= E y1 helper; returns (y1, y2) stacked result of W⁻¹ x (permuted).
+    fn w_solve_lower(&self, xp: &[f64]) -> Vec<f64> {
+        let (x1, x2) = xp.split_at(self.k);
+        let y1 = self.l11.solve_lower(x1);
+        // t = x2 - E y1
+        let mut t = x2.to_vec();
+        for i in 0..t.len() {
+            t[i] -= crate::linalg::dot(self.e.row(i), &y1);
+        }
+        let y2 = self.schur.solve_lower(&t);
+        let mut out = y1;
+        out.extend(y2);
+        out
+    }
+
+    fn w_solve_upper(&self, xp: &[f64]) -> Vec<f64> {
+        let (x1, x2) = xp.split_at(self.k);
+        let y2 = self.schur.solve_upper(x2);
+        // t = x1 - Eᵀ y2
+        let mut t = x1.to_vec();
+        for (i, &y2i) in y2.iter().enumerate() {
+            if y2i != 0.0 {
+                let row = self.e.row(i);
+                for (c, tc) in t.iter_mut().enumerate() {
+                    *tc -= row[c] * y2i;
+                }
+            }
+        }
+        let y1 = self.l11.solve_upper(&t);
+        let mut out = y1;
+        out.extend(y2);
+        out
+    }
+
+    fn w_mul_upper(&self, xp: &[f64]) -> Vec<f64> {
+        let (x1, x2) = xp.split_at(self.k);
+        // y1 = L11ᵀ x1 + Eᵀ x2
+        let mut y1 = vec![0.0; self.k];
+        for i in 0..self.k {
+            for kk in i..self.k {
+                y1[i] += self.l11.l[(kk, i)] * x1[kk];
+            }
+        }
+        for (i, &x2i) in x2.iter().enumerate() {
+            if x2i != 0.0 {
+                let row = self.e.row(i);
+                for (c, yc) in y1.iter_mut().enumerate() {
+                    *yc += row[c] * x2i;
+                }
+            }
+        }
+        let y2 = self.schur.mul_upper(x2);
+        y1.extend(y2);
+        y1
+    }
+}
+
+fn subset(wp: &WindowedPoints, idx: &[usize]) -> WindowedPoints {
+    let mut pts = Vec::with_capacity(idx.len() * wp.d);
+    for &i in idx {
+        pts.extend_from_slice(wp.point(i));
+    }
+    WindowedPoints { n: idx.len(), d: wp.d, pts }
+}
+
+impl Precond for AafnPrecond {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn solve(&self, x: &[f64]) -> Vec<f64> {
+        let xp = self.permute(x);
+        let y = self.w_solve_upper(&self.w_solve_lower(&xp));
+        self.unpermute(&y)
+    }
+
+    fn solve_lower(&self, x: &[f64]) -> Vec<f64> {
+        self.w_solve_lower(&self.permute(x))
+    }
+
+    fn solve_upper(&self, x: &[f64]) -> Vec<f64> {
+        self.unpermute(&self.w_solve_upper(x))
+    }
+
+    fn mul_upper(&self, x: &[f64]) -> Vec<f64> {
+        self.w_mul_upper(&self.permute(x))
+    }
+
+    fn logdet(&self) -> f64 {
+        self.l11.logdet() + self.schur.logdet()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, Windows};
+    use crate::solvers::cg::{cg, pcg, CgOptions};
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, AdditiveKernel) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 6);
+        let side = (n as f64).cbrt();
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, side);
+        }
+        let ak = AdditiveKernel::new(
+            KernelFn::Gaussian,
+            Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]),
+        );
+        (x, ak)
+    }
+
+    #[test]
+    fn preconditioner_inverts_m_consistently() {
+        // solve == solve_upper ∘ solve_lower and mul_upper is its inverse
+        // transpose: L⁻ᵀ(Lᵀ x) = x.
+        let (x, ak) = setup(150, 1);
+        let p = AafnPrecond::build(
+            &x,
+            &ak,
+            1.0,
+            0.5,
+            0.01,
+            &AfnOptions { k_per_window: 15, max_rank: 40, fill: 8 },
+        );
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(150);
+        let roundtrip = p.solve_upper(&p.mul_upper(&v));
+        for i in 0..150 {
+            assert!((roundtrip[i] - v[i]).abs() < 1e-9, "i={i}");
+        }
+        let via_split = p.solve_upper(&p.solve_lower(&v));
+        let direct = p.solve(&v);
+        for i in 0..150 {
+            assert!((via_split[i] - direct[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn m_approximates_a_where_it_matters() {
+        // M z should be close to A z for smooth z when rank is generous.
+        let (x, ak) = setup(120, 3);
+        let (ell, sf2, se2) = (2.0, 0.5, 0.01);
+        let p = AafnPrecond::build(
+            &x,
+            &ak,
+            ell,
+            sf2,
+            se2,
+            &AfnOptions { k_per_window: 40, max_rank: 80, fill: 20 },
+        );
+        let a = ak.gram_full(&x, ell, sf2, se2);
+        // Check L⁻¹AL⁻ᵀ has eigen-ish values near 1 via Rayleigh quotients.
+        let mut rng = Rng::new(4);
+        for _ in 0..5 {
+            let z = rng.normal_vec(120);
+            let t = p.solve_upper(&z);
+            let at = a.matvec(&t);
+            let lat = p.solve_lower(&at);
+            let num = crate::linalg::dot(&z, &lat);
+            let den = crate::linalg::dot(&z, &z);
+            let rq = num / den;
+            assert!(rq > 0.2 && rq < 5.0, "rayleigh quotient {rq} far from 1");
+        }
+    }
+
+    #[test]
+    fn pcg_beats_cg_in_middle_rank_regime() {
+        let (x, ak) = setup(300, 5);
+        let (ell, sf2, se2) = (2.0, 0.5, 0.01);
+        let a = ak.gram_full(&x, ell, sf2, se2);
+        let p = AafnPrecond::build(
+            &x,
+            &ak,
+            ell,
+            sf2,
+            se2,
+            &AfnOptions { k_per_window: 40, max_rank: 80, fill: 10 },
+        );
+        let mut rng = Rng::new(6);
+        let b: Vec<f64> = (0..300).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let opts = CgOptions { tol: 1e-4, max_iter: 400, relative: true };
+        let plain = cg(&a, &b, &opts);
+        let pre = pcg(&a, &p, &b, &opts);
+        assert!(pre.converged, "pcg failed to converge");
+        assert!(
+            pre.iterations < plain.iterations,
+            "pcg {} vs cg {}",
+            pre.iterations,
+            plain.iterations
+        );
+        // Both solve the same system.
+        let ax = a.matvec(&pre.x);
+        let rel: f64 = crate::util::rmse(&ax, &b) / crate::linalg::norm2(&b);
+        assert!(rel < 1e-3);
+    }
+
+    #[test]
+    fn logdet_close_to_exact_for_generous_rank() {
+        let (x, ak) = setup(100, 7);
+        let (ell, sf2, se2) = (1.5, 0.5, 0.1);
+        let a = ak.gram_full(&x, ell, sf2, se2);
+        let exact = crate::linalg::Cholesky::factor(&a).unwrap().logdet();
+        let p = AafnPrecond::build(
+            &x,
+            &ak,
+            ell,
+            sf2,
+            se2,
+            &AfnOptions { k_per_window: 45, max_rank: 90, fill: 9 },
+        );
+        let got = p.logdet();
+        assert!(
+            (got - exact).abs() < 0.15 * exact.abs().max(10.0),
+            "logdet {got} vs exact {exact}"
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Farthest point sampling (FPS) — landmark selection for the AAFN
+//! preconditioner (paper §2.3: "we apply farthest point sampling to select
+//! the landmark points from each feature window and then merge").
+
+use crate::kernels::additive::WindowedPoints;
+
+/// Select `k` landmark indices from `wp` by farthest-point sampling,
+/// starting from the point closest to the centroid (deterministic).
+pub fn farthest_point_sampling(wp: &WindowedPoints, k: usize) -> Vec<usize> {
+    let n = wp.n;
+    let k = k.min(n);
+    if k == 0 {
+        return vec![];
+    }
+    // Start: point nearest the centroid.
+    let mut centroid = vec![0.0; wp.d];
+    for i in 0..n {
+        for (c, &v) in wp.point(i).iter().enumerate() {
+            centroid[c] += v;
+        }
+    }
+    for c in centroid.iter_mut() {
+        *c /= n as f64;
+    }
+    let mut first = 0;
+    let mut best = f64::INFINITY;
+    for i in 0..n {
+        let d2 = crate::linalg::dist2(wp.point(i), &centroid);
+        if d2 < best {
+            best = d2;
+            first = i;
+        }
+    }
+    let mut selected = Vec::with_capacity(k);
+    selected.push(first);
+    // dist2 to nearest selected landmark.
+    let mut min_d2: Vec<f64> = (0..n)
+        .map(|i| crate::linalg::dist2(wp.point(i), wp.point(first)))
+        .collect();
+    while selected.len() < k {
+        // Farthest point from the current landmark set.
+        let (mut arg, mut val) = (0usize, -1.0f64);
+        for i in 0..n {
+            if min_d2[i] > val {
+                val = min_d2[i];
+                arg = i;
+            }
+        }
+        if val <= 0.0 {
+            break; // all remaining points coincide with landmarks
+        }
+        selected.push(arg);
+        for i in 0..n {
+            let d2 = crate::linalg::dist2(wp.point(i), wp.point(arg));
+            if d2 < min_d2[i] {
+                min_d2[i] = d2;
+            }
+        }
+    }
+    selected
+}
+
+/// AAFN landmark merge: FPS per feature window, union of the index sets
+/// (sorted, deduplicated).
+pub fn merged_landmarks(
+    x: &crate::linalg::Matrix,
+    windows: &crate::kernels::Windows,
+    k_per_window: usize,
+) -> Vec<usize> {
+    let mut all: Vec<usize> = Vec::new();
+    for w in &windows.0 {
+        let wp = WindowedPoints::extract(x, w);
+        all.extend(farthest_point_sampling(&wp, k_per_window));
+    }
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Windows;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> WindowedPoints {
+        let mut rng = Rng::new(seed);
+        WindowedPoints {
+            n,
+            d,
+            pts: (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        }
+    }
+
+    #[test]
+    fn selects_k_distinct() {
+        let wp = cloud(200, 2, 1);
+        let s = farthest_point_sampling(&wp, 20);
+        assert_eq!(s.len(), 20);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 20);
+    }
+
+    #[test]
+    fn landmarks_are_spread_out() {
+        // Min pairwise landmark distance must beat random selection's.
+        let wp = cloud(500, 2, 2);
+        let fps = farthest_point_sampling(&wp, 15);
+        let mut rng = Rng::new(3);
+        let rnd = rng.sample_indices(500, 15);
+        let min_pair = |idx: &[usize]| {
+            let mut m = f64::INFINITY;
+            for (a, &i) in idx.iter().enumerate() {
+                for &j in &idx[a + 1..] {
+                    m = m.min(crate::linalg::dist2(wp.point(i), wp.point(j)));
+                }
+            }
+            m
+        };
+        assert!(min_pair(&fps) > min_pair(&rnd));
+    }
+
+    #[test]
+    fn k_larger_than_n_saturates() {
+        let wp = cloud(7, 1, 4);
+        let s = farthest_point_sampling(&wp, 100);
+        assert_eq!(s.len(), 7);
+    }
+
+    #[test]
+    fn duplicate_points_terminate_early() {
+        let wp = WindowedPoints { n: 5, d: 1, pts: vec![1.0; 5] };
+        let s = farthest_point_sampling(&wp, 5);
+        assert_eq!(s.len(), 1); // all points identical → one landmark
+    }
+
+    #[test]
+    fn merged_per_window() {
+        let mut rng = Rng::new(5);
+        let mut x = Matrix::zeros(100, 4);
+        for v in &mut x.data {
+            *v = rng.normal();
+        }
+        let w = Windows(vec![vec![0, 1], vec![2, 3]]);
+        let lm = merged_landmarks(&x, &w, 10);
+        assert!(lm.len() >= 10 && lm.len() <= 20);
+        for win in lm.windows(2) {
+            assert!(win[0] < win[1]); // sorted, distinct
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Preconditioners for the regularized additive kernel matrix
+//! K̂ = σ_f²ΣK_s + σ_ε²I (paper §2.3): the additive AFN (AAFN) and a plain
+//! Nyström baseline, plus the FPS landmark selector and the sparse IC(0)
+//! machinery for the bounded-fill Schur complement.
+
+pub mod afn;
+pub mod fps;
+pub mod nystrom;
+pub mod sparse;
+
+pub use afn::{AafnGeometry, AafnPrecond, AfnOptions};
+pub use fps::farthest_point_sampling;
+pub use nystrom::NystromPrecond;

@@ -1,0 +1,242 @@
+//! Plain Nyström preconditioner (ablation baseline, cf. [32, 37]):
+//! M = σ_ε²I + U Uᵀ with U = K̃_nm L_mm⁻ᵀ the Nyström factor of the
+//! additive kernel. Provides the symmetric split M = L Lᵀ with
+//! L = σ_ε (I + U B Uᵀ) (B from the eigendecomposition of UᵀU), so the
+//! same preconditioned-SLQ machinery as AAFN applies.
+
+use super::fps::farthest_point_sampling;
+use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
+use crate::linalg::{eig::jacobi_eig, Cholesky, Matrix};
+use crate::solvers::Precond;
+
+pub struct NystromPrecond {
+    n: usize,
+    sigma_eps: f64,
+    /// U: n × k Nyström factor.
+    u: Matrix,
+    /// Small k×k symmetric maps in the eigenbasis of G = UᵀU.
+    b_mul: Matrix,   // B   : L = σε(I + U B Uᵀ)
+    b_inv: Matrix,   // B'  : L⁻¹ = (1/σε)(I − U B' Uᵀ)
+    m_small: Cholesky, // chol(σε² I + G) for SMW solve
+    logdet: f64,
+}
+
+impl NystromPrecond {
+    pub fn build(
+        x: &Matrix,
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+        rank: usize,
+    ) -> NystromPrecond {
+        let n = x.rows;
+        let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
+        let wp_full = WindowedPoints::extract(x, &concat);
+        let landmarks = farthest_point_sampling(&wp_full, rank.min(n));
+        let k = landmarks.len();
+
+        // K̃_nm and K̃_mm over all windows (σ_f² applied once).
+        let mut knm = Matrix::zeros(n, k);
+        let mut kmm = Matrix::zeros(k, k);
+        for w in &ak.windows.0 {
+            let wp = WindowedPoints::extract(x, w);
+            let wp_lm = {
+                let mut pts = Vec::with_capacity(k * wp.d);
+                for &i in &landmarks {
+                    pts.extend_from_slice(wp.point(i));
+                }
+                WindowedPoints { n: k, d: wp.d, pts }
+            };
+            knm.add_assign(&gram_cross(ak.kernel, &wp, &wp_lm, ell));
+            kmm.add_assign(&gram_cross(ak.kernel, &wp_lm, &wp_lm, ell));
+        }
+        knm.scale(sigma_f2);
+        kmm.scale(sigma_f2);
+        kmm.add_diag(1e-10 + 1e-8 * sigma_f2); // jitter
+
+        let lmm = Cholesky::factor(&kmm).expect("landmark block SPD");
+        // U = K_nm L_mm⁻ᵀ: each row solved by forward substitution.
+        let mut u = Matrix::zeros(n, k);
+        {
+            let udata = &mut u.data;
+            crate::util::parallel::parallel_rows(udata, n, k, |i, row| {
+                row.copy_from_slice(&lmm.solve_lower(knm.row(i)));
+            });
+        }
+
+        // Eigendecomposition of G = UᵀU (k×k).
+        let g = u.gram();
+        let (lam, q) = jacobi_eig(&g);
+        let sigma_eps = sigma_eps2.sqrt();
+        // Spectral maps: b = (√(1+λ/σε²)−1)/λ, b' = (√(1+λ/σε²)−1)/(λ√(1+λ/σε²)).
+        let mut db = vec![0.0; lam.len()];
+        let mut dbp = vec![0.0; lam.len()];
+        let mut logdet = (n as f64) * sigma_eps2.ln();
+        for (i, &l) in lam.iter().enumerate() {
+            let l = l.max(0.0);
+            let c = (1.0 + l / sigma_eps2).sqrt();
+            if l < 1e-12 {
+                db[i] = 0.5 / sigma_eps2;
+                dbp[i] = 0.5 / sigma_eps2;
+            } else {
+                db[i] = (c - 1.0) / l;
+                dbp[i] = (c - 1.0) / (l * c);
+            }
+            logdet += (1.0 + l / sigma_eps2).ln();
+        }
+        let b_mul = spectral(&q, &db);
+        let b_inv = spectral(&q, &dbp);
+        let mut small = g;
+        small.add_diag(sigma_eps2);
+        let m_small = Cholesky::factor(&small).expect("σε²I + G SPD");
+        NystromPrecond { n, sigma_eps, u, b_mul, b_inv, m_small, logdet }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    /// y = (I + U C Uᵀ) x  scaled by `scale`.
+    fn apply_low_rank(&self, c: &Matrix, x: &[f64], sign: f64, scale: f64) -> Vec<f64> {
+        let utx = self.u.matvec_t(x);
+        let cut = c.matvec(&utx);
+        let ucut = self.u.matvec(&cut);
+        x.iter()
+            .zip(&ucut)
+            .map(|(xi, ui)| scale * (xi + sign * ui))
+            .collect()
+    }
+}
+
+/// Q diag(d) Qᵀ.
+fn spectral(q: &Matrix, d: &[f64]) -> Matrix {
+    let k = q.rows;
+    let mut qd = q.clone();
+    for r in 0..k {
+        for c in 0..k {
+            qd[(r, c)] *= d[c];
+        }
+    }
+    qd.matmul(&q.transpose())
+}
+
+impl Precond for NystromPrecond {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// SMW: M⁻¹x = (x − U(σε²I+G)⁻¹Uᵀx)/σε².
+    fn solve(&self, x: &[f64]) -> Vec<f64> {
+        let utx = self.u.matvec_t(x);
+        let t = self.m_small.solve(&utx);
+        let ut = self.u.matvec(&t);
+        let inv = 1.0 / (self.sigma_eps * self.sigma_eps);
+        x.iter().zip(&ut).map(|(xi, ui)| (xi - ui) * inv).collect()
+    }
+
+    fn solve_lower(&self, x: &[f64]) -> Vec<f64> {
+        self.apply_low_rank(&self.b_inv, x, -1.0, 1.0 / self.sigma_eps)
+    }
+
+    fn solve_upper(&self, x: &[f64]) -> Vec<f64> {
+        // L symmetric.
+        self.solve_lower(x)
+    }
+
+    fn mul_upper(&self, x: &[f64]) -> Vec<f64> {
+        self.apply_low_rank(&self.b_mul, x, 1.0, self.sigma_eps)
+    }
+
+    fn logdet(&self) -> f64 {
+        self.logdet
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, Windows};
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, AdditiveKernel) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 4);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 3.0);
+        }
+        let ak = AdditiveKernel::new(
+            KernelFn::Gaussian,
+            Windows(vec![vec![0, 1], vec![2, 3]]),
+        );
+        (x, ak)
+    }
+
+    #[test]
+    fn split_is_consistent_with_solve() {
+        let (x, ak) = setup(80, 1);
+        let p = NystromPrecond::build(&x, &ak, 1.0, 0.5, 0.05, 25);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(80);
+        // L⁻ᵀ L⁻¹ == M⁻¹
+        let via_split = p.solve_upper(&p.solve_lower(&v));
+        let direct = p.solve(&v);
+        for i in 0..80 {
+            assert!(
+                (via_split[i] - direct[i]).abs() < 1e-8,
+                "i={i}: {} vs {}",
+                via_split[i],
+                direct[i]
+            );
+        }
+        // Lᵀ then L⁻ᵀ is identity.
+        let rt = p.solve_upper(&p.mul_upper(&v));
+        for i in 0..80 {
+            assert!((rt[i] - v[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn m_times_minv_identity() {
+        // M = σε²I + UUᵀ applied explicitly must invert `solve`.
+        let (x, ak) = setup(60, 3);
+        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 20);
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(60);
+        let minv_v = p.solve(&v);
+        // M y = σε² y + U Uᵀ y
+        let uty = p.u.matvec_t(&minv_v);
+        let uuty = p.u.matvec(&uty);
+        for i in 0..60 {
+            let mv = 0.1 * minv_v[i] + uuty[i];
+            assert!((mv - v[i]).abs() < 1e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn logdet_matches_dense() {
+        let (x, ak) = setup(50, 5);
+        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 15);
+        // dense M = σε²I + UUᵀ
+        let mut m = p.u.matmul(&p.u.transpose());
+        m.add_diag(0.1);
+        let want = Cholesky::factor(&m).unwrap().logdet();
+        assert!((p.logdet() - want).abs() < 1e-6, "{} vs {want}", p.logdet());
+    }
+
+    #[test]
+    fn full_rank_nystrom_reproduces_kernel() {
+        // rank = n ⇒ UUᵀ == K̃ exactly (up to jitter), so M⁻¹A ≈ I.
+        let (x, ak) = setup(40, 6);
+        let (ell, sf2, se2) = (0.8, 0.7, 0.05);
+        let p = NystromPrecond::build(&x, &ak, ell, sf2, se2, 40);
+        let a = ak.gram_full(&x, ell, sf2, se2);
+        let mut rng = Rng::new(7);
+        let v = rng.normal_vec(40);
+        let av = a.matvec(&v);
+        let w = p.solve(&av);
+        for i in 0..40 {
+            assert!((w[i] - v[i]).abs() < 1e-3, "i={i}: {} vs {}", w[i], v[i]);
+        }
+    }
+}

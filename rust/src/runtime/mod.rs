@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (built once by
+//! `make artifacts`; Python never runs on this path) and execute them on
+//! the CPU PJRT client from the rust hot loop.
+//!
+//! Artifacts are described by `artifacts/manifest.json` (see
+//! python/compile/aot.py) and compiled lazily on first use, then cached.
+
+pub mod engine;
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub engine: String, // "exact" | "nfft"
+    pub kernel: String, // "gaussian" | "matern12"
+    pub deriv: bool,
+    pub d: usize,
+    pub n: usize,
+    pub m: usize,
+    pub s: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub m: usize,
+    pub sigma: f64,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(ArtifactMeta {
+                name: a.str_or("name", "").to_string(),
+                file: a.str_or("file", "").to_string(),
+                engine: a.str_or("engine", "").to_string(),
+                kernel: a.str_or("kernel", "").to_string(),
+                deriv: a.bool_or("deriv", false),
+                d: a.usize_or("d", 0),
+                n: a.usize_or("n", 0),
+                m: a.usize_or("m", 0),
+                s: a.usize_or("s", 0),
+            });
+        }
+        Ok(Manifest {
+            m: j.usize_or("m", 32),
+            sigma: j.f64_or("sigma", 2.0),
+            artifacts,
+        })
+    }
+
+    /// Smallest artifact of the given flavour with capacity ≥ `min_n`.
+    pub fn find(
+        &self,
+        engine: &str,
+        kernel: &str,
+        deriv: bool,
+        d: usize,
+        min_n: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.engine == engine
+                    && a.kernel == kernel
+                    && a.deriv == deriv
+                    && a.d == d
+                    && a.n >= min_n
+            })
+            .min_by_key(|a| a.n)
+    }
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT engine. All PJRT objects live behind one mutex: the `xla`
+/// crate's wrappers are `Rc`-based (not `Send`), but every access here is
+/// serialized, so the cross-thread marker below is sound in practice
+/// (the underlying XLA C++ client is itself thread-safe).
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    inner: Mutex<RuntimeInner>,
+}
+
+// SAFETY: all uses of the Rc-based xla wrappers are serialized through
+// `inner: Mutex<_>`; nothing hands out clones across threads.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    pub fn load(dir: &Path) -> anyhow::Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "PJRT runtime: platform={} artifacts={}",
+            client.platform_name(),
+            manifest.artifacts.len()
+        );
+        Ok(PjrtRuntime {
+            dir: dir.to_path_buf(),
+            manifest,
+            inner: Mutex::new(RuntimeInner { client, cache: HashMap::new() }),
+        })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FGP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Execute artifact `name` on f64 inputs with the given shapes;
+    /// returns the flat f64 output of the 1-tuple result.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[(&[f64], &[i64])],
+    ) -> anyhow::Result<Vec<f64>> {
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(name) {
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            crate::debuglog!("compiled artifact {name}");
+            inner.cache.insert(name.to_string(), exe);
+        }
+        let exe = inner.cache.get(name).unwrap();
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(shape)?
+            };
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Number of compiled executables resident in the cache.
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().unwrap().cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads_and_finds() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(!man.artifacts.is_empty());
+        let a = man.find("exact", "gaussian", false, 2, 1).unwrap();
+        assert_eq!(a.d, 2);
+        assert!(!a.deriv);
+        assert!(man.find("exact", "gaussian", false, 99, 1).is_none());
+    }
+
+    #[test]
+    fn exact_artifact_matches_rust_kernel() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::load(&dir).unwrap();
+        let meta = rt.manifest.find("exact", "gaussian", false, 2, 1).unwrap().clone();
+        let n = meta.n;
+        let d = meta.d;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let v: Vec<f64> = rng.normal_vec(n);
+        let ell = [0.5f64];
+        let out = rt
+            .execute(
+                &meta.name,
+                &[
+                    (&pts, &[n as i64, d as i64]),
+                    (&pts, &[n as i64, d as i64]),
+                    (&v, &[n as i64]),
+                    (&ell, &[1]),
+                ],
+            )
+            .unwrap();
+        // rust reference
+        let wp = crate::kernels::additive::WindowedPoints { n, d, pts };
+        let mut want = vec![0.0; n];
+        crate::kernels::additive::dense_mvm(
+            crate::kernels::KernelFn::Gaussian,
+            &wp,
+            0.5,
+            &v,
+            false,
+            &mut want,
+        );
+        for i in 0..n {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-10,
+                "i={i}: {} vs {}",
+                out[i],
+                want[i]
+            );
+        }
+    }
+}

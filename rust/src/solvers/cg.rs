@@ -1,0 +1,195 @@
+//! (Preconditioned) conjugate gradient for SPD systems — the workhorse for
+//! α = K̂⁻¹Y in the GP objective (paper §1) and the Fig. 1 / Fig. 5
+//! iteration-count experiments.
+
+use super::{LinOp, Precond};
+use crate::linalg::{axpy, dot, norm2};
+
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    pub tol: f64,
+    pub max_iter: usize,
+    /// Stop on relative residual ‖r‖/‖b‖ (true, the paper's criterion) or
+    /// absolute ‖r‖ (false).
+    pub relative: bool,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        Self { tol: 1e-4, max_iter: 200, relative: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// ‖r_k‖ history (index 0 = initial residual).
+    pub residuals: Vec<f64>,
+}
+
+/// Plain CG with zero initial guess.
+pub fn cg(a: &dyn LinOp, b: &[f64], opts: &CgOptions) -> CgResult {
+    let p = super::IdentityPrecond(a.dim());
+    pcg(a, &p, b, opts)
+}
+
+/// Preconditioned CG with zero initial guess.
+pub fn pcg(a: &dyn LinOp, m: &dyn Precond, b: &[f64], opts: &CgOptions) -> CgResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec(); // r = b - A·0
+    let bnorm = norm2(b);
+    let target = if opts.relative {
+        opts.tol * bnorm
+    } else {
+        opts.tol
+    };
+    let mut residuals = vec![norm2(&r)];
+    if residuals[0] <= target || bnorm == 0.0 {
+        return CgResult { x, iterations: 0, converged: true, residuals };
+    }
+    let mut z = m.solve(&r);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut ap = vec![0.0; n];
+    let mut converged = false;
+    let mut iterations = 0;
+    for it in 1..=opts.max_iter {
+        a.apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // Operator lost positive definiteness (can happen with
+            // aggressive NFFT approximations); stop with current iterate.
+            break;
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rnorm = norm2(&r);
+        residuals.push(rnorm);
+        iterations = it;
+        if rnorm <= target {
+            converged = true;
+            break;
+        }
+        z = m.solve(&r);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    CgResult { x, iterations, converged, residuals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Matrix};
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64, cond_boost: f64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut b = Matrix::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(cond_boost);
+        a
+    }
+
+    #[test]
+    fn cg_solves_spd() {
+        let n = 40;
+        let a = spd(n, 1, 1.0);
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(n);
+        let res = cg(&a, &b, &CgOptions { tol: 1e-10, max_iter: 500, relative: true });
+        assert!(res.converged, "iterations={}", res.iterations);
+        let want = Cholesky::factor(&a).unwrap().solve(&b);
+        for i in 0..n {
+            assert!((res.x[i] - want[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn residuals_monotone_enough() {
+        // CG residuals are not strictly monotone but the final must be
+        // far below the initial.
+        let a = spd(30, 3, 0.5);
+        let mut rng = Rng::new(4);
+        let b = rng.normal_vec(30);
+        let res = cg(&a, &b, &CgOptions { tol: 1e-8, max_iter: 300, relative: true });
+        assert!(res.converged);
+        assert!(res.residuals.last().unwrap() / res.residuals[0] <= 1e-8);
+    }
+
+    #[test]
+    fn pcg_with_exact_inverse_converges_in_one() {
+        struct ExactInv {
+            ch: Cholesky,
+            ld: f64,
+        }
+        impl crate::solvers::Precond for ExactInv {
+            fn dim(&self) -> usize {
+                self.ch.n()
+            }
+            fn solve(&self, x: &[f64]) -> Vec<f64> {
+                self.ch.solve(x)
+            }
+            fn solve_lower(&self, x: &[f64]) -> Vec<f64> {
+                self.ch.solve_lower(x)
+            }
+            fn solve_upper(&self, x: &[f64]) -> Vec<f64> {
+                self.ch.solve_upper(x)
+            }
+            fn mul_upper(&self, x: &[f64]) -> Vec<f64> {
+                // Lᵀ x
+                let n = self.ch.n();
+                let mut y = vec![0.0; n];
+                for i in 0..n {
+                    for k in i..n {
+                        y[i] += self.ch.l[(k, i)] * x[k];
+                    }
+                }
+                y
+            }
+            fn logdet(&self) -> f64 {
+                self.ld
+            }
+        }
+        let a = spd(25, 5, 1.0);
+        let ch = Cholesky::factor(&a).unwrap();
+        let ld = ch.logdet();
+        let p = ExactInv { ch, ld };
+        let mut rng = Rng::new(6);
+        let b = rng.normal_vec(25);
+        let res = pcg(&a, &p, &b, &CgOptions { tol: 1e-10, max_iter: 10, relative: true });
+        assert!(res.converged);
+        assert!(res.iterations <= 2, "iterations={}", res.iterations);
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let a = spd(10, 7, 1.0);
+        let res = cg(&a, &vec![0.0; 10], &CgOptions::default());
+        assert!(res.converged);
+        assert_eq!(res.iterations, 0);
+        assert!(res.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_iter_respected() {
+        let a = spd(50, 8, 1e-6); // ill-conditioned
+        let mut rng = Rng::new(9);
+        let b = rng.normal_vec(50);
+        let res = cg(&a, &b, &CgOptions { tol: 1e-14, max_iter: 3, relative: true });
+        assert!(!res.converged);
+        assert_eq!(res.iterations, 3);
+    }
+}

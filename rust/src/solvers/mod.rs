@@ -1,0 +1,92 @@
+//! Iterative solvers: (preconditioned) CG, Lanczos, stochastic Lanczos
+//! quadrature, and the Hutchinson trace estimator (paper §1).
+
+pub mod cg;
+pub mod hutchinson;
+pub mod lanczos;
+pub mod slq;
+
+/// Abstract symmetric linear operator y = A x.
+pub trait LinOp: Sync {
+    fn dim(&self) -> usize;
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.dim()];
+        self.apply(x, &mut y);
+        y
+    }
+}
+
+/// Dense matrix as a LinOp.
+impl LinOp for crate::linalg::Matrix {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols);
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_into(x, y);
+    }
+}
+
+/// Symmetric preconditioner interface: y ≈ A⁻¹ x plus the split forms
+/// needed by preconditioned Lanczos (M = L Lᵀ).
+pub trait Precond: Sync {
+    fn dim(&self) -> usize;
+    /// y = M⁻¹ x.
+    fn solve(&self, x: &[f64]) -> Vec<f64>;
+    /// y = L⁻¹ x where M = L Lᵀ.
+    fn solve_lower(&self, x: &[f64]) -> Vec<f64>;
+    /// y = L⁻ᵀ x.
+    fn solve_upper(&self, x: &[f64]) -> Vec<f64>;
+    /// y = Lᵀ x.
+    fn mul_upper(&self, x: &[f64]) -> Vec<f64>;
+    /// log det M (exact).
+    fn logdet(&self) -> f64;
+}
+
+/// Identity preconditioner (turns PCG into plain CG, preconditioned SLQ
+/// into plain SLQ).
+pub struct IdentityPrecond(pub usize);
+
+impl Precond for IdentityPrecond {
+    fn dim(&self) -> usize {
+        self.0
+    }
+    fn solve(&self, x: &[f64]) -> Vec<f64> {
+        x.to_vec()
+    }
+    fn solve_lower(&self, x: &[f64]) -> Vec<f64> {
+        x.to_vec()
+    }
+    fn solve_upper(&self, x: &[f64]) -> Vec<f64> {
+        x.to_vec()
+    }
+    fn mul_upper(&self, x: &[f64]) -> Vec<f64> {
+        x.to_vec()
+    }
+    fn logdet(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn dense_linop() {
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let y = a.apply_vec(&[1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0]);
+        assert_eq!(a.dim(), 2);
+    }
+
+    #[test]
+    fn identity_precond() {
+        let p = IdentityPrecond(3);
+        assert_eq!(p.solve(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.logdet(), 0.0);
+    }
+}

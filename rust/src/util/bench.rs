@@ -1,0 +1,221 @@
+//! Criterion-style micro-bench harness (no `criterion` in the offline
+//! build). Used by `benches/*.rs` with `harness = false`.
+//!
+//! Each measurement warms up, collects wall-clock samples, and reports
+//! median / mean / MAD plus optional throughput. Results can be appended
+//! to a CSV so figure harnesses and the perf log share one format.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(1),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(300),
+            min_samples: 3,
+            max_samples: 30,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+    pub median: f64,
+    pub mean: f64,
+    pub mad: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchResult {
+    fn from_samples(name: &str, mut s: Vec<f64>) -> Self {
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let median = if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        };
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[n / 2];
+        Self {
+            name: name.to_string(),
+            median,
+            mean,
+            mad,
+            min: s[0],
+            max: s[n - 1],
+            samples: s,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12} mean {:>12} ±{:>10} ({} samples)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            fmt_duration(self.mad),
+            self.samples.len()
+        )
+    }
+
+    pub fn report_throughput(&self, items: f64, unit: &str) -> String {
+        format!(
+            "{} | {:.3e} {unit}/s",
+            self.report(),
+            items / self.median
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub struct Bencher {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Time `f()` repeatedly; returns and records the result.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.config.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iteration cost to size sample count.
+        let per_iter = (w0.elapsed().as_secs_f64() / warm_iters as f64).max(1e-9);
+        let wanted =
+            (self.config.target_time.as_secs_f64() / per_iter).ceil() as usize;
+        let nsamples = wanted
+            .clamp(self.config.min_samples, self.config.max_samples);
+        let mut samples = Vec::with_capacity(nsamples);
+        for _ in 0..nsamples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let res = BenchResult::from_samples(name, samples);
+        println!("{}", res.report());
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Write all recorded results to a CSV file under `results/`.
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut t = crate::util::csv::Table::with_cols(&[
+            "median_s", "mean_s", "mad_s", "min_s", "max_s", "samples",
+        ]);
+        // CSV is numeric-only; emit a sibling names file.
+        let mut names = String::new();
+        for r in &self.results {
+            t.push_row(&[
+                r.median,
+                r.mean,
+                r.mad,
+                r.min,
+                r.max,
+                r.samples.len() as f64,
+            ]);
+            names.push_str(&r.name);
+            names.push('\n');
+        }
+        t.save(path)?;
+        std::fs::write(path.with_extension("names.txt"), names)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(5),
+            target_time: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 50,
+        });
+        let r = b.bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.median > 0.0);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.samples.len() >= 3);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).contains("ns"));
+        assert!(fmt_duration(5e-6).contains("µs"));
+        assert!(fmt_duration(5e-3).contains("ms"));
+        assert!(fmt_duration(5.0).contains(" s"));
+    }
+
+    #[test]
+    fn median_of_even_samples() {
+        let r = BenchResult::from_samples("x", vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(r.median, 2.5);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 4.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Command-line argument parsing (no `clap` in the offline build).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional...]`,
+//! with typed accessors and "unknown flag" diagnostics against a declared
+//! flag set.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags listed in `boolean_flags` take no value;
+    /// every other `--key` consumes the next token as its value.
+    pub fn parse(argv: &[String], boolean_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if boolean_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if i + 1 < argv.len() {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env(boolean_flags: &[&str]) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, boolean_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list, e.g. `--ells 0.1,1,10`.
+    pub fn f64_list(&self, name: &str) -> Option<Vec<f64>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect()
+        })
+    }
+
+    /// Error if any provided option/flag is not in `known`.
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&argv("train --config c.json --iters 50 data.csv"), &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("c.json"));
+        assert_eq!(a.usize_or("iters", 0), 50);
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&argv("bench --full --n 10"), &["full"]);
+        assert!(a.has_flag("full"));
+        assert_eq!(a.usize_or("n", 0), 10);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv("x --ell=0.5 --name=abc"), &[]);
+        assert_eq!(a.f64_or("ell", 0.0), 0.5);
+        assert_eq!(a.str_or("name", ""), "abc");
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = Args::parse(&argv("x --ells 0.1,1,10"), &[]);
+        assert_eq!(a.f64_list("ells").unwrap(), vec![0.1, 1.0, 10.0]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&argv("x --verbose"), &[]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = Args::parse(&argv("x --bogus 1"), &[]);
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+}

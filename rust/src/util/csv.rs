@@ -1,0 +1,169 @@
+//! Tiny CSV reader/writer for datasets and experiment result series.
+//!
+//! Numeric-matrix oriented: a header row of column names followed by f64
+//! rows. Quoting is supported on read (for robustness), never needed on
+//! write since we only emit numbers and simple identifiers.
+
+use std::io::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    /// Row-major values, `rows.len() == nrows * columns.len()`.
+    pub values: Vec<f64>,
+}
+
+impl Table {
+    pub fn new(columns: Vec<String>) -> Self {
+        Self { columns, values: Vec::new() }
+    }
+
+    pub fn with_cols(cols: &[&str]) -> Self {
+        Self::new(cols.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn nrows(&self) -> usize {
+        if self.columns.is_empty() {
+            0
+        } else {
+            self.values.len() / self.columns.len()
+        }
+    }
+
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.ncols(), "row width mismatch");
+        self.values.extend_from_slice(row);
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        let w = self.ncols();
+        &self.values[r * w..(r + 1) * w]
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let j = self.col_index(name)?;
+        Some((0..self.nrows()).map(|r| self.row(r)[j]).collect())
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.columns.join(","))?;
+        for r in 0..self.nrows() {
+            let row: Vec<String> = self.row(r).iter().map(|v| format!("{v}")).collect();
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Table> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+        let columns: Vec<String> = split_csv_line(header)
+            .into_iter()
+            .map(|s| s.trim().to_string())
+            .collect();
+        let mut t = Table::new(columns);
+        for (lineno, line) in lines.enumerate() {
+            let fields = split_csv_line(line);
+            if fields.len() != t.ncols() {
+                anyhow::bail!(
+                    "csv row {} has {} fields, expected {}",
+                    lineno + 2,
+                    fields.len(),
+                    t.ncols()
+                );
+            }
+            for f in &fields {
+                let v: f64 = f.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("csv row {}: bad number {f:?}", lineno + 2)
+                })?;
+                t.values.push(v);
+            }
+        }
+        Ok(t)
+    }
+}
+
+/// Split one CSV line honoring double-quoted fields.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                if in_quotes && chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = !in_quotes;
+                }
+            }
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::with_cols(&["x", "y", "z"]);
+        t.push_row(&[1.0, 2.5, -3.0]);
+        t.push_row(&[4.0, 5.0, 6.0]);
+        let dir = std::env::temp_dir().join("fgp_csv_test");
+        let path = dir.join("t.csv");
+        t.save(&path).unwrap();
+        let u = Table::load(&path).unwrap();
+        assert_eq!(u.columns, t.columns);
+        assert_eq!(u.values, t.values);
+        assert_eq!(u.nrows(), 2);
+        assert_eq!(u.column("y").unwrap(), vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let t = Table::parse("\"a\",b\n1,2\n3,4\n").unwrap();
+        assert_eq!(t.columns, vec!["a", "b"]);
+        assert_eq!(t.nrows(), 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(Table::parse("a,b\n1,2,3\n").is_err());
+        assert!(Table::parse("a,b\n1,x\n").is_err());
+    }
+
+    #[test]
+    fn empty_lines_skipped() {
+        let t = Table::parse("a,b\n\n1,2\n\n").unwrap();
+        assert_eq!(t.nrows(), 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Infrastructure substrates built in-repo (no external crates available
+//! offline): RNG, JSON, CSV, CLI parsing, logging, threading, bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod parallel;
+pub mod rng;
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (unbiased).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Root-mean-square error between predictions and targets.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let s: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// log-spaced grid of `n` points between `lo` and `hi` (inclusive).
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && n >= 2);
+    let (a, b) = (lo.ln(), hi.ln());
+    (0..n)
+        .map(|i| (a + (b - a) * i as f64 / (n - 1) as f64).exp())
+        .collect()
+}
+
+/// linearly spaced grid.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grids() {
+        let g = logspace(0.1, 10.0, 3);
+        assert!((g[0] - 0.1).abs() < 1e-12);
+        assert!((g[1] - 1.0).abs() < 1e-12);
+        assert!((g[2] - 10.0).abs() < 1e-12);
+        let l = linspace(0.0, 1.0, 5);
+        assert_eq!(l, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Minimal data-parallel primitives over `std::thread::scope`.
+//!
+//! The offline build has no `rayon`; the coordinator's hot loops (per-window
+//! kernel MVMs, dense Gram tiles, spreading) only need chunked
+//! parallel-for / parallel-map over index ranges, which scoped threads
+//! provide with no unsafe code and no persistent pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (respects `FGP_THREADS`).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("FGP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i` in `0..n`, work-stealing over blocks.
+///
+/// `f` must be `Sync` (called concurrently from many threads).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // Dynamic block scheduling: threads grab blocks of indices.
+    let block = (n / (nt * 8)).max(1);
+    let counter = AtomicUsize::new(0);
+    let fr = &f;
+    let cr = &counter;
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(move || loop {
+                let start = cr.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                for i in start..end {
+                    fr(i);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(chunk_index, start, end)` over `nchunks` contiguous chunks of `0..n`.
+pub fn parallel_chunks<F: Fn(usize, usize, usize) + Sync>(n: usize, nchunks: usize, f: F) {
+    let nchunks = nchunks.max(1).min(n.max(1));
+    let fr = &f;
+    if nchunks == 1 {
+        fr(0, 0, n);
+        return;
+    }
+    let per = n.div_ceil(nchunks);
+    std::thread::scope(|s| {
+        for c in 0..nchunks {
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            if start >= end {
+                break;
+            }
+            s.spawn(move || fr(c, start, end));
+        }
+    });
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>`.
+pub fn parallel_map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    f: F,
+) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    let nt = num_threads().min(n.max(1));
+    let fr = &f;
+    if nt <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = fr(i);
+        }
+        return out;
+    }
+    let per = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (band, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let b = base;
+            s.spawn(move || {
+                for (k, slot) in band.iter_mut().enumerate() {
+                    *slot = fr(b + k);
+                }
+            });
+            base += take;
+        }
+    });
+    out
+}
+
+/// Mutate disjoint row-slices of a flat buffer in parallel:
+/// `f(row_index, row_slice)` over `rows` rows of width `width`.
+pub fn parallel_rows<F: Fn(usize, &mut [f64]) + Sync>(
+    buf: &mut [f64],
+    rows: usize,
+    width: usize,
+    f: F,
+) {
+    assert_eq!(buf.len(), rows * width);
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        for (r, row) in buf.chunks_mut(width).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let fr = &f;
+    std::thread::scope(|s| {
+        // Split the buffer into `nt` contiguous row-bands.
+        let per = rows.div_ceil(nt);
+        let mut rest = buf;
+        let mut row0 = 0usize;
+        for _ in 0..nt {
+            let take = per.min(rest.len() / width);
+            if take == 0 {
+                break;
+            }
+            let (band, tail) = rest.split_at_mut(take * width);
+            rest = tail;
+            let base = row0;
+            s.spawn(move || {
+                for (k, row) in band.chunks_mut(width).enumerate() {
+                    fr(base + k, row);
+                }
+            });
+            row0 += take;
+        }
+    });
+}
+
+/// Parallel sum-reduction of `f(i)` over `0..n`.
+pub fn parallel_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 {
+        return (0..n).map(f).sum();
+    }
+    let fr = &f;
+    let mut partials = vec![0.0f64; nt];
+    {
+        let slots: Vec<std::sync::Mutex<&mut f64>> =
+            partials.iter_mut().map(std::sync::Mutex::new).collect();
+        let slots_ref = &slots;
+        let per = n.div_ceil(nt);
+        std::thread::scope(|s| {
+            for c in 0..nt {
+                let start = c * per;
+                let end = ((c + 1) * per).min(n);
+                if start >= end {
+                    break;
+                }
+                s.spawn(move || {
+                    let mut acc = 0.0;
+                    for i in start..end {
+                        acc += fr(i);
+                    }
+                    **slots_ref[c].lock().unwrap() = acc;
+                });
+            }
+        });
+    }
+    partials.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(257, |i| (i * i) as f64);
+        let want: Vec<f64> = (0..257).map(|i| (i * i) as f64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_rows_disjoint_writes() {
+        let rows = 33;
+        let width = 17;
+        let mut buf = vec![0.0; rows * width];
+        parallel_rows(&mut buf, rows, width, |r, row| {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (r * width + c) as f64;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let got = parallel_sum(10_001, |i| i as f64);
+        assert_eq!(got, (10_000.0 * 10_001.0) / 2.0);
+    }
+
+    #[test]
+    fn parallel_chunks_partition() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(100, 7, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_for(0, |_| panic!("must not run"));
+        let mut ran = false;
+        // n=1 runs inline.
+        parallel_for(1, |i| {
+            assert_eq!(i, 0);
+        });
+        parallel_chunks(0, 4, |_, _, _| {});
+        let _ = &mut ran;
+    }
+}
