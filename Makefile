@@ -1,0 +1,28 @@
+# fourier-gp developer targets. `make test` is the tier-1 gate
+# (see ROADMAP.md); `make bench-mvm` tracks the MVM perf trajectory in
+# BENCH_mvm.json from PR 1 onward.
+
+CARGO ?= cargo
+
+.PHONY: all fmt clippy test bench-mvm python-test
+
+all: test
+
+fmt:
+	$(CARGO) fmt
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+# Batch-size sweep (1/4/16 × n sweep) + NLL/gradient operator-traversal
+# accounting; writes BENCH_mvm.json in the repo root and results/*.csv.
+# FGP_FULL=1 extends the n sweep to paper scale.
+bench-mvm:
+	$(CARGO) bench --bench bench_mvm
+
+python-test:
+	cd python && python -m pytest -q tests

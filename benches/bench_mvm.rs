@@ -1,16 +1,133 @@
 //! Headline complexity micro-bench: exact O(n²) vs NFFT O(n log n)
-//! sub-kernel MVM, plus the per-component NFFT cost split (spread /
-//! FFT / gather is implicit in the plan; we time plan construction and
-//! apply separately).
+//! sub-kernel MVM, the plan-build/apply split, and — since the batched
+//! multi-RHS refactor — a batch-size sweep (1/4/16 columns × n sweep)
+//! plus the operator-traversal accounting for one NLL+gradient step.
+//! Writes `BENCH_mvm.json` so the perf trajectory is tracked across PRs.
 
 use fourier_gp::coordinator::experiments::mvm_scaling;
-use fourier_gp::coordinator::mvm::{NfftRustMvm, SubKernelMvm};
-use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::coordinator::mvm::{build_sub_mvm, EngineKind, NfftRustMvm, SubKernelMvm};
+use fourier_gp::coordinator::operator::KernelOperator;
+use fourier_gp::gp::nll::{estimate_nll_grad, NllOptions};
+use fourier_gp::kernels::additive::{WindowedPoints, Windows};
 use fourier_gp::kernels::KernelFn;
 use fourier_gp::linalg::Matrix;
 use fourier_gp::nfft::NfftParams;
 use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::util::json::Json;
 use fourier_gp::util::rng::Rng;
+
+/// Best-of-`reps` wall clock of `f`.
+fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Batch-size sweep: per-column cost of the batched NFFT apply vs the same
+/// number of single applies, per n. Returns one JSON record per (n, batch).
+fn batch_sweep(sizes: &[usize], batches: &[usize]) -> Vec<Json> {
+    println!("=== batch sweep: NFFT apply, batch 1/4/16 per n ===");
+    let mut records = Vec::new();
+    for &n in sizes {
+        let mut rng = Rng::new(n as u64 ^ 0xbeef);
+        let mut x = Matrix::zeros(n, 2);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 10.0);
+        }
+        let wp = WindowedPoints::extract(&x, &[0, 1]);
+        let engine =
+            NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+        let maxb = batches.iter().copied().max().unwrap_or(1);
+        let mut vblock = Matrix::zeros(maxb, n);
+        for r in 0..maxb {
+            vblock.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        let reps = if n <= 20_000 { 5 } else { 3 };
+        // Reference: b single applies, the pre-batching cost model.
+        let t_single = best_of(reps, || {
+            black_box(engine.apply(vblock.row(0), false));
+        });
+        for &b in batches {
+            let vb = Matrix {
+                rows: b,
+                cols: n,
+                data: vblock.data[..b * n].to_vec(),
+            };
+            let t_batch = best_of(reps, || {
+                black_box(engine.apply_batch(&vb, false));
+            });
+            let per_col = t_batch / b as f64;
+            let speedup = t_single / per_col;
+            println!(
+                "  n={n:7} batch={b:3}  batched={t_batch:9.5}s  per-col={per_col:9.5}s  \
+                 speedup-per-col={speedup:6.2}x (single apply {t_single:9.5}s)"
+            );
+            records.push(Json::obj(vec![
+                ("engine", Json::Str("nfft-rust".into())),
+                ("n", Json::Num(n as f64)),
+                ("batch", Json::Num(b as f64)),
+                ("seconds_batch", Json::Num(t_batch)),
+                ("seconds_per_column", Json::Num(per_col)),
+                ("seconds_single_apply", Json::Num(t_single)),
+                ("speedup_per_column_vs_single", Json::Num(speedup)),
+            ]));
+        }
+    }
+    records
+}
+
+/// Operator accounting for one full NLL+gradient evaluation through the
+/// batched pipeline. The seed's serial path paid one window traversal per
+/// applied column (traversals == columns); the batched path must do the
+/// same column work in far fewer traversals.
+fn nll_grad_accounting(n: usize) -> Json {
+    println!("=== NLL+gradient operator accounting (n={n}) ===");
+    let mut rng = Rng::new(42);
+    let mut x = Matrix::zeros(n, 4);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 3.0);
+    }
+    let y = rng.normal_vec(n);
+    let windows = Windows(vec![vec![0, 1], vec![2, 3]]);
+    let subs = windows
+        .0
+        .iter()
+        .map(|w| {
+            build_sub_mvm(
+                EngineKind::NfftRust,
+                KernelFn::Gaussian,
+                WindowedPoints::extract(&x, w),
+                1.0,
+                None,
+            )
+        })
+        .collect();
+    let op = KernelOperator::new(subs, 0.5, 0.05);
+    let opts = NllOptions::default();
+    let t0 = std::time::Instant::now();
+    let (nll, _grad) = estimate_nll_grad(&op, None, &y, &opts);
+    let secs = t0.elapsed().as_secs_f64();
+    let columns = op.mvms_performed();
+    let traversals = op.traversals_performed();
+    println!(
+        "  columns applied = {columns}, traversals = {traversals} \
+         (seed-equivalent serial path: {columns} traversals), {secs:.3}s, Z̃={:.3}",
+        nll.value
+    );
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("num_probes", Json::Num(opts.num_probes as f64)),
+        ("train_cg_iters", Json::Num(opts.train_cg_iters as f64)),
+        ("columns_applied", Json::Num(columns as f64)),
+        ("operator_traversals", Json::Num(traversals as f64)),
+        ("seed_equivalent_traversals", Json::Num(columns as f64)),
+        ("seconds", Json::Num(secs)),
+    ])
+}
 
 fn main() {
     let full = fourier_gp::coordinator::experiments::full_scale();
@@ -47,4 +164,20 @@ fn main() {
         black_box(engine.apply(&v, true));
     });
     b.save_csv(std::path::Path::new("results/bench_mvm.csv")).ok();
+
+    // Batched multi-RHS sweep + NLL/gradient traversal accounting.
+    let batch_ns: Vec<usize> = if full {
+        vec![4000, 16000, 64000]
+    } else {
+        vec![4000, 16000]
+    };
+    let sweep = batch_sweep(&batch_ns, &[1, 4, 16]);
+    let accounting = nll_grad_accounting(if full { 8000 } else { 2000 });
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("mvm".into())),
+        ("batch_sweep", Json::Arr(sweep)),
+        ("nll_grad", accounting),
+    ]);
+    std::fs::write("BENCH_mvm.json", doc.to_string_pretty()).expect("write BENCH_mvm.json");
+    println!("wrote BENCH_mvm.json");
 }

@@ -8,7 +8,7 @@ import pytest
 
 jax.config.update("jax_enable_x64", True)
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.ref import dense_mvm_ref, kb_phi_ref
 from compile.kernels.nfft_kernels import kb_phihat, nfft_weights

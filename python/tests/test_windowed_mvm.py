@@ -6,7 +6,7 @@ import pytest
 
 jax.config.update("jax_enable_x64", True)
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels.ref import dense_mvm_ref
 from compile.model import exact_mvm_fn

@@ -7,8 +7,9 @@
 //! unchanged, and derivative outputs are multiplied by the chain-rule
 //! factor c (∂/∂ℓ κ(cr/(cℓ)) = c · κ_der evaluated in scaled coordinates).
 
-use crate::kernels::additive::{dense_mvm, WindowedPoints};
+use crate::kernels::additive::{dense_mvm, dense_mvm_batch, WindowedPoints};
 use crate::kernels::KernelFn;
+use crate::linalg::Matrix;
 use crate::nfft::{Fastsum, NfftParams};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +48,26 @@ pub trait SubKernelMvm: Send + Sync {
     fn apply(&self, v: &[f64], deriv: bool) -> Vec<f64>;
     /// Update the length-scale (original coordinates).
     fn set_ell(&mut self, ell: f64);
+
+    /// Batched apply over an RHS block (one vector per row of `v`, see
+    /// `solvers` module docs). Default: column loop. Engines override this
+    /// to traverse their structure once per block — the dense engine shares
+    /// each kernel evaluation across columns, the NFFT engine shares its
+    /// spreading geometry and batches the transforms.
+    fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let mut out = Matrix::zeros(v.rows, v.cols);
+        for r in 0..v.rows {
+            out.row_mut(r).copy_from_slice(&self.apply(v.row(r), deriv));
+        }
+        out
+    }
+
+    /// Fused (K_s V, (∂K_s/∂ℓ) V) over one RHS block. Default: two batched
+    /// applies; the NFFT engine overrides it to share one adjoint transform
+    /// between the kernel and derivative products (§3.2 consistency).
+    fn apply_batch_pair(&self, v: &Matrix) -> (Matrix, Matrix) {
+        (self.apply_batch(v, false), self.apply_batch(v, true))
+    }
 }
 
 /// Exact tiled dense MVM (never materializes K_s).
@@ -73,6 +94,11 @@ impl SubKernelMvm for ExactRustMvm {
     }
     fn set_ell(&mut self, ell: f64) {
         self.ell = ell;
+    }
+    fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let mut out = Matrix::zeros(v.rows, v.cols);
+        dense_mvm_batch(self.kernel, &self.wp, self.ell, v, deriv, &mut out);
+        out
     }
 }
 
@@ -111,6 +137,22 @@ impl SubKernelMvm for NfftRustMvm {
     }
     fn set_ell(&mut self, ell: f64) {
         self.fastsum.set_ell(ell * self.scale);
+    }
+    fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let mut out = self.fastsum.apply_batch(v, deriv);
+        if deriv {
+            for o in &mut out.data {
+                *o *= self.scale;
+            }
+        }
+        out
+    }
+    fn apply_batch_pair(&self, v: &Matrix) -> (Matrix, Matrix) {
+        let (k, mut d) = self.fastsum.apply_batch_pair(v);
+        for o in &mut d.data {
+            *o *= self.scale;
+        }
+        (k, d)
     }
 }
 
@@ -223,6 +265,77 @@ mod tests {
         for i in 0..150 {
             assert!((a[i] - b[i]).abs() < 5e-3 * v1, "i={i}");
         }
+    }
+
+    /// Property: for every pure-rust engine, `apply_batch` must equal the
+    /// column-by-column `apply`, and the fused pair must equal the two
+    /// separate batched products (kernel and ℓ-derivative).
+    #[test]
+    fn apply_batch_equals_column_loop_for_every_engine() {
+        let points = wp(180, 2, 11, 0.0, 6.0);
+        let ell = 1.2;
+        let mut rng = Rng::new(12);
+        let nb = 6;
+        let mut v = Matrix::zeros(nb, 180);
+        for r in 0..nb {
+            v.row_mut(r).copy_from_slice(&rng.normal_vec(180));
+        }
+        let engines: Vec<(&str, Box<dyn SubKernelMvm>)> = vec![
+            (
+                "exact-rust",
+                Box::new(ExactRustMvm::new(KernelFn::Gaussian, points.clone(), ell)),
+            ),
+            (
+                "nfft-rust",
+                Box::new(NfftRustMvm::new(
+                    KernelFn::Gaussian,
+                    &points,
+                    ell,
+                    NfftParams::default_for_dim(2),
+                )),
+            ),
+        ];
+        for (name, engine) in &engines {
+            for deriv in [false, true] {
+                let batch = engine.apply_batch(&v, deriv);
+                for r in 0..nb {
+                    let single = engine.apply(v.row(r), deriv);
+                    for i in 0..180 {
+                        assert!(
+                            (batch[(r, i)] - single[i]).abs() < 1e-10,
+                            "{name} deriv={deriv} r={r} i={i}: {} vs {}",
+                            batch[(r, i)],
+                            single[i]
+                        );
+                    }
+                }
+            }
+            let (pk, pd) = engine.apply_batch_pair(&v);
+            let wk = engine.apply_batch(&v, false);
+            let wd = engine.apply_batch(&v, true);
+            for r in 0..nb {
+                for i in 0..180 {
+                    assert!((pk[(r, i)] - wk[(r, i)]).abs() < 1e-10, "{name} pair-k");
+                    assert!((pd[(r, i)] - wd[(r, i)]).abs() < 1e-10, "{name} pair-d");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_batch_single_row_and_empty() {
+        let points = wp(60, 1, 13, 0.0, 2.0);
+        let engine = ExactRustMvm::new(KernelFn::Matern12, points, 0.7);
+        let mut rng = Rng::new(14);
+        let mut v = Matrix::zeros(1, 60);
+        v.row_mut(0).copy_from_slice(&rng.normal_vec(60));
+        let batch = engine.apply_batch(&v, false);
+        let single = engine.apply(v.row(0), false);
+        for i in 0..60 {
+            assert!((batch[(0, i)] - single[i]).abs() < 1e-12);
+        }
+        let empty = engine.apply_batch(&Matrix::zeros(0, 60), true);
+        assert_eq!(empty.rows, 0);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use super::adam::Adam;
 use super::hyper::{Hyper, RawHyper};
-use super::nll::{estimate_grad, estimate_nll, NllOptions};
+use super::nll::{estimate_nll_grad, NllOptions};
 use crate::coordinator::mvm::{build_sub_mvm, EngineKind, SubKernelMvm};
 use crate::coordinator::operator::KernelOperator;
 use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
@@ -155,8 +155,8 @@ impl GpModel {
             let pref: Option<&dyn Precond> = precond.as_deref();
             let mut nll_opts = cfg.nll.clone();
             nll_opts.seed = cfg.nll.seed.wrapping_add(it as u64);
-            let nll = estimate_nll(&op, pref, y, &nll_opts);
-            let g = estimate_grad(&op, pref, &nll.alpha, &nll_opts);
+            // One block solve serves α and every gradient trace probe.
+            let (nll, g) = estimate_nll_grad(&op, pref, y, &nll_opts);
             // Chain rule through softplus.
             let jac = raw.jacobian();
             let grad_raw = [g.grad[0] * jac[0], g.grad[1] * jac[1], g.grad[2] * jac[2]];

@@ -8,13 +8,24 @@
 //! where the trace uses Hutchinson probes with the PCG solve shared across
 //! the three hyperparameters (∂K̂ is symmetric, so zᵀK̂⁻¹∂K̂z =
 //! (K̂⁻¹z)ᵀ(∂K̂ z)).
+//!
+//! Everything in this module runs through the batched operator pathway:
+//! the α RHS and all probes form one RHS block, [`pcg_batch`] solves them
+//! in a single sweep (one operator traversal per CG iteration), the SLQ
+//! probes share each Lanczos step, and the gradient's kernel + derivative
+//! products come from ONE fused traversal of [α | Z] — per evaluation the
+//! operator walks its windows O(iters + steps + 1) times instead of
+//! O((iters + steps + MVMs) · probes) as the serial path did.
 
 use crate::coordinator::operator::KernelOperator;
-use crate::linalg::dot;
-use crate::solvers::cg::{pcg, CgOptions, CgResult};
+use crate::linalg::{dot, Matrix};
+use crate::solvers::cg::{pcg, pcg_batch, CgOptions, CgResult};
 use crate::solvers::slq::{slq_logdet, slq_logdet_precond, SlqOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
-use crate::util::rng::Rng;
+
+/// Stream offset separating gradient probes from SLQ probes (seed path
+/// preserved from the original serial implementation).
+const GRAD_PROBE_SEED_OFFSET: u64 = 0x9e37_79b9;
 
 #[derive(Clone, Debug)]
 pub struct NllOptions {
@@ -90,7 +101,69 @@ pub struct GradEstimate {
     pub trace_variance: [f64; 3],
 }
 
-/// Estimate the gradient (eq. (1.5)) given α from the NLL solve.
+/// The gradient probe block Z (same draws as the original serial
+/// implementation, which split a stream off `seed + 0x9e3779b9`).
+fn grad_probe_block(n: usize, num_probes: usize, seed: u64) -> Matrix {
+    crate::solvers::slq::probe_block(n, num_probes, seed.wrapping_add(GRAD_PROBE_SEED_OFFSET))
+}
+
+/// Assemble the gradient from the probe block `z` and its solves
+/// `s = K̂⁻¹Z` (row-per-probe). ONE fused traversal of [α | Z] delivers
+/// the kernel and ℓ-derivative products for both the quadratic terms
+/// −αᵀ∂K̂α and every Hutchinson trace sample (K̂⁻¹z)ᵀ(∂K̂ z); the σ_f and
+/// σ_ε directions are diagonal rescalings of those same products.
+fn assemble_grad(
+    op: &KernelOperator,
+    alpha: &[f64],
+    z: &Matrix,
+    s: &Matrix,
+) -> GradEstimate {
+    let n = op.dim();
+    let t = z.rows;
+    assert_eq!(s.rows, t);
+    let mut block = Matrix::zeros(t + 1, n);
+    block.row_mut(0).copy_from_slice(alpha);
+    for i in 0..t {
+        block.row_mut(i + 1).copy_from_slice(z.row(i));
+    }
+    let (kb, db) = op.kernel_and_deriv_mvm_batch(&block);
+    // ∂K̂/∂σ_f v = (2/σ_f)·σ_f²ΣK_s v — identically zero at σ_f = 0 (the
+    // same guard as KernelOperator::deriv_sigma_f_mvm).
+    let sf_scale = if op.sigma_f2 == 0.0 {
+        0.0
+    } else {
+        2.0 / op.sigma_f2.sqrt()
+    };
+    let two_se = 2.0 * op.sigma_eps2.sqrt();
+    let quad = [
+        sf_scale * dot(alpha, kb.row(0)),
+        dot(alpha, db.row(0)),
+        two_se * dot(alpha, alpha),
+    ];
+    let mut samples = [
+        Vec::with_capacity(t),
+        Vec::with_capacity(t),
+        Vec::with_capacity(t),
+    ];
+    for i in 0..t {
+        let si = s.row(i);
+        samples[0].push(sf_scale * dot(si, kb.row(i + 1)));
+        samples[1].push(dot(si, db.row(i + 1)));
+        samples[2].push(two_se * dot(si, z.row(i)));
+    }
+    let mut grad = [0.0; 3];
+    let mut var = [0.0; 3];
+    for j in 0..3 {
+        let tr = crate::util::mean(&samples[j]);
+        var[j] = crate::util::variance(&samples[j]);
+        grad[j] = 0.5 * (-quad[j] + tr);
+    }
+    GradEstimate { grad, trace_variance: var }
+}
+
+/// Estimate the gradient (eq. (1.5)) given α from the NLL solve. All probe
+/// solves run as one block PCG; the derivative products come from one
+/// fused batched traversal.
 pub fn estimate_grad(
     op: &KernelOperator,
     precond: Option<&dyn Precond>,
@@ -105,35 +178,66 @@ pub fn estimate_grad(
         max_iter: opts.train_cg_iters,
         relative: true,
     };
+    let z = grad_probe_block(n, opts.num_probes, opts.seed);
+    let sol = pcg_batch(op, m, &z, &cg_opts);
+    assemble_grad(op, alpha, &z, &sol.x)
+}
 
-    // Quadratic terms −αᵀ ∂K̂ α.
-    let d_ell = op.deriv_ell_mvm(alpha);
-    let d_sf = op.deriv_sigma_f_mvm(alpha);
-    let d_se = op.deriv_sigma_eps_mvm(alpha);
-    let quad = [dot(alpha, &d_sf), dot(alpha, &d_ell), dot(alpha, &d_se)];
-
-    // Hutchinson: tr(K̂⁻¹∂K̂) with one PCG solve per probe shared by the
-    // three parameter directions.
-    let mut rng = Rng::new(opts.seed.wrapping_add(0x9e37_79b9));
-    let mut samples = [vec![], vec![], vec![]];
-    for i in 0..opts.num_probes {
-        let z = rng.split(i as u64).rademacher_vec(n);
-        let s = pcg(op, m, &z, &cg_opts).x; // K̂⁻¹ z
-        let dz_sf = op.deriv_sigma_f_mvm(&z);
-        let dz_ell = op.deriv_ell_mvm(&z);
-        let dz_se = op.deriv_sigma_eps_mvm(&z);
-        samples[0].push(dot(&s, &dz_sf));
-        samples[1].push(dot(&s, &dz_ell));
-        samples[2].push(dot(&s, &dz_se));
+/// One full objective + gradient evaluation through a SINGLE block solve:
+/// K̂⁻¹[Y | Z₁ … Z_t] in one `pcg_batch` sweep serves the α term of Z̃ and
+/// every Hutchinson trace probe, the SLQ probes share each batched Lanczos
+/// step, and the derivative products come from one fused traversal of
+/// [α | Z]. This is the per-Adam-step entry point (`GpModel::fit`).
+pub fn estimate_nll_grad(
+    op: &KernelOperator,
+    precond: Option<&dyn Precond>,
+    y: &[f64],
+    opts: &NllOptions,
+) -> (NllEstimate, GradEstimate) {
+    let n = op.dim();
+    assert_eq!(y.len(), n);
+    let identity = IdentityPrecond(n);
+    let m: &dyn Precond = precond.unwrap_or(&identity);
+    let cg_opts = CgOptions {
+        tol: opts.cg_tol,
+        max_iter: opts.train_cg_iters,
+        relative: true,
+    };
+    // Block solve: α RHS in row 0, gradient probes behind it.
+    let z = grad_probe_block(n, opts.num_probes, opts.seed);
+    let mut rhs = Matrix::zeros(1 + z.rows, n);
+    rhs.row_mut(0).copy_from_slice(y);
+    for i in 0..z.rows {
+        rhs.row_mut(1 + i).copy_from_slice(z.row(i));
     }
-    let mut grad = [0.0; 3];
-    let mut var = [0.0; 3];
-    for j in 0..3 {
-        let tr = crate::util::mean(&samples[j]);
-        var[j] = crate::util::variance(&samples[j]);
-        grad[j] = 0.5 * (-quad[j] + tr);
+    let sol = pcg_batch(op, m, &rhs, &cg_opts);
+    let alpha = sol.x.row(0).to_vec();
+    let mut s = Matrix::zeros(z.rows, n);
+    for i in 0..z.rows {
+        s.row_mut(i).copy_from_slice(sol.x.row(1 + i));
     }
-    GradEstimate { grad, trace_variance: var }
+    // Log-determinant by (preconditioned) SLQ, batched across probes.
+    let slq_opts = SlqOptions {
+        num_probes: opts.num_probes,
+        steps: opts.slq_steps,
+        seed: opts.seed,
+        reorth: true,
+    };
+    let est = match precond {
+        Some(p) => slq_logdet_precond(op, p, &slq_opts),
+        None => slq_logdet(op, &slq_opts),
+    };
+    let value = 0.5
+        * (dot(y, &alpha) + est.mean + n as f64 * (2.0 * std::f64::consts::PI).ln());
+    let grad = assemble_grad(op, &alpha, &z, &s);
+    let nll = NllEstimate {
+        value,
+        logdet: est.mean,
+        logdet_variance: est.variance,
+        alpha,
+        cg_iterations: sol.iterations[0],
+    };
+    (nll, grad)
 }
 
 #[cfg(test)]
@@ -144,6 +248,7 @@ mod tests {
     use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
     use crate::kernels::KernelFn;
     use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
 
     fn setup(n: usize, seed: u64, ell: f64, sf2: f64, se2: f64) -> (KernelOperator, Matrix, AdditiveKernel, Vec<f64>) {
         let mut rng = Rng::new(seed);
@@ -221,6 +326,43 @@ mod tests {
                 want[j]
             );
         }
+    }
+
+    #[test]
+    fn combined_nll_grad_matches_separate_calls_and_saves_traversals() {
+        let n = 60;
+        let (op, _x, _ak, y) = setup(n, 7, 0.8, 0.5, 0.2);
+        let opts = NllOptions {
+            train_cg_iters: 25,
+            num_probes: 6,
+            slq_steps: 10,
+            cg_tol: 1e-10,
+            seed: 5,
+        };
+        let (nll, grad) = estimate_nll_grad(&op, None, &y, &opts);
+        let nll2 = estimate_nll(&op, None, &y, &opts);
+        let grad2 = estimate_grad(&op, None, &nll2.alpha, &opts);
+        assert!(
+            (nll.value - nll2.value).abs() < 1e-8 * nll2.value.abs().max(1.0),
+            "{} vs {}",
+            nll.value,
+            nll2.value
+        );
+        for j in 0..3 {
+            assert!(
+                (grad.grad[j] - grad2.grad[j]).abs()
+                    < 1e-6 * grad2.grad[j].abs().max(1.0),
+                "param {j}: {} vs {}",
+                grad.grad[j],
+                grad2.grad[j]
+            );
+        }
+        // The batched pipeline must walk the window structure far fewer
+        // times than it multiplies columns — the seed's serial path paid
+        // one traversal per column.
+        let trav = op.traversals_performed();
+        let cols = op.mvms_performed();
+        assert!(trav < cols, "traversals {trav} not below column count {cols}");
     }
 
     #[test]

@@ -290,6 +290,74 @@ pub fn dense_mvm(
     });
 }
 
+/// Tiled exact batch MVM: `out` row r = K_s · (row r of `v`) for every row
+/// of the b×n RHS block. Each kernel entry k_ij — the expensive part — is
+/// evaluated ONCE and reused across all b columns, so throughput per column
+/// grows with the batch until the memory-bound v/out traffic dominates.
+/// Per column the accumulation order matches [`dense_mvm`].
+pub fn dense_mvm_batch(
+    kernel: KernelFn,
+    wp: &WindowedPoints,
+    ell: f64,
+    v: &Matrix,
+    deriv: bool,
+    out: &mut Matrix,
+) {
+    let n = wp.n;
+    assert_eq!(v.cols, n);
+    assert_eq!(out.cols, n);
+    assert_eq!(out.rows, v.rows);
+    let nb = v.rows;
+    if nb == 0 {
+        return;
+    }
+    let d = wp.d;
+    let pts = &wp.pts;
+    // Transpose the RHS block so the inner per-source loop reads the batch
+    // coefficients contiguously (vt row j = all columns' v_j).
+    let vt = v.transpose();
+    // Accumulate per target point (row i of the n×b scratch), then
+    // transpose back into the row-per-vector output layout.
+    let mut tmp = Matrix::zeros(n, nb);
+    parallel::parallel_rows(&mut tmp.data, n, nb, |i, acc| {
+        let pi = &pts[i * d..(i + 1) * d];
+        match (kernel, deriv) {
+            // Specialized Gaussian path, matching dense_mvm.
+            (KernelFn::Gaussian, false) => {
+                let inv2 = 1.0 / (2.0 * ell * ell);
+                for j in 0..n {
+                    let pj = &pts[j * d..(j + 1) * d];
+                    let kij = (-crate::linalg::dist2(pi, pj) * inv2).exp();
+                    let vrow = vt.row(j);
+                    for (a, vj) in acc.iter_mut().zip(vrow) {
+                        *a += vj * kij;
+                    }
+                }
+            }
+            _ => {
+                for j in 0..n {
+                    let pj = &pts[j * d..(j + 1) * d];
+                    let r2 = crate::linalg::dist2(pi, pj);
+                    let kij = if deriv {
+                        kernel.deriv_ell_r2(r2, ell)
+                    } else {
+                        kernel.eval_r2(r2, ell)
+                    };
+                    let vrow = vt.row(j);
+                    for (a, vj) in acc.iter_mut().zip(vrow) {
+                        *a += vj * kij;
+                    }
+                }
+            }
+        }
+    });
+    for r in 0..nb {
+        for i in 0..n {
+            out[(r, i)] = tmp[(i, r)];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -374,6 +442,34 @@ mod tests {
                         (got[i] - want[i]).abs() < 1e-11,
                         "{kernel:?} deriv={deriv} i={i}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mvm_batch_matches_column_loop() {
+        let x = random_points(48, 5, 7);
+        let mut rng = Rng::new(8);
+        let nb = 5;
+        let mut v = Matrix::zeros(nb, 48);
+        for r in 0..nb {
+            v.row_mut(r).copy_from_slice(&rng.normal_vec(48));
+        }
+        for kernel in [KernelFn::Gaussian, KernelFn::Matern12] {
+            for deriv in [false, true] {
+                let wp = WindowedPoints::extract(&x, &[0, 3]);
+                let mut batch = Matrix::zeros(nb, 48);
+                dense_mvm_batch(kernel, &wp, 0.6, &v, deriv, &mut batch);
+                for r in 0..nb {
+                    let mut single = vec![0.0; 48];
+                    dense_mvm(kernel, &wp, 0.6, v.row(r), deriv, &mut single);
+                    for i in 0..48 {
+                        assert!(
+                            (batch[(r, i)] - single[i]).abs() < 1e-12,
+                            "{kernel:?} deriv={deriv} r={r} i={i}"
+                        );
+                    }
                 }
             }
         }

@@ -17,6 +17,8 @@
 use super::plan::{NfftParams, NfftPlan};
 use crate::fft::{fftn, Complex};
 use crate::kernels::KernelFn;
+use crate::linalg::Matrix;
+use crate::util::parallel;
 
 /// Fast summation plan for one windowed sub-kernel over a fixed point set
 /// (sources == targets; see [`FastsumCross`] for prediction).
@@ -101,6 +103,97 @@ impl Fastsum {
         }
         let h = self.plan.trafo(&ghat);
         h.into_iter().map(|c| c.re).collect()
+    }
+
+    /// Batched fast summation over an RHS block (one vector per row of
+    /// `v`): every column reuses this plan's spreading geometry and FFT
+    /// tables, and the columns run in parallel. Per column the pipeline is
+    /// identical to [`Fastsum::apply`].
+    pub fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        assert_eq!(v.cols, self.n());
+        let nb = v.rows;
+        if nb == 1 {
+            // Single straggler column (e.g. the last active RHS of a block
+            // CG): the column-parallel pipeline would run serial — use the
+            // internally-parallel single apply instead.
+            let mut out = Matrix::zeros(1, v.cols);
+            out.row_mut(0).copy_from_slice(&self.apply(v.row(0), deriv));
+            return out;
+        }
+        let b = if deriv { &self.bhat_deriv } else { &self.bhat };
+        let rows: Vec<Vec<f64>> = parallel::parallel_map(nb, |r| {
+            let vc: Vec<Complex> =
+                v.row(r).iter().map(|&x| Complex::new(x, 0.0)).collect();
+            let mut ghat = self.plan.adjoint_serial(&vc);
+            for (g, bk) in ghat.iter_mut().zip(b) {
+                *g = *g * *bk;
+            }
+            self.plan
+                .trafo_serial(&ghat)
+                .into_iter()
+                .map(|c| c.re)
+                .collect()
+        });
+        let mut out = Matrix::zeros(nb, v.cols);
+        for (r, row) in rows.into_iter().enumerate() {
+            out.row_mut(r).copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Fused kernel + ℓ-derivative fast summation over an RHS block:
+    /// per column ONE adjoint transform feeds two diagonal scalings (b_k
+    /// and ∂b_k/∂ℓ, eq. (3.4)) and two trafos — the adjoint is shared, so
+    /// a gradient step's pair of operator products costs 3 transforms per
+    /// column instead of 4.
+    pub fn apply_batch_pair(&self, v: &Matrix) -> (Matrix, Matrix) {
+        assert_eq!(v.cols, self.n());
+        let nb = v.rows;
+        if nb == 1 {
+            // Keep the shared adjoint but use the plan's internally
+            // parallel transforms for the lone column.
+            let vc: Vec<Complex> =
+                v.row(0).iter().map(|&x| Complex::new(x, 0.0)).collect();
+            let ghat = self.plan.adjoint(&vc);
+            let gk: Vec<Complex> =
+                ghat.iter().zip(&self.bhat).map(|(g, bk)| *g * *bk).collect();
+            let gd: Vec<Complex> = ghat
+                .iter()
+                .zip(&self.bhat_deriv)
+                .map(|(g, bk)| *g * *bk)
+                .collect();
+            let mut out_k = Matrix::zeros(1, v.cols);
+            let mut out_d = Matrix::zeros(1, v.cols);
+            for (o, c) in out_k.row_mut(0).iter_mut().zip(self.plan.trafo(&gk)) {
+                *o = c.re;
+            }
+            for (o, c) in out_d.row_mut(0).iter_mut().zip(self.plan.trafo(&gd)) {
+                *o = c.re;
+            }
+            return (out_k, out_d);
+        }
+        let rows: Vec<(Vec<f64>, Vec<f64>)> = parallel::parallel_map(nb, |r| {
+            let vc: Vec<Complex> =
+                v.row(r).iter().map(|&x| Complex::new(x, 0.0)).collect();
+            let ghat = self.plan.adjoint_serial(&vc);
+            let gk: Vec<Complex> =
+                ghat.iter().zip(&self.bhat).map(|(g, bk)| *g * *bk).collect();
+            let gd: Vec<Complex> = ghat
+                .iter()
+                .zip(&self.bhat_deriv)
+                .map(|(g, bk)| *g * *bk)
+                .collect();
+            let hk = self.plan.trafo_serial(&gk).into_iter().map(|c| c.re).collect();
+            let hd = self.plan.trafo_serial(&gd).into_iter().map(|c| c.re).collect();
+            (hk, hd)
+        });
+        let mut out_k = Matrix::zeros(nb, v.cols);
+        let mut out_d = Matrix::zeros(nb, v.cols);
+        for (r, (hk, hd)) in rows.into_iter().enumerate() {
+            out_k.row_mut(r).copy_from_slice(&hk);
+            out_d.row_mut(r).copy_from_slice(&hd);
+        }
+        (out_k, out_d)
     }
 
     /// Refresh the kernel coefficients for a new length-scale without
@@ -390,6 +483,61 @@ mod tests {
         let v1: f64 = v.iter().map(|x| x.abs()).sum();
         for i in 0..nt {
             assert!((fast[i] - slow[i]).abs() < 1e-3 * v1, "i={i}");
+        }
+    }
+
+    #[test]
+    fn apply_batch_matches_column_loop() {
+        let n = 90;
+        let d = 2;
+        let ell = 0.1;
+        let pts = random_pts(n, d, 21, 0.25);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let fs = Fastsum::new(KernelFn::Gaussian, &pts, d, ell, params);
+        let mut rng = Rng::new(22);
+        let nb = 5;
+        let mut v = Matrix::zeros(nb, n);
+        for r in 0..nb {
+            v.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        for deriv in [false, true] {
+            let batch = fs.apply_batch(&v, deriv);
+            for r in 0..nb {
+                let single = fs.apply(v.row(r), deriv);
+                for i in 0..n {
+                    assert!(
+                        (batch[(r, i)] - single[i]).abs() < 1e-10,
+                        "deriv={deriv} r={r} i={i}: {} vs {}",
+                        batch[(r, i)],
+                        single[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_batch_pair_shares_one_adjoint_correctly() {
+        let n = 70;
+        let d = 1;
+        let ell = 0.08;
+        let pts = random_pts(n, d, 23, 0.25);
+        let params = NfftParams { m: 64, sigma: 2.0, s: 10, window: WindowKind::KaiserBessel };
+        let fs = Fastsum::new(KernelFn::Matern12, &pts, d, ell, params);
+        let mut rng = Rng::new(24);
+        let nb = 3;
+        let mut v = Matrix::zeros(nb, n);
+        for r in 0..nb {
+            v.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        let (hk, hd) = fs.apply_batch_pair(&v);
+        let wk = fs.apply_batch(&v, false);
+        let wd = fs.apply_batch(&v, true);
+        for r in 0..nb {
+            for i in 0..n {
+                assert!((hk[(r, i)] - wk[(r, i)]).abs() < 1e-10, "k r={r} i={i}");
+                assert!((hd[(r, i)] - wd[(r, i)]).abs() < 1e-10, "d r={r} i={i}");
+            }
         }
     }
 

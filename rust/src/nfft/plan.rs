@@ -197,50 +197,70 @@ impl NfftPlan {
         }
     }
 
-    /// Gather from the grid at each point: out_j = Σ_u G_u φ̃(x_j − u/M).
-    fn gather(&self, grid: &[Complex]) -> Vec<Complex> {
-        assert_eq!(grid.len(), self.grid_len());
+    /// Serial spread of one coefficient vector (no internal threading) —
+    /// the building block for the batched transforms, which parallelize
+    /// across RHS columns instead of within one column.
+    fn spread_serial(&self, v: &[Complex]) -> Vec<Complex> {
+        assert_eq!(v.len(), self.n);
+        let mut grid = vec![Complex::ZERO; self.grid_len()];
+        for j in 0..self.n {
+            self.spread_point(j, v[j], &mut grid);
+        }
+        grid
+    }
+
+    #[inline]
+    fn gather_point(&self, j: usize, grid: &[Complex]) -> Complex {
         let two_s = 2 * self.params.s;
         let d = self.d;
-        parallel::parallel_map(self.n, |j| {
-            let w = &self.weights[j * d * two_s..(j + 1) * d * two_s];
-            let u = &self.wrapped[j * d * two_s..(j + 1) * d * two_s];
-            let mut acc = Complex::ZERO;
-            match d {
-                1 => {
-                    for t in 0..two_s {
-                        acc += grid[u[t] as usize].scale(w[t]);
+        let w = &self.weights[j * d * two_s..(j + 1) * d * two_s];
+        let u = &self.wrapped[j * d * two_s..(j + 1) * d * two_s];
+        let mut acc = Complex::ZERO;
+        match d {
+            1 => {
+                for t in 0..two_s {
+                    acc += grid[u[t] as usize].scale(w[t]);
+                }
+            }
+            2 => {
+                let mu = self.big_m;
+                for t0 in 0..two_s {
+                    let w0 = w[t0];
+                    let row = u[t0] as usize * mu;
+                    for t1 in 0..two_s {
+                        acc += grid[row + u[two_s + t1] as usize]
+                            .scale(w0 * w[two_s + t1]);
                     }
                 }
-                2 => {
-                    let mu = self.big_m;
-                    for t0 in 0..two_s {
-                        let w0 = w[t0];
-                        let row = u[t0] as usize * mu;
-                        for t1 in 0..two_s {
-                            acc += grid[row + u[two_s + t1] as usize]
-                                .scale(w0 * w[two_s + t1]);
-                        }
-                    }
-                }
-                _ => {
-                    let mu = self.big_m;
-                    for t0 in 0..two_s {
-                        let w0 = w[t0];
-                        for t1 in 0..two_s {
-                            let w01 = w0 * w[two_s + t1];
-                            let row =
-                                (u[t0] as usize * mu + u[two_s + t1] as usize) * mu;
-                            for t2 in 0..two_s {
-                                acc += grid[row + u[2 * two_s + t2] as usize]
-                                    .scale(w01 * w[2 * two_s + t2]);
-                            }
+            }
+            _ => {
+                let mu = self.big_m;
+                for t0 in 0..two_s {
+                    let w0 = w[t0];
+                    for t1 in 0..two_s {
+                        let w01 = w0 * w[two_s + t1];
+                        let row =
+                            (u[t0] as usize * mu + u[two_s + t1] as usize) * mu;
+                        for t2 in 0..two_s {
+                            acc += grid[row + u[2 * two_s + t2] as usize]
+                                .scale(w01 * w[2 * two_s + t2]);
                         }
                     }
                 }
             }
-            acc
-        })
+        }
+        acc
+    }
+
+    /// Gather from the grid at each point: out_j = Σ_u G_u φ̃(x_j − u/M).
+    fn gather(&self, grid: &[Complex]) -> Vec<Complex> {
+        assert_eq!(grid.len(), self.grid_len());
+        parallel::parallel_map(self.n, |j| self.gather_point(j, grid))
+    }
+
+    fn gather_serial(&self, grid: &[Complex]) -> Vec<Complex> {
+        assert_eq!(grid.len(), self.grid_len());
+        (0..self.n).map(|j| self.gather_point(j, grid)).collect()
     }
 
     /// Map a frequency k ∈ I_m (component-wise DFT layout index over the
@@ -287,36 +307,66 @@ impl NfftPlan {
         self.params.m.pow(self.d as u32)
     }
 
+    /// Post-FFT projection onto the small grid: deconvolve and scale each
+    /// k ∈ I_m out of the oversampled spectrum.
+    fn project_small(&self, grid: &[Complex]) -> Vec<Complex> {
+        let scale = 1.0 / self.grid_len() as f64;
+        let ncoef = self.num_coeffs();
+        let mut out = vec![Complex::ZERO; ncoef];
+        for (sf, o) in out.iter_mut().enumerate() {
+            let bf = self.pad_index(sf);
+            *o = grid[bf].scale(self.deconv(sf) * scale);
+        }
+        out
+    }
+
+    /// Pre-IFFT embedding of small-grid coefficients into the oversampled
+    /// spectrum, with deconvolution applied.
+    fn embed_large(&self, fhat: &[Complex]) -> Vec<Complex> {
+        assert_eq!(fhat.len(), self.num_coeffs());
+        let mut grid = vec![Complex::ZERO; self.grid_len()];
+        for (sf, &fk) in fhat.iter().enumerate() {
+            let bf = self.pad_index(sf);
+            grid[bf] = fk.scale(self.deconv(sf));
+        }
+        grid
+    }
+
     /// Adjoint NFFT: ĝ_k = Σ_j v_j e^{−2πi kᵀx_j} for k ∈ I_m.
     /// Output in DFT layout over the small m^d grid.
     pub fn adjoint(&self, v: &[Complex]) -> Vec<Complex> {
         let mut grid = self.spread(v);
         self.fft.forward(&mut grid);
-        let scale = 1.0 / self.grid_len() as f64;
-        let ncoef = self.num_coeffs();
-        let mut out = vec![Complex::ZERO; ncoef];
-        for sf in 0..ncoef {
-            let bf = self.pad_index(sf);
-            out[sf] = grid[bf].scale(self.deconv(sf) * scale);
-        }
-        out
+        self.project_small(&grid)
+    }
+
+    /// Single-column adjoint with no internal threading (see
+    /// [`NfftPlan::trafo_serial`] for the batching rationale).
+    pub fn adjoint_serial(&self, v: &[Complex]) -> Vec<Complex> {
+        let mut grid = self.spread_serial(v);
+        self.fft.forward(&mut grid);
+        self.project_small(&grid)
     }
 
     /// Forward NFFT (trafo): h_j = Σ_{k∈I_m} f̂_k e^{+2πi kᵀx_j}.
     /// `fhat` in DFT layout over the small m^d grid.
     pub fn trafo(&self, fhat: &[Complex]) -> Vec<Complex> {
-        assert_eq!(fhat.len(), self.num_coeffs());
-        let glen = self.grid_len();
-        let mut grid = vec![Complex::ZERO; glen];
-        for sf in 0..fhat.len() {
-            let bf = self.pad_index(sf);
-            grid[bf] = fhat[sf].scale(self.deconv(sf));
-        }
+        let mut grid = self.embed_large(fhat);
         // g_u = (1/M^d) Σ_k ĥ_k e^{+2πi ku/M}  — our ifftn does exactly this.
+        // (The analysis wants the 1/M^d, see module docs: g must satisfy
+        // Σ_u g_u e^{-2πiku/M} = ĥ_k.)
         self.fft.inverse(&mut grid);
-        // Undo ifftn's 1/M^d? No: the analysis wants the 1/M^d (see module
-        // docs) — g must satisfy Σ_u g_u e^{-2πiku/M} = ĥ_k.
         self.gather(&grid)
+    }
+
+    /// Single-column trafo with no internal threading — the batched
+    /// summation (`Fastsum::apply_batch`) parallelizes across columns,
+    /// each running this serial pipeline while sharing the plan's
+    /// precomputed spreading stencils, wrapped indices, and FFT twiddles.
+    pub fn trafo_serial(&self, fhat: &[Complex]) -> Vec<Complex> {
+        let mut grid = self.embed_large(fhat);
+        self.fft.inverse(&mut grid);
+        self.gather_serial(&grid)
     }
 
     /// Grid memory footprint in bytes (for perf estimates).
@@ -459,6 +509,27 @@ mod tests {
         let fnorm: f64 = fhat.iter().map(|c| c.abs()).sum();
         for j in 0..fast.len() {
             assert!((fast[j] - slow[j]).abs() < 1e-7 * fnorm, "j={j}");
+        }
+    }
+
+    #[test]
+    fn serial_transforms_match_parallel_transforms() {
+        // The batched summation builds on the serial per-column pipeline;
+        // it must agree with the internally-parallel single-column path.
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(35, 2, 20);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let v = cvec(35, 21);
+        let a_par = plan.adjoint(&v);
+        let a_ser = plan.adjoint_serial(&v);
+        for k in 0..a_par.len() {
+            assert!((a_par[k] - a_ser[k]).abs() < 1e-12, "adjoint k={k}");
+        }
+        let fhat = cvec(256, 40);
+        let t_par = plan.trafo(&fhat);
+        let t_ser = plan.trafo_serial(&fhat);
+        for j in 0..t_par.len() {
+            assert!((t_par[j] - t_ser[j]).abs() < 1e-12, "trafo j={j}");
         }
     }
 

@@ -10,6 +10,7 @@ use super::{ArtifactMeta, PjrtRuntime};
 use crate::coordinator::mvm::SubKernelMvm;
 use crate::kernels::additive::WindowedPoints;
 use crate::kernels::KernelFn;
+use crate::linalg::Matrix;
 use std::sync::Arc;
 
 fn kernel_name(k: KernelFn) -> &'static str {
@@ -109,6 +110,60 @@ impl SubKernelMvm for ExactPjrtMvm {
 
     fn set_ell(&mut self, ell: f64) {
         self.ell = ell;
+    }
+
+    /// Batched tile MVM: the (n/tile)² tile geometry — the xr/xc point
+    /// buffer fills — is walked ONCE per block, with every RHS column
+    /// executed against each resident tile pair before moving on.
+    fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let n = self.wp.n;
+        assert_eq!(v.cols, n);
+        let nb = v.rows;
+        let d = self.wp.d;
+        let t = self.tile();
+        let meta = if deriv { &self.meta_der } else { &self.meta_k };
+        let ntiles = n.div_ceil(t);
+        let ell = [self.ell];
+        let mut out = Matrix::zeros(nb, n);
+        let mut xr = vec![0.0; t * d];
+        let mut xc = vec![0.0; t * d];
+        let mut vv = vec![0.0; t];
+        for bi in 0..ntiles {
+            let i0 = bi * t;
+            let ilen = (n - i0).min(t);
+            xr.fill(0.0);
+            xr[..ilen * d].copy_from_slice(&self.wp.pts[i0 * d..(i0 + ilen) * d]);
+            let mut acc = Matrix::zeros(nb, t);
+            for bj in 0..ntiles {
+                let j0 = bj * t;
+                let jlen = (n - j0).min(t);
+                xc.fill(0.0);
+                xc[..jlen * d].copy_from_slice(&self.wp.pts[j0 * d..(j0 + jlen) * d]);
+                for r in 0..nb {
+                    vv.fill(0.0);
+                    vv[..jlen].copy_from_slice(&v.row(r)[j0..j0 + jlen]);
+                    let part = self
+                        .rt
+                        .execute(
+                            &meta.name,
+                            &[
+                                (&xr, &[t as i64, d as i64]),
+                                (&xc, &[t as i64, d as i64]),
+                                (&vv, &[t as i64]),
+                                (&ell, &[1]),
+                            ],
+                        )
+                        .expect("PJRT exact MVM");
+                    for (a, p) in acc.row_mut(r).iter_mut().zip(&part) {
+                        *a += p;
+                    }
+                }
+            }
+            for r in 0..nb {
+                out.row_mut(r)[i0..i0 + ilen].copy_from_slice(&acc.row(r)[..ilen]);
+            }
+        }
+        out
     }
 }
 

@@ -3,7 +3,7 @@
 //! iteration-count experiments.
 
 use super::{LinOp, Precond};
-use crate::linalg::{axpy, dot, norm2};
+use crate::linalg::{axpy, dot, norm2, Matrix};
 
 #[derive(Clone, Debug)]
 pub struct CgOptions {
@@ -84,6 +84,121 @@ pub fn pcg(a: &dyn LinOp, m: &dyn Precond, b: &[f64], opts: &CgOptions) -> CgRes
         }
     }
     CgResult { x, iterations, converged, residuals }
+}
+
+/// Result of a block solve: one row of `x` (and one entry of the per-column
+/// vectors) per RHS, in input order.
+#[derive(Clone, Debug)]
+pub struct BatchCgResult {
+    /// Solutions, one per row (same layout as the RHS block).
+    pub x: Matrix,
+    pub iterations: Vec<usize>,
+    pub converged: Vec<bool>,
+    /// Per-column ‖r_k‖ history (index 0 = initial residual).
+    pub residuals: Vec<Vec<f64>>,
+}
+
+/// Plain block CG with zero initial guess.
+pub fn cg_batch(a: &dyn LinOp, b: &Matrix, opts: &CgOptions) -> BatchCgResult {
+    let p = super::IdentityPrecond(a.dim());
+    pcg_batch(a, &p, b, opts)
+}
+
+/// Preconditioned CG over an RHS block (one vector per row of `b`): all
+/// columns advance in lockstep so each iteration issues ONE batched
+/// operator apply, and converged (or broken-down) columns drop out of the
+/// active set. Per column the recurrence is identical to [`pcg`] — the CG
+/// scalars are per-column — so solutions and iteration counts match the
+/// one-at-a-time solver, while the operator amortizes per-apply setup
+/// across the block.
+pub fn pcg_batch(
+    a: &dyn LinOp,
+    m: &dyn Precond,
+    b: &Matrix,
+    opts: &CgOptions,
+) -> BatchCgResult {
+    let n = a.dim();
+    assert_eq!(b.cols, n);
+    let nb = b.rows;
+    let mut x = Matrix::zeros(nb, n);
+    let mut r = b.clone(); // r = b - A·0 per column
+    let mut iterations = vec![0usize; nb];
+    let mut converged = vec![false; nb];
+    let mut residuals: Vec<Vec<f64>> = Vec::with_capacity(nb);
+    let mut targets = vec![0.0; nb];
+    let mut active: Vec<usize> = Vec::new();
+    for c in 0..nb {
+        let bnorm = norm2(b.row(c));
+        targets[c] = if opts.relative { opts.tol * bnorm } else { opts.tol };
+        residuals.push(vec![bnorm]);
+        if bnorm <= targets[c] || bnorm == 0.0 {
+            converged[c] = true;
+        } else {
+            active.push(c);
+        }
+    }
+    // Gather the listed rows of `src` into a compact block.
+    fn pack_rows(src: &Matrix, rows: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(rows.len(), src.cols);
+        for (k, &c) in rows.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(src.row(c));
+        }
+        out
+    }
+    // Per-column direction p and r·z scalar (only meaningful while active).
+    let mut p: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    let mut rz = vec![0.0; nb];
+    let z0 = m.solve_batch(&pack_rows(&r, &active));
+    for (k, &c) in active.iter().enumerate() {
+        rz[c] = dot(r.row(c), z0.row(k));
+        p[c] = z0.row(k).to_vec();
+    }
+    let mut it = 0;
+    while !active.is_empty() && it < opts.max_iter {
+        it += 1;
+        // Pack active directions into a block and apply the operator once.
+        let mut pblock = Matrix::zeros(active.len(), n);
+        for (k, &c) in active.iter().enumerate() {
+            pblock.row_mut(k).copy_from_slice(&p[c]);
+        }
+        let ap = a.apply_batch_vec(&pblock);
+        let mut still = Vec::with_capacity(active.len());
+        for (k, &c) in active.iter().enumerate() {
+            let apc = ap.row(k);
+            let pap = dot(&p[c], apc);
+            if pap <= 0.0 || !pap.is_finite() {
+                // Lost positive definiteness for this column (see `pcg`);
+                // freeze it at the current iterate.
+                continue;
+            }
+            let alpha = rz[c] / pap;
+            axpy(alpha, &p[c], x.row_mut(c));
+            axpy(-alpha, apc, r.row_mut(c));
+            let rnorm = norm2(r.row(c));
+            residuals[c].push(rnorm);
+            iterations[c] = it;
+            if rnorm <= targets[c] {
+                converged[c] = true;
+                continue;
+            }
+            still.push(c);
+        }
+        // One batched preconditioner solve for every continuing column.
+        if !still.is_empty() {
+            let zb = m.solve_batch(&pack_rows(&r, &still));
+            for (k, &c) in still.iter().enumerate() {
+                let z = zb.row(k);
+                let rz_new = dot(r.row(c), z);
+                let beta = rz_new / rz[c];
+                rz[c] = rz_new;
+                for (pi, zi) in p[c].iter_mut().zip(z) {
+                    *pi = zi + beta * *pi;
+                }
+            }
+        }
+        active = still;
+    }
+    BatchCgResult { x, iterations, converged, residuals }
 }
 
 #[cfg(test)]
@@ -181,6 +296,56 @@ mod tests {
         assert!(res.converged);
         assert_eq!(res.iterations, 0);
         assert!(res.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pcg_batch_matches_per_column_pcg() {
+        let n = 35;
+        let a = spd(n, 11, 0.8);
+        let mut rng = Rng::new(12);
+        let nb = 5;
+        let mut b = Matrix::zeros(nb, n);
+        for r in 0..nb {
+            b.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        let opts = CgOptions { tol: 1e-8, max_iter: 200, relative: true };
+        let batch = cg_batch(&a, &b, &opts);
+        for c in 0..nb {
+            let single = cg(&a, b.row(c), &opts);
+            assert_eq!(batch.iterations[c], single.iterations, "col {c} iters");
+            assert_eq!(batch.converged[c], single.converged, "col {c} conv");
+            for i in 0..n {
+                assert!(
+                    (batch.x[(c, i)] - single.x[i]).abs() < 1e-12,
+                    "col {c} i={i}: {} vs {}",
+                    batch.x[(c, i)],
+                    single.x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pcg_batch_mixed_convergence_and_zero_rhs() {
+        // Columns with wildly different conditioning-by-scaling plus a zero
+        // RHS: each must converge (or short-circuit) independently.
+        let n = 20;
+        let a = spd(n, 13, 1.0);
+        let mut rng = Rng::new(14);
+        let mut b = Matrix::zeros(3, n);
+        b.row_mut(0).copy_from_slice(&rng.normal_vec(n));
+        // row 1 stays zero
+        let big: Vec<f64> = rng.normal_vec(n).iter().map(|v| v * 1e6).collect();
+        b.row_mut(2).copy_from_slice(&big);
+        let opts = CgOptions { tol: 1e-9, max_iter: 300, relative: true };
+        let res = cg_batch(&a, &b, &opts);
+        assert!(res.converged.iter().all(|&c| c));
+        assert_eq!(res.iterations[1], 0);
+        assert!(res.x.row(1).iter().all(|&v| v == 0.0));
+        let want = cg(&a, b.row(2), &opts);
+        for i in 0..n {
+            assert!((res.x[(2, i)] - want.x[i]).abs() < 1e-12 * 1e6);
+        }
     }
 
     #[test]

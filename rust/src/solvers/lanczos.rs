@@ -5,7 +5,7 @@
 //! and by the preconditioned split (eq. 1.3/1.4) on L⁻¹K̂L⁻ᵀ.
 
 use super::LinOp;
-use crate::linalg::{axpy, dot, norm2};
+use crate::linalg::{axpy, dot, norm2, Matrix};
 
 #[derive(Clone, Debug)]
 pub struct LanczosResult {
@@ -67,6 +67,101 @@ pub fn lanczos(a: &dyn LinOp, v: &[f64], k: usize, reorth: bool) -> LanczosResul
         beta_prev = b_j;
     }
     unreachable!()
+}
+
+/// Batched Lanczos: run the recurrence for every row of `vs` (one starting
+/// vector per row) in lockstep, issuing ONE batched operator apply per step
+/// instead of one apply per probe per step. Columns that break down (or
+/// have a zero start vector) drop out of the active set; per column the
+/// arithmetic is identical to [`lanczos`], so the tridiagonals match the
+/// one-probe-at-a-time path. This is the SLQ hot loop: all probes share
+/// each operator traversal.
+pub fn lanczos_batch(a: &dyn LinOp, vs: &Matrix, k: usize, reorth: bool) -> Vec<LanczosResult> {
+    let n = a.dim();
+    assert_eq!(vs.cols, n);
+    let nb = vs.rows;
+    struct Col {
+        alpha: Vec<f64>,
+        beta: Vec<f64>,
+        vnorm: f64,
+        steps: usize,
+        q: Vec<f64>,
+        q_prev: Vec<f64>,
+        beta_prev: f64,
+        basis: Vec<Vec<f64>>,
+    }
+    let mut cols: Vec<Col> = Vec::with_capacity(nb);
+    let mut active: Vec<usize> = Vec::new();
+    for c in 0..nb {
+        let v = vs.row(c);
+        let vnorm = norm2(v);
+        let live = vnorm > 0.0 && k > 0;
+        cols.push(Col {
+            alpha: Vec::with_capacity(k),
+            beta: Vec::with_capacity(k.saturating_sub(1)),
+            vnorm,
+            steps: 0,
+            q: if live {
+                v.iter().map(|x| x / vnorm).collect()
+            } else {
+                Vec::new()
+            },
+            q_prev: vec![0.0; if live { n } else { 0 }],
+            beta_prev: 0.0,
+            basis: Vec::new(),
+        });
+        if live {
+            active.push(c);
+        }
+    }
+    for step in 0..k {
+        if active.is_empty() {
+            break;
+        }
+        // One batched apply over all still-active probes.
+        let mut qblock = Matrix::zeros(active.len(), n);
+        for (r, &c) in active.iter().enumerate() {
+            qblock.row_mut(r).copy_from_slice(&cols[c].q);
+        }
+        let wblock = a.apply_batch_vec(&qblock);
+        let mut still = Vec::with_capacity(active.len());
+        for (r, &c) in active.iter().enumerate() {
+            let col = &mut cols[c];
+            let mut w = wblock.row(r).to_vec();
+            if col.beta_prev != 0.0 {
+                axpy(-col.beta_prev, &col.q_prev, &mut w);
+            }
+            let a_j = dot(&col.q, &w);
+            col.alpha.push(a_j);
+            axpy(-a_j, &col.q, &mut w);
+            if reorth {
+                col.basis.push(col.q.clone());
+                for _ in 0..2 {
+                    for qb in &col.basis {
+                        let cc = dot(qb, &w);
+                        axpy(-cc, qb, &mut w);
+                    }
+                }
+            }
+            let b_j = norm2(&w);
+            col.steps = step + 1;
+            if step + 1 == k || b_j < 1e-13 * col.vnorm.max(1.0) {
+                // Done (full size, or invariant subspace found).
+                continue;
+            }
+            col.beta.push(b_j);
+            col.q_prev.copy_from_slice(&col.q);
+            for (qi, wi) in col.q.iter_mut().zip(&w) {
+                *qi = wi / b_j;
+            }
+            col.beta_prev = b_j;
+            still.push(c);
+        }
+        active = still;
+    }
+    cols.into_iter()
+        .map(|c| LanczosResult { alpha: c.alpha, beta: c.beta, vnorm: c.vnorm, steps: c.steps })
+        .collect()
 }
 
 /// Gauss quadrature of f against the Lanczos tridiagonal:
@@ -164,6 +259,49 @@ mod tests {
             err_large <= err_small + 0.05 * exact.abs(),
             "err_small={err_small} err_large={err_large} exact={exact}"
         );
+    }
+
+    #[test]
+    fn lanczos_batch_matches_single_probe_runs() {
+        let n = 18;
+        let a = spd(n, 9);
+        let mut rng = Rng::new(10);
+        let nb = 4;
+        let mut vs = Matrix::zeros(nb, n);
+        for r in 0..nb {
+            vs.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        for reorth in [false, true] {
+            let batch = lanczos_batch(&a, &vs, 8, reorth);
+            for c in 0..nb {
+                let single = lanczos(&a, vs.row(c), 8, reorth);
+                assert_eq!(batch[c].steps, single.steps, "col {c}");
+                assert_eq!(batch[c].alpha.len(), single.alpha.len());
+                for (x, y) in batch[c].alpha.iter().zip(&single.alpha) {
+                    assert!((x - y).abs() < 1e-12, "alpha col {c}");
+                }
+                for (x, y) in batch[c].beta.iter().zip(&single.beta) {
+                    assert!((x - y).abs() < 1e-12, "beta col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanczos_batch_handles_breakdown_columns() {
+        // On the identity every probe breaks down after one step; a zero
+        // row must come back with zero steps while others proceed.
+        let a = Matrix::identity(12);
+        let mut rng = Rng::new(11);
+        let mut vs = Matrix::zeros(3, 12);
+        vs.row_mut(0).copy_from_slice(&rng.normal_vec(12));
+        // row 1 stays zero
+        vs.row_mut(2).copy_from_slice(&rng.normal_vec(12));
+        let res = lanczos_batch(&a, &vs, 5, true);
+        assert_eq!(res[0].steps, 1);
+        assert_eq!(res[1].steps, 0);
+        assert_eq!(res[2].steps, 1);
+        assert!((res[0].alpha[0] - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,10 +1,22 @@
 //! Iterative solvers: (preconditioned) CG, Lanczos, stochastic Lanczos
 //! quadrature, and the Hutchinson trace estimator (paper §1).
+//!
+//! # RHS blocks
+//!
+//! The GP training loop multiplies K̂ by many vectors at once (the α-solve
+//! RHS plus ~10 Hutchinson/SLQ probes), so every solver here also has a
+//! batched form. A block of `b` vectors is stored as a `b × n` [`Matrix`]
+//! with **one vector per contiguous row** — "column" in the linear-algebra
+//! sense (a column of [Y | Z₁ … Z_t]) is a *row* of the block matrix, which
+//! keeps every per-vector operation contiguous in memory. All `*_batch`
+//! APIs in this crate share that convention.
 
 pub mod cg;
 pub mod hutchinson;
 pub mod lanczos;
 pub mod slq;
+
+use crate::linalg::Matrix;
 
 /// Abstract symmetric linear operator y = A x.
 pub trait LinOp: Sync {
@@ -14,6 +26,25 @@ pub trait LinOp: Sync {
     fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.dim()];
         self.apply(x, &mut y);
+        y
+    }
+
+    /// Y = A X for an RHS block (one vector per row; see module docs).
+    /// The default is a column loop; operators that can amortize per-apply
+    /// setup (windowed kernel sums, NFFT plans) override it.
+    fn apply_batch(&self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols, self.dim());
+        assert_eq!(y.cols, self.dim());
+        assert_eq!(x.rows, y.rows);
+        for r in 0..x.rows {
+            self.apply(x.row(r), y.row_mut(r));
+        }
+    }
+
+    /// Allocating convenience wrapper around [`LinOp::apply_batch`].
+    fn apply_batch_vec(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, x.cols);
+        self.apply_batch(x, &mut y);
         y
     }
 }
@@ -43,6 +74,16 @@ pub trait Precond: Sync {
     fn mul_upper(&self, x: &[f64]) -> Vec<f64>;
     /// log det M (exact).
     fn logdet(&self) -> f64;
+
+    /// Y = M⁻¹ X for an RHS block (row-per-vector; see module docs).
+    /// Default: column loop over [`Precond::solve`].
+    fn solve_batch(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, x.cols);
+        for r in 0..x.rows {
+            y.row_mut(r).copy_from_slice(&self.solve(x.row(r)));
+        }
+        y
+    }
 }
 
 /// Identity preconditioner (turns PCG into plain CG, preconditioned SLQ
@@ -88,5 +129,23 @@ mod tests {
         let p = IdentityPrecond(3);
         assert_eq!(p.solve(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
         assert_eq!(p.logdet(), 0.0);
+    }
+
+    #[test]
+    fn default_apply_batch_matches_column_loop() {
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = Matrix::from_rows(&[vec![1.0, 1.0], vec![0.5, -2.0], vec![0.0, 4.0]]);
+        let y = a.apply_batch_vec(&x);
+        assert_eq!(y.rows, 3);
+        for r in 0..3 {
+            assert_eq!(y.row(r), a.apply_vec(x.row(r)).as_slice(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn identity_precond_solve_batch() {
+        let p = IdentityPrecond(2);
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(p.solve_batch(&x).data, x.data);
     }
 }
