@@ -1,12 +1,19 @@
 # fourier-gp developer targets. `make test` is the tier-1 gate
-# (see ROADMAP.md); `make bench-mvm` tracks the MVM perf trajectory in
-# BENCH_mvm.json from PR 1 onward.
+# (see ROADMAP.md); `make ci` is the full local gate (format, lints,
+# tests); `make bench-mvm` / `make bench-nfft` track the perf trajectory
+# in BENCH_mvm.json / BENCH_nfft.json from PR 1 / PR 6 onward.
 
 CARGO ?= cargo
 
-.PHONY: all fmt clippy test bench-mvm python-test
+.PHONY: all ci fmt clippy test bench-mvm bench-nfft python-test
 
 all: test
+
+# Full local gate: formatting, clippy with warnings denied, tier-1 tests.
+ci:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) test -q
 
 fmt:
 	$(CARGO) fmt
@@ -23,6 +30,12 @@ test:
 # FGP_FULL=1 extends the n sweep to paper scale.
 bench-mvm:
 	$(CARGO) bench --bench bench_mvm
+
+# NFFT hot-path per-apply sweep: packed pooled pipeline vs the per-column
+# reference (`apply_batch_ref`); writes BENCH_nfft.json in the repo root.
+# FGP_FULL=1 extends the n sweep.
+bench-nfft:
+	$(CARGO) bench --bench bench_nfft
 
 python-test:
 	cd python && python -m pytest -q tests

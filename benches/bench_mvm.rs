@@ -60,20 +60,29 @@ fn batch_sweep(sizes: &[usize], batches: &[usize]) -> Vec<Json> {
             let t_batch = best_of(reps, || {
                 black_box(engine.apply_batch(&vb, false));
             });
+            // Per-column reference pipeline (pre-packing): one adjoint +
+            // one trafo per column, allocating its transforms.
+            let t_batch_ref = best_of(reps, || {
+                black_box(engine.apply_batch_ref(&vb, false));
+            });
             let per_col = t_batch / b as f64;
             let speedup = t_single / per_col;
+            let speedup_packed = t_batch_ref / t_batch;
             println!(
                 "  n={n:7} batch={b:3}  batched={t_batch:9.5}s  per-col={per_col:9.5}s  \
-                 speedup-per-col={speedup:6.2}x (single apply {t_single:9.5}s)"
+                 speedup-per-col={speedup:6.2}x  packed-vs-ref={speedup_packed:5.2}x \
+                 (single apply {t_single:9.5}s, ref batch {t_batch_ref:9.5}s)"
             );
             records.push(Json::obj(vec![
                 ("engine", Json::Str("nfft-rust".into())),
                 ("n", Json::Num(n as f64)),
                 ("batch", Json::Num(b as f64)),
                 ("seconds_batch", Json::Num(t_batch)),
+                ("seconds_batch_ref", Json::Num(t_batch_ref)),
                 ("seconds_per_column", Json::Num(per_col)),
                 ("seconds_single_apply", Json::Num(t_single)),
                 ("speedup_per_column_vs_single", Json::Num(speedup)),
+                ("speedup_packed_vs_ref", Json::Num(speedup_packed)),
             ]));
         }
     }

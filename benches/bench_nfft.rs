@@ -1,0 +1,111 @@
+//! NFFT hot-path bench: per-apply cost of the zero-allocation packed
+//! pipeline vs the per-column reference pipeline it replaced.
+//!
+//! `apply_batch_ref` reproduces the pre-packing pipeline (one adjoint + one
+//! trafo per RHS column, allocating its transforms); `apply_batch` packs
+//! column pairs into single complex transforms over pooled workspaces, and
+//! `apply_batch_pair` additionally fuses the kernel/derivative products of
+//! one adjoint. Writes `BENCH_nfft.json` with per-apply medians and the
+//! packed/reference speedups so the ≥1.5× acceptance gate is auditable.
+
+use fourier_gp::coordinator::mvm::{NfftRustMvm, SubKernelMvm};
+use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::NfftParams;
+use fourier_gp::util::bench::black_box;
+use fourier_gp::util::json::Json;
+use fourier_gp::util::rng::Rng;
+
+/// Median wall clock of `samples` runs of `f` (seconds).
+fn median_of(samples: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn sweep_point(n: usize, nb: usize, samples: usize) -> Json {
+    let mut rng = Rng::new(((n as u64) << 8) | nb as u64);
+    let mut x = Matrix::zeros(n, 2);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 10.0);
+    }
+    let wp = WindowedPoints::extract(&x, &[0, 1]);
+    let engine = NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+    let mut v = Matrix::zeros(nb, n);
+    for e in &mut v.data {
+        *e = rng.normal();
+    }
+    let mut out = Matrix::zeros(nb, n);
+
+    // Warm up both pipelines (fills the workspace pool; touches all pages).
+    black_box(engine.apply_batch_ref(&v, false));
+    engine.apply_batch_into(&v, false, &mut out);
+
+    let t_ref = median_of(samples, || {
+        black_box(engine.apply_batch_ref(&v, false));
+    });
+    let t_packed = median_of(samples, || {
+        engine.apply_batch_into(&v, false, &mut out);
+        black_box(&out);
+    });
+    // Fused kernel+derivative: reference pays two independent batch applies.
+    let t_pair_ref = median_of(samples, || {
+        black_box(engine.apply_batch_ref(&v, false));
+        black_box(engine.apply_batch_ref(&v, true));
+    });
+    let t_pair = median_of(samples, || {
+        let (k, d) = engine.apply_batch_pair(&v);
+        black_box(&k);
+        black_box(&d);
+    });
+
+    let speedup = t_ref / t_packed;
+    let speedup_pair = t_pair_ref / t_pair;
+    println!(
+        "  n={n:7} batch={nb:3}  ref={t_ref:9.5}s packed={t_packed:9.5}s ({speedup:5.2}x)  \
+         pair-ref={t_pair_ref:9.5}s pair={t_pair:9.5}s ({speedup_pair:5.2}x)"
+    );
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("batch", Json::Num(nb as f64)),
+        ("d", Json::Num(2.0)),
+        ("seconds_per_apply_ref", Json::Num(t_ref)),
+        ("seconds_per_apply_packed", Json::Num(t_packed)),
+        ("speedup_packed_vs_ref", Json::Num(speedup)),
+        ("seconds_pair_ref", Json::Num(t_pair_ref)),
+        ("seconds_pair_fused", Json::Num(t_pair)),
+        ("speedup_pair_vs_ref", Json::Num(speedup_pair)),
+    ])
+}
+
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    println!("=== NFFT per-apply: packed pooled pipeline vs per-column reference ===");
+    let sizes: Vec<usize> = if full {
+        vec![4096, 16384, 65536]
+    } else {
+        vec![4096, 16384]
+    };
+    let batches = [4usize, 8, 16];
+    let mut records = Vec::new();
+    for &n in &sizes {
+        let samples = if n <= 16384 { 9 } else { 5 };
+        for &nb in &batches {
+            records.push(sweep_point(n, nb, samples));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("nfft".into())),
+        ("baseline", Json::Str("apply_batch_ref (per-column adjoint/trafo)".into())),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_nfft.json", doc.to_string_pretty()).expect("write BENCH_nfft.json");
+    println!("wrote BENCH_nfft.json");
+}

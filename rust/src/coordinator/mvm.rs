@@ -68,6 +68,17 @@ pub trait SubKernelMvm: Send + Sync {
     fn apply_batch_pair(&self, v: &Matrix) -> (Matrix, Matrix) {
         (self.apply_batch(v, false), self.apply_batch(v, true))
     }
+
+    /// Batched apply writing into a caller-owned output block (same shape
+    /// as `v`, fully overwritten) — lets the operator's CG loop recycle its
+    /// product buffers instead of allocating a fresh matrix per traversal.
+    /// Default: copy from `apply_batch`; engines override allocation-free.
+    fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        assert_eq!(out.rows, v.rows);
+        assert_eq!(out.cols, v.cols);
+        let res = self.apply_batch(v, deriv);
+        out.data.copy_from_slice(&res.data);
+    }
 }
 
 /// Exact tiled dense MVM (never materializes K_s).
@@ -100,6 +111,11 @@ impl SubKernelMvm for ExactRustMvm {
         dense_mvm_batch(self.kernel, &self.wp, self.ell, v, deriv, &mut out);
         out
     }
+    fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        assert_eq!(out.rows, v.rows);
+        assert_eq!(out.cols, v.cols);
+        dense_mvm_batch(self.kernel, &self.wp, self.ell, v, deriv, out);
+    }
 }
 
 /// NFFT fast-summation MVM (rust implementation).
@@ -118,6 +134,22 @@ impl NfftRustMvm {
 
     pub fn params(&self) -> NfftParams {
         self.fastsum.params
+    }
+
+    /// The shared spreading geometry (point-set-dependent, ℓ-independent).
+    pub fn plan(&self) -> &std::sync::Arc<crate::nfft::NfftPlan> {
+        self.fastsum.plan()
+    }
+
+    /// Pre-packing per-column reference pipeline (bench baseline).
+    pub fn apply_batch_ref(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let mut out = self.fastsum.apply_batch_ref(v, deriv);
+        if deriv {
+            for o in &mut out.data {
+                *o *= self.scale;
+            }
+        }
+        out
     }
 }
 
@@ -153,6 +185,14 @@ impl SubKernelMvm for NfftRustMvm {
             *o *= self.scale;
         }
         (k, d)
+    }
+    fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        self.fastsum.apply_batch_into(v, deriv, out);
+        if deriv {
+            for o in &mut out.data {
+                *o *= self.scale;
+            }
+        }
     }
 }
 
@@ -317,6 +357,51 @@ mod tests {
                 for i in 0..180 {
                     assert!((pk[(r, i)] - wk[(r, i)]).abs() < 1e-10, "{name} pair-k");
                     assert!((pd[(r, i)] - wd[(r, i)]).abs() < 1e-10, "{name} pair-d");
+                }
+            }
+        }
+    }
+
+    /// `apply_batch_into` must fully overwrite its output (no dependence on
+    /// prior contents) and match `apply_batch` for every engine.
+    #[test]
+    fn apply_batch_into_overwrites_and_matches() {
+        let points = wp(120, 2, 15, 0.0, 5.0);
+        let ell = 1.1;
+        let mut rng = Rng::new(16);
+        let nb = 4;
+        let mut v = Matrix::zeros(nb, 120);
+        for r in 0..nb {
+            v.row_mut(r).copy_from_slice(&rng.normal_vec(120));
+        }
+        let engines: Vec<(&str, Box<dyn SubKernelMvm>)> = vec![
+            (
+                "exact-rust",
+                Box::new(ExactRustMvm::new(KernelFn::Gaussian, points.clone(), ell)),
+            ),
+            (
+                "nfft-rust",
+                Box::new(NfftRustMvm::new(
+                    KernelFn::Gaussian,
+                    &points,
+                    ell,
+                    NfftParams::default_for_dim(2),
+                )),
+            ),
+        ];
+        for (name, engine) in &engines {
+            for deriv in [false, true] {
+                let want = engine.apply_batch(&v, deriv);
+                let mut got = Matrix::zeros(nb, 120);
+                got.data.fill(f64::NAN); // stale garbage must not survive
+                engine.apply_batch_into(&v, deriv, &mut got);
+                for r in 0..nb {
+                    for i in 0..120 {
+                        assert!(
+                            (got[(r, i)] - want[(r, i)]).abs() < 1e-12,
+                            "{name} deriv={deriv} r={r} i={i}"
+                        );
+                    }
                 }
             }
         }

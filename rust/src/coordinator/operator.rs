@@ -97,22 +97,33 @@ impl KernelOperator {
     /// P ≤ d/d_max is small in practice and the overlap beats serializing
     /// the windows. Cap the total with `FGP_THREADS` if needed.
     fn window_sum_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
-        let mut acc = if self.subs.len() == 1 {
-            self.subs[0].apply_batch(v, deriv)
+        let mut acc = Matrix::zeros(v.rows, v.cols);
+        self.window_sum_batch_into(v, deriv, &mut acc);
+        acc
+    }
+
+    /// Allocation-lean window sum writing into a caller-owned block (fully
+    /// overwritten): the single-window case — the common additive-GP layout
+    /// of one NFFT engine per coordinate pair run under one operator —
+    /// streams straight through the engine's `apply_batch_into`, so a CG
+    /// iteration reuses its product buffer instead of allocating one.
+    fn window_sum_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        assert_eq!(out.rows, v.rows);
+        assert_eq!(out.cols, v.cols);
+        if self.subs.len() == 1 {
+            self.subs[0].apply_batch_into(v, deriv, out);
         } else {
             let outs: Vec<Option<Matrix>> = parallel::parallel_map(self.subs.len(), |s| {
                 Some(self.subs[s].apply_batch(v, deriv))
             });
-            let mut acc = Matrix::zeros(v.rows, v.cols);
+            out.data.fill(0.0);
             for o in outs {
-                acc.add_assign(&o.expect("window result"));
+                out.add_assign(&o.expect("window result"));
             }
-            acc
-        };
-        for a in &mut acc.data {
+        }
+        for a in &mut out.data {
             *a *= self.sigma_f2;
         }
-        acc
     }
 
     /// Y = σ_f² Σ_s K_s V over an RHS block (row-per-vector layout):
@@ -206,13 +217,14 @@ impl LinOp for KernelOperator {
         assert_eq!(x.cols, self.n);
         assert_eq!(y.cols, self.n);
         assert_eq!(x.rows, y.rows);
-        let kv = self.kernel_mvm_batch(x);
-        for (yi, (ki, xi)) in y
-            .data
-            .iter_mut()
-            .zip(kv.data.iter().zip(&x.data))
-        {
-            *yi = ki + self.sigma_eps2 * xi;
+        self.mvm_count.fetch_add(x.rows, Ordering::Relaxed);
+        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        // σ_f² Σ_s K_s X straight into y, then the σ_ε² ridge in place: the
+        // CG inner loop calls this every iteration, so no product buffer is
+        // allocated per apply.
+        self.window_sum_batch_into(x, false, y);
+        for (yi, xi) in y.data.iter_mut().zip(&x.data) {
+            *yi += self.sigma_eps2 * xi;
         }
     }
 }

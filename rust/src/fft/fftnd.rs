@@ -9,12 +9,18 @@ use super::fft1d::FftPlan;
 pub struct FftNdPlan {
     pub shape: Vec<usize>,
     plans: Vec<FftPlan>, // one per distinct axis length, indexed by axis
+    strides: Vec<usize>, // row-major, precomputed at plan time
 }
 
 impl FftNdPlan {
     pub fn new(shape: &[usize]) -> Self {
         let plans = shape.iter().map(|&n| FftPlan::new(n)).collect();
-        Self { shape: shape.to_vec(), plans }
+        let d = shape.len();
+        let mut strides = vec![1usize; d];
+        for ax in (0..d.saturating_sub(1)).rev() {
+            strides[ax] = strides[ax + 1] * shape[ax + 1];
+        }
+        Self { shape: shape.to_vec(), plans, strides }
     }
 
     pub fn len(&self) -> usize {
@@ -25,29 +31,43 @@ impl FftNdPlan {
         self.len() == 0
     }
 
+    /// Length of the caller-provided scratch buffer required by the
+    /// `*_with` transforms: one line of the longest axis.
+    pub fn scratch_len(&self) -> usize {
+        *self.shape.iter().max().unwrap_or(&1)
+    }
+
     /// In-place forward transform (negative exponent, unscaled).
     pub fn forward(&self, data: &mut [Complex]) {
-        self.transform(data, true);
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.transform(data, &mut scratch, true);
     }
 
     /// In-place inverse transform (positive exponent, scaled by 1/N).
     pub fn inverse(&self, data: &mut [Complex]) {
-        self.transform(data, false);
+        let mut scratch = vec![Complex::ZERO; self.scratch_len()];
+        self.transform(data, &mut scratch, false);
     }
 
-    fn transform(&self, data: &mut [Complex], fwd: bool) {
+    /// Allocation-free forward transform: the caller owns the line scratch
+    /// (at least [`FftNdPlan::scratch_len`] entries, contents irrelevant).
+    pub fn forward_with(&self, data: &mut [Complex], scratch: &mut [Complex]) {
+        self.transform(data, scratch, true);
+    }
+
+    /// Allocation-free inverse transform (see [`FftNdPlan::forward_with`]).
+    pub fn inverse_with(&self, data: &mut [Complex], scratch: &mut [Complex]) {
+        self.transform(data, scratch, false);
+    }
+
+    fn transform(&self, data: &mut [Complex], scratch: &mut [Complex], fwd: bool) {
         assert_eq!(data.len(), self.len());
+        assert!(scratch.len() >= self.scratch_len(), "scratch too small");
         let d = self.shape.len();
-        // Row-major strides.
-        let mut strides = vec![1usize; d];
-        for ax in (0..d.saturating_sub(1)).rev() {
-            strides[ax] = strides[ax + 1] * self.shape[ax + 1];
-        }
         let total = self.len();
-        let mut scratch = vec![Complex::ZERO; *self.shape.iter().max().unwrap_or(&1)];
         for ax in 0..d {
             let n = self.shape[ax];
-            let stride = strides[ax];
+            let stride = self.strides[ax];
             let plan = &self.plans[ax];
             // Iterate over all 1-d lines along `ax`.
             let nlines = total / n;
@@ -62,7 +82,7 @@ impl FftNdPlan {
                     }
                     let idx = rem % len2;
                     rem /= len2;
-                    base += idx * strides[ax2];
+                    base += idx * self.strides[ax2];
                 }
                 if stride == 1 {
                     let seg = &mut data[base..base + n];
@@ -187,6 +207,31 @@ mod tests {
         crate::fft::FftPlan::new(64).forward(&mut b);
         for k in 0..64 {
             assert!((a[k] - b[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_allocating_path() {
+        // forward_with/inverse_with over a dirty, oversized, reused scratch
+        // buffer must be bitwise identical to forward/inverse.
+        let shape = [8usize, 4, 2];
+        let plan = FftNdPlan::new(&shape);
+        let x = random(64, 5);
+        let mut scratch = vec![Complex::new(f64::NAN, f64::NAN); plan.scratch_len() + 3];
+        for trial in 0..3 {
+            let mut a = x.clone();
+            plan.forward(&mut a);
+            let mut b = x.clone();
+            plan.forward_with(&mut b, &mut scratch);
+            assert_eq!(a.len(), b.len());
+            for k in 0..a.len() {
+                assert!(a[k].re == b[k].re && a[k].im == b[k].im, "fwd trial={trial} k={k}");
+            }
+            plan.inverse(&mut a);
+            plan.inverse_with(&mut b, &mut scratch);
+            for k in 0..a.len() {
+                assert!(a[k].re == b[k].re && a[k].im == b[k].im, "inv trial={trial} k={k}");
+            }
         }
     }
 

@@ -13,6 +13,16 @@
 //! Derivative-kernel consistency (§3.2): the b_k of ∂κ/∂ℓ are the exact
 //! ℓ-derivatives of the b_k of κ, so the fast summation of the derivative
 //! kernel *is* the derivative of the fast-summed kernel — eq. (3.4).
+//!
+//! Hot-path structure: all RHS vectors are real, so the batched applies
+//! pack *pairs* of columns into one complex pipeline (a + i·b), halving
+//! the spread/FFT/gather work; transforms borrow pooled workspaces from
+//! the plan so the steady state allocates nothing grid-sized; and the
+//! spreading geometry (an [`std::sync::Arc<NfftPlan>`]) is shared across
+//! length-scale updates — [`Fastsum::set_ell`] refreshes only the b_k
+//! tables, via one fused kernel+derivative FFT.
+
+use std::sync::Arc;
 
 use super::plan::{NfftParams, NfftPlan};
 use crate::fft::{fftn, Complex};
@@ -31,7 +41,7 @@ pub struct Fastsum {
     pub d: usize,
     pub ell: f64,
     pub params: NfftParams,
-    plan: NfftPlan,
+    plan: Arc<NfftPlan>,
     /// b_k(κ_R) for the kernel, DFT layout over m^d.
     bhat: Vec<Complex>,
     /// b_k for the ℓ-derivative kernel.
@@ -50,16 +60,7 @@ pub fn kernel_coefficients(
     let total = m.pow(d as u32);
     let mut grid = vec![Complex::ZERO; total];
     for (flat, g) in grid.iter_mut().enumerate() {
-        // DFT-layout index t per axis ↔ signed offset l ∈ [-m/2, m/2).
-        let mut rem = flat;
-        let mut r2 = 0.0;
-        for _ in 0..d {
-            let t = rem % m;
-            rem /= m;
-            let l = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
-            let coord = l as f64 / m as f64;
-            r2 += coord * coord;
-        }
+        let r2 = grid_r2(flat, d, m);
         let val = if deriv {
             kernel.deriv_ell_r2(r2, ell)
         } else {
@@ -75,6 +76,66 @@ pub fn kernel_coefficients(
     grid
 }
 
+/// Fused b_k(κ_R) + b_k(∂κ_R/∂ℓ): the kernel samples ride the real lane
+/// and the derivative samples the imaginary lane of ONE m^d FFT, then the
+/// two (real-input) spectra separate by Hermitian symmetry — exact on the
+/// integer grid, conj(F[(m−t) mod m]) = F[t]. Halves the cost of every
+/// length-scale refresh.
+pub fn kernel_coefficients_pair(
+    kernel: KernelFn,
+    d: usize,
+    m: usize,
+    ell: f64,
+) -> (Vec<Complex>, Vec<Complex>) {
+    let total = m.pow(d as u32);
+    let mut grid = vec![Complex::ZERO; total];
+    for (flat, g) in grid.iter_mut().enumerate() {
+        let r2 = grid_r2(flat, d, m);
+        *g = Complex::new(kernel.eval_r2(r2, ell), kernel.deriv_ell_r2(r2, ell));
+    }
+    fftn(&vec![m; d], &mut grid);
+    let scale = 0.5 / total as f64;
+    let mut b = vec![Complex::ZERO; total];
+    let mut bd = vec![Complex::ZERO; total];
+    for sf in 0..total {
+        let c = grid[sf];
+        let cm = grid[negate_flat(sf, d, m)];
+        b[sf] = Complex::new((c.re + cm.re) * scale, (c.im - cm.im) * scale);
+        bd[sf] = Complex::new((c.im + cm.im) * scale, (cm.re - c.re) * scale);
+    }
+    (b, bd)
+}
+
+/// Squared radius of the DFT-layout grid node `flat` (per-axis signed
+/// offset l ∈ [-m/2, m/2) divided by m).
+fn grid_r2(flat: usize, d: usize, m: usize) -> f64 {
+    let mut rem = flat;
+    let mut r2 = 0.0;
+    for _ in 0..d {
+        let t = rem % m;
+        rem /= m;
+        let l = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
+        let coord = l as f64 / m as f64;
+        r2 += coord * coord;
+    }
+    r2
+}
+
+/// Flat DFT-layout index of the negated frequency: per axis t → (m−t) mod m.
+fn negate_flat(flat: usize, d: usize, m: usize) -> usize {
+    let mut rem = flat;
+    let mut idx = [0usize; 3];
+    for ax in (0..d).rev() {
+        idx[ax] = rem % m;
+        rem /= m;
+    }
+    let mut out = 0usize;
+    for &t in idx.iter().take(d) {
+        out = out * m + (m - t) % m;
+    }
+    out
+}
+
 impl Fastsum {
     pub fn new(
         kernel: KernelFn,
@@ -83,9 +144,18 @@ impl Fastsum {
         ell: f64,
         params: NfftParams,
     ) -> Fastsum {
-        let plan = NfftPlan::new(pts, d, params);
-        let bhat = kernel_coefficients(kernel, d, params.m, ell, false);
-        let bhat_deriv = kernel_coefficients(kernel, d, params.m, ell, true);
+        let plan = Arc::new(NfftPlan::new(pts, d, params));
+        Self::with_plan(kernel, plan, ell)
+    }
+
+    /// Build a fast-summation operator on an *existing* spreading geometry:
+    /// the plan depends only on the point set, so sub-kernels and
+    /// hyperparameter sweeps over the same points share stencils, wrapped
+    /// indices, deconvolution tables, FFT twiddles, and the workspace pool.
+    pub fn with_plan(kernel: KernelFn, plan: Arc<NfftPlan>, ell: f64) -> Fastsum {
+        let d = plan.d;
+        let params = plan.params;
+        let (bhat, bhat_deriv) = kernel_coefficients_pair(kernel, d, params.m, ell);
         Fastsum { kernel, d, ell, params, plan, bhat, bhat_deriv }
     }
 
@@ -93,33 +163,119 @@ impl Fastsum {
         self.plan.n
     }
 
+    /// The shared point-set geometry backing this operator.
+    pub fn plan(&self) -> &Arc<NfftPlan> {
+        &self.plan
+    }
+
     /// h_i = Σ_j v_j κ(x_i − x_j)  (or the ∂/∂ℓ kernel when `deriv`).
     pub fn apply(&self, v: &[f64], deriv: bool) -> Vec<f64> {
-        let vc: Vec<Complex> = v.iter().map(|&x| Complex::new(x, 0.0)).collect();
-        let mut ghat = self.plan.adjoint(&vc);
+        let mut out = vec![0.0; self.n()];
+        self.apply_into(v, deriv, &mut out);
+        out
+    }
+
+    /// Allocation-free single apply: internally parallel, writes into `out`.
+    pub fn apply_into(&self, v: &[f64], deriv: bool, out: &mut [f64]) {
+        assert_eq!(v.len(), self.n());
+        assert_eq!(out.len(), self.n());
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
-        for (g, bk) in ghat.iter_mut().zip(b) {
-            *g = *g * *bk;
+        let plan = &*self.plan;
+        let mut ws = plan.acquire_workspace();
+        for (s, &x) in ws.stage.iter_mut().zip(v) {
+            *s = Complex::new(x, 0.0);
         }
-        let h = self.plan.trafo(&ghat);
-        h.into_iter().map(|c| c.re).collect()
+        plan.spread_parallel_into(&ws.stage, &mut ws.grid);
+        plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+        plan.project_single_into(&ws.grid, &mut ws.small_a);
+        plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+        plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+        plan.gather_re_parallel_into(&ws.grid, out);
+        plan.release_workspace(ws);
     }
 
     /// Batched fast summation over an RHS block (one vector per row of
-    /// `v`): every column reuses this plan's spreading geometry and FFT
-    /// tables, and the columns run in parallel. Per column the pipeline is
-    /// identical to [`Fastsum::apply`].
+    /// `v`): columns are real, so pairs of them are Hermitian-packed into
+    /// one complex pipeline each (a + i·b) — one spread, one FFT, one
+    /// embed, one inverse FFT and one gather per *pair* — and the pairs run
+    /// in parallel, each on a pooled workspace.
     pub fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
+        let mut out = Matrix::zeros(v.rows, v.cols);
+        self.apply_batch_into(v, deriv, &mut out);
+        out
+    }
+
+    /// In-place batched apply (see [`Fastsum::apply_batch`]); `out` must be
+    /// the same shape as `v` and is fully overwritten.
+    pub fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
         assert_eq!(v.cols, self.n());
+        assert_eq!(out.rows, v.rows);
+        assert_eq!(out.cols, v.cols);
         let nb = v.rows;
+        let n = v.cols;
+        if nb == 0 {
+            return;
+        }
         if nb == 1 {
             // Single straggler column (e.g. the last active RHS of a block
-            // CG): the column-parallel pipeline would run serial — use the
+            // CG): the pair-parallel pipeline would run serial — use the
             // internally-parallel single apply instead.
-            let mut out = Matrix::zeros(1, v.cols);
-            out.row_mut(0).copy_from_slice(&self.apply(v.row(0), deriv));
-            return out;
+            self.apply_into(v.row(0), deriv, out.row_mut(0));
+            return;
         }
+        let b = if deriv { &self.bhat_deriv } else { &self.bhat };
+        let plan = &*self.plan;
+        let npairs = nb / 2;
+        parallel::parallel_rows(
+            &mut out.data[..npairs * 2 * n],
+            npairs,
+            2 * n,
+            |p, band| {
+                let (oa, ob) = band.split_at_mut(n);
+                let va = v.row(2 * p);
+                let vb = v.row(2 * p + 1);
+                let mut ws = plan.acquire_workspace();
+                for (j, s) in ws.stage.iter_mut().enumerate() {
+                    *s = Complex::new(va[j], vb[j]);
+                }
+                plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+                plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                plan.embed_packed_scaled_into(
+                    &ws.small_a,
+                    &ws.small_b,
+                    b,
+                    &mut ws.grid,
+                );
+                plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                plan.gather_packed_serial_into(&ws.grid, oa, ob);
+                plan.release_workspace(ws);
+            },
+        );
+        if nb % 2 == 1 {
+            // Odd straggler: plain single-column serial pipeline.
+            let r = nb - 1;
+            let mut ws = plan.acquire_workspace();
+            let vr = v.row(r);
+            for (s, &x) in ws.stage.iter_mut().zip(vr) {
+                *s = Complex::new(x, 0.0);
+            }
+            plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+            plan.project_single_into(&ws.grid, &mut ws.small_a);
+            plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            plan.gather_re_serial_into(&ws.grid, out.row_mut(r));
+            plan.release_workspace(ws);
+        }
+    }
+
+    /// Pre-packing reference pipeline (one full complex transform chain per
+    /// column, parallel over columns) — kept as the baseline the perf
+    /// benches compare the packed path against.
+    pub fn apply_batch_ref(&self, v: &Matrix, deriv: bool) -> Matrix {
+        assert_eq!(v.cols, self.n());
+        let nb = v.rows;
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
         let rows: Vec<Vec<f64>> = parallel::parallel_map(nb, |r| {
             let vc: Vec<Complex> =
@@ -141,69 +297,107 @@ impl Fastsum {
         out
     }
 
-    /// Fused kernel + ℓ-derivative fast summation over an RHS block:
-    /// per column ONE adjoint transform feeds two diagonal scalings (b_k
-    /// and ∂b_k/∂ℓ, eq. (3.4)) and two trafos — the adjoint is shared, so
-    /// a gradient step's pair of operator products costs 3 transforms per
-    /// column instead of 4.
+    /// Fused kernel + ℓ-derivative fast summation over an RHS block: per
+    /// packed *pair* of columns ONE adjoint transform (spread + FFT +
+    /// Hermitian split) feeds two diagonal scalings (b_k and ∂b_k/∂ℓ,
+    /// eq. (3.4)) and two packed trafos — 3 transforms per pair instead of
+    /// the 8 a naive kernel+derivative double batch would use.
     pub fn apply_batch_pair(&self, v: &Matrix) -> (Matrix, Matrix) {
-        assert_eq!(v.cols, self.n());
-        let nb = v.rows;
-        if nb == 1 {
-            // Keep the shared adjoint but use the plan's internally
-            // parallel transforms for the lone column.
-            let vc: Vec<Complex> =
-                v.row(0).iter().map(|&x| Complex::new(x, 0.0)).collect();
-            let ghat = self.plan.adjoint(&vc);
-            let gk: Vec<Complex> =
-                ghat.iter().zip(&self.bhat).map(|(g, bk)| *g * *bk).collect();
-            let gd: Vec<Complex> = ghat
-                .iter()
-                .zip(&self.bhat_deriv)
-                .map(|(g, bk)| *g * *bk)
-                .collect();
-            let mut out_k = Matrix::zeros(1, v.cols);
-            let mut out_d = Matrix::zeros(1, v.cols);
-            for (o, c) in out_k.row_mut(0).iter_mut().zip(self.plan.trafo(&gk)) {
-                *o = c.re;
-            }
-            for (o, c) in out_d.row_mut(0).iter_mut().zip(self.plan.trafo(&gd)) {
-                *o = c.re;
-            }
-            return (out_k, out_d);
-        }
-        let rows: Vec<(Vec<f64>, Vec<f64>)> = parallel::parallel_map(nb, |r| {
-            let vc: Vec<Complex> =
-                v.row(r).iter().map(|&x| Complex::new(x, 0.0)).collect();
-            let ghat = self.plan.adjoint_serial(&vc);
-            let gk: Vec<Complex> =
-                ghat.iter().zip(&self.bhat).map(|(g, bk)| *g * *bk).collect();
-            let gd: Vec<Complex> = ghat
-                .iter()
-                .zip(&self.bhat_deriv)
-                .map(|(g, bk)| *g * *bk)
-                .collect();
-            let hk = self.plan.trafo_serial(&gk).into_iter().map(|c| c.re).collect();
-            let hd = self.plan.trafo_serial(&gd).into_iter().map(|c| c.re).collect();
-            (hk, hd)
-        });
-        let mut out_k = Matrix::zeros(nb, v.cols);
-        let mut out_d = Matrix::zeros(nb, v.cols);
-        for (r, (hk, hd)) in rows.into_iter().enumerate() {
-            out_k.row_mut(r).copy_from_slice(&hk);
-            out_d.row_mut(r).copy_from_slice(&hd);
-        }
+        let mut out_k = Matrix::zeros(v.rows, v.cols);
+        let mut out_d = Matrix::zeros(v.rows, v.cols);
+        self.apply_batch_pair_into(v, &mut out_k, &mut out_d);
         (out_k, out_d)
     }
 
+    /// In-place fused kernel + derivative batch apply (see
+    /// [`Fastsum::apply_batch_pair`]); both outputs are fully overwritten.
+    pub fn apply_batch_pair_into(
+        &self,
+        v: &Matrix,
+        out_k: &mut Matrix,
+        out_d: &mut Matrix,
+    ) {
+        assert_eq!(v.cols, self.n());
+        for out in [&mut *out_k, &mut *out_d] {
+            assert_eq!(out.rows, v.rows);
+            assert_eq!(out.cols, v.cols);
+        }
+        let nb = v.rows;
+        let n = v.cols;
+        if nb == 0 {
+            return;
+        }
+        let plan = &*self.plan;
+        let npairs = nb / 2;
+        parallel::parallel_zip_rows(
+            &mut out_k.data[..npairs * 2 * n],
+            &mut out_d.data[..npairs * 2 * n],
+            npairs,
+            2 * n,
+            |p, band_k, band_d| {
+                let (ka, kb) = band_k.split_at_mut(n);
+                let (da, db) = band_d.split_at_mut(n);
+                let va = v.row(2 * p);
+                let vb = v.row(2 * p + 1);
+                let mut ws = plan.acquire_workspace();
+                for (j, s) in ws.stage.iter_mut().enumerate() {
+                    *s = Complex::new(va[j], vb[j]);
+                }
+                // Shared packed adjoint ...
+                plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+                plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                // ... then one packed trafo per diagonal (the embeds only
+                // consume the small spectra, which survive both passes).
+                plan.embed_packed_scaled_into(
+                    &ws.small_a,
+                    &ws.small_b,
+                    &self.bhat,
+                    &mut ws.grid,
+                );
+                plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                plan.gather_packed_serial_into(&ws.grid, ka, kb);
+                plan.embed_packed_scaled_into(
+                    &ws.small_a,
+                    &ws.small_b,
+                    &self.bhat_deriv,
+                    &mut ws.grid,
+                );
+                plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                plan.gather_packed_serial_into(&ws.grid, da, db);
+                plan.release_workspace(ws);
+            },
+        );
+        if nb % 2 == 1 {
+            // Odd straggler: shared single-column adjoint, two trafos.
+            let r = nb - 1;
+            let mut ws = plan.acquire_workspace();
+            let vr = v.row(r);
+            for (s, &x) in ws.stage.iter_mut().zip(vr) {
+                *s = Complex::new(x, 0.0);
+            }
+            plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+            plan.project_single_into(&ws.grid, &mut ws.small_a);
+            plan.embed_single_scaled_into(&ws.small_a, &self.bhat, &mut ws.grid);
+            plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            plan.gather_re_serial_into(&ws.grid, out_k.row_mut(r));
+            plan.embed_single_scaled_into(&ws.small_a, &self.bhat_deriv, &mut ws.grid);
+            plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            plan.gather_re_serial_into(&ws.grid, out_d.row_mut(r));
+            plan.release_workspace(ws);
+        }
+    }
+
     /// Refresh the kernel coefficients for a new length-scale without
-    /// re-planning the (fixed) point geometry — the per-Adam-step fast path.
+    /// re-planning the (fixed) point geometry — the per-Adam-step fast
+    /// path: one fused FFT refreshes both b_k tables.
     pub fn set_ell(&mut self, ell: f64) {
         if ell != self.ell {
             self.ell = ell;
-            self.bhat = kernel_coefficients(self.kernel, self.d, self.params.m, ell, false);
-            self.bhat_deriv =
-                kernel_coefficients(self.kernel, self.d, self.params.m, ell, true);
+            let (b, bd) = kernel_coefficients_pair(self.kernel, self.d, self.params.m, ell);
+            self.bhat = b;
+            self.bhat_deriv = bd;
         }
     }
 }
@@ -457,6 +651,36 @@ mod tests {
         }
     }
 
+    /// The fused pair FFT must reproduce the two separate coefficient FFTs.
+    #[test]
+    fn kernel_coefficients_pair_matches_separate() {
+        for (kernel, d, m, ell) in [
+            (KernelFn::Gaussian, 1usize, 32usize, 0.07),
+            (KernelFn::Matern12, 2, 16, 0.12),
+            (KernelFn::Gaussian, 3, 8, 0.2),
+        ] {
+            let (b, bd) = kernel_coefficients_pair(kernel, d, m, ell);
+            let rb = kernel_coefficients(kernel, d, m, ell, false);
+            let rbd = kernel_coefficients(kernel, d, m, ell, true);
+            let scale: f64 = rb
+                .iter()
+                .chain(&rbd)
+                .map(|c| c.abs())
+                .fold(0.0, f64::max)
+                .max(1.0);
+            for k in 0..b.len() {
+                assert!(
+                    (b[k] - rb[k]).abs() < 1e-12 * scale,
+                    "{kernel:?} d={d} kernel coeff k={k}"
+                );
+                assert!(
+                    (bd[k] - rbd[k]).abs() < 1e-12 * scale,
+                    "{kernel:?} d={d} deriv coeff k={k}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn fastsum_cross_matches_dense() {
         let ns = 80;
@@ -516,6 +740,75 @@ mod tests {
         }
     }
 
+    /// The Hermitian-packed batch must agree with the pre-packing
+    /// per-column reference pipeline to near machine precision.
+    #[test]
+    fn packed_batch_matches_per_column_reference() {
+        let n = 110;
+        let d = 2;
+        let ell = 0.09;
+        let pts = random_pts(n, d, 25, 0.25);
+        let params = NfftParams { m: 32, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let fs = Fastsum::new(KernelFn::Matern12, &pts, d, ell, params);
+        let mut rng = Rng::new(26);
+        for nb in [2usize, 4, 7] {
+            let mut v = Matrix::zeros(nb, n);
+            for r in 0..nb {
+                v.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+            }
+            let v1: f64 = v.data.iter().map(|x| x.abs()).sum();
+            for deriv in [false, true] {
+                let packed = fs.apply_batch(&v, deriv);
+                let reference = fs.apply_batch_ref(&v, deriv);
+                for r in 0..nb {
+                    for i in 0..n {
+                        assert!(
+                            (packed[(r, i)] - reference[(r, i)]).abs() < 1e-12 * v1,
+                            "nb={nb} deriv={deriv} r={r} i={i}: {} vs {}",
+                            packed[(r, i)],
+                            reference[(r, i)]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Workspace recycling across interleaved batched applies must be
+    /// bitwise reproducible (no stale-buffer leakage between columns,
+    /// shapes, or kernel/deriv passes).
+    #[test]
+    fn repeated_interleaved_applies_are_identical() {
+        let n = 64;
+        let d = 2;
+        let pts = random_pts(n, d, 27, 0.25);
+        let params = NfftParams { m: 16, sigma: 2.0, s: 6, window: WindowKind::KaiserBessel };
+        let fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.1, params);
+        let mut rng = Rng::new(28);
+        let mut v4 = Matrix::zeros(4, n);
+        for r in 0..4 {
+            v4.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        let v1 = rng.normal_vec(n);
+        let b1 = fs.apply_batch(&v4, false);
+        let (p1k, p1d) = fs.apply_batch_pair(&v4);
+        let s1 = fs.apply(&v1, true);
+        // Interleave other shapes, then repeat the originals.
+        let _ = fs.apply(&v1, false);
+        let mut v3 = Matrix::zeros(3, n);
+        for r in 0..3 {
+            v3.row_mut(r).copy_from_slice(&rng.normal_vec(n));
+        }
+        let _ = fs.apply_batch(&v3, true);
+        let b2 = fs.apply_batch(&v4, false);
+        let (p2k, p2d) = fs.apply_batch_pair(&v4);
+        let s2 = fs.apply(&v1, true);
+        assert_eq!(b1.data, b2.data);
+        assert_eq!(p1k.data, p2k.data);
+        assert_eq!(p1d.data, p2d.data);
+        assert_eq!(s1, s2);
+    }
+
     #[test]
     fn apply_batch_pair_shares_one_adjoint_correctly() {
         let n = 70;
@@ -553,6 +846,35 @@ mod tests {
         let fresh = Fastsum::new(KernelFn::Gaussian, &pts, 1, 0.2, params).apply(&v, false);
         for i in 0..50 {
             assert_eq!(via_set[i], fresh[i]);
+        }
+    }
+
+    /// Geometry caching: sub-kernels built on a shared plan keep the exact
+    /// same spreading geometry object, `set_ell` does not replace it, and
+    /// the shared-plan operator matches a from-scratch `Fastsum::new`.
+    #[test]
+    fn with_plan_shares_geometry_across_ell_updates() {
+        let n = 60;
+        let d = 2;
+        let pts = random_pts(n, d, 29, 0.25);
+        let params = NfftParams { m: 16, sigma: 2.0, s: 6, window: WindowKind::KaiserBessel };
+        let plan = std::sync::Arc::new(NfftPlan::new(&pts, d, params));
+        let mut shared = Fastsum::with_plan(KernelFn::Gaussian, plan.clone(), 0.05);
+        assert!(std::sync::Arc::ptr_eq(shared.plan(), &plan));
+        shared.set_ell(0.17);
+        assert!(
+            std::sync::Arc::ptr_eq(shared.plan(), &plan),
+            "set_ell must not rebuild the spreading geometry"
+        );
+        let fresh = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.17, params);
+        let mut rng = Rng::new(30);
+        let v = rng.normal_vec(n);
+        for deriv in [false, true] {
+            let a = shared.apply(&v, deriv);
+            let b = fresh.apply(&v, deriv);
+            for i in 0..n {
+                assert_eq!(a[i], b[i], "deriv={deriv} i={i}");
+            }
         }
     }
 }

@@ -10,6 +10,8 @@ pub mod fastsum;
 pub mod plan;
 pub mod window;
 
-pub use fastsum::{kernel_coefficients, Fastsum, FastsumCross};
-pub use plan::{NfftParams, NfftPlan};
+pub use fastsum::{
+    kernel_coefficients, kernel_coefficients_pair, Fastsum, FastsumCross,
+};
+pub use plan::{NfftParams, NfftPlan, NfftWorkspace};
 pub use window::{Window, WindowKind};

@@ -9,6 +9,13 @@
 //! Points live in [-1/4, 1/4)^d (the fast-summation domain); the window
 //! stencil wraps periodically on the oversampled grid of size M = σm per
 //! axis.
+//!
+//! The hot path is allocation-free after warm-up: every transform borrows
+//! an [`NfftWorkspace`] from a per-plan [`parallel::ObjectPool`], the
+//! deconvolution weights and grid embeddings are table-driven
+//! (`pad_idx`/`pad_neg_idx`/`deconv_tab`, built once in [`NfftPlan::new`]),
+//! and pairs of *real* coefficient vectors can ride one complex transform
+//! via Hermitian packing (`project_packed_into`/`embed_packed_scaled_into`).
 
 use super::window::{Window, WindowKind};
 use crate::fft::{Complex, FftNdPlan};
@@ -43,12 +50,49 @@ impl NfftParams {
     }
 
     pub fn grid_size(&self) -> usize {
-        let big_m = (self.m as f64 * self.sigma).round() as usize;
+        let exact = self.m as f64 * self.sigma;
+        let big_m = exact.round() as usize;
+        // σm must be an integer *exactly*: the spreading stencil uses the
+        // rounded grid size while the window shape uses the exact σ, so a
+        // silent round (e.g. σ = 1.999, m = 32 → M = 64) would mismatch
+        // the deconvolution against the spread.
+        assert!(
+            (exact - big_m as f64).abs() <= 1e-9 * exact.abs().max(1.0),
+            "σ·m = {} × {} = {exact} is not an integer; choose σ so the \
+             oversampled grid size σm is a power-of-two integer",
+            self.sigma,
+            self.m
+        );
         assert!(
             big_m.is_power_of_two(),
             "oversampled grid σm = {big_m} must be a power of two"
         );
         big_m
+    }
+}
+
+/// Reusable per-transform scratch: the oversampled grid, two small-spectrum
+/// buffers, a complex staging vector for real inputs, and the FFT line
+/// scratch. Borrowed from [`NfftPlan`]'s pool so steady-state applies do no
+/// grid-sized heap allocation.
+#[derive(Clone, Debug)]
+pub struct NfftWorkspace {
+    pub(crate) grid: Vec<Complex>,
+    pub(crate) small_a: Vec<Complex>,
+    pub(crate) small_b: Vec<Complex>,
+    pub(crate) stage: Vec<Complex>,
+    pub(crate) fft_scratch: Vec<Complex>,
+}
+
+impl NfftWorkspace {
+    fn new_for(plan: &NfftPlan) -> Self {
+        NfftWorkspace {
+            grid: vec![Complex::ZERO; plan.grid_len()],
+            small_a: vec![Complex::ZERO; plan.num_coeffs()],
+            small_b: vec![Complex::ZERO; plan.num_coeffs()],
+            stage: vec![Complex::ZERO; plan.n],
+            fft_scratch: vec![Complex::ZERO; plan.fft.scratch_len()],
+        }
     }
 }
 
@@ -59,18 +103,22 @@ pub struct NfftPlan {
     pub n: usize,
     pub params: NfftParams,
     pub big_m: usize,
-    /// Per point, per axis: first grid index of the stencil (may be negative
-    /// pre-wrap); length n*d.
-    base: Vec<i32>,
     /// Per point, per axis, 2s window values; length n*d*2s.
     weights: Vec<f64>,
     /// Per point, per axis, 2s *wrapped grid indices* (precomputed so the
     /// spread/gather hot loops do no modular arithmetic); length n*d*2s.
     wrapped: Vec<i32>,
-    /// Per-axis deconvolution factors 1/c_k(φ̃) for k ∈ I_m in DFT layout
-    /// (index t ↔ k = t < m/2 ? t : t - m); length m.
-    inv_phihat: Vec<f64>,
+    /// Flat oversampled-grid index of each small-grid coefficient k ∈ I_m
+    /// (DFT layout over m^d); length m^d.
+    pad_idx: Vec<u32>,
+    /// Flat oversampled-grid index of the mirrored frequency −k (mod M per
+    /// axis), used by the Hermitian-packed split; length m^d.
+    pad_neg_idx: Vec<u32>,
+    /// Deconvolution products Π_ax 1/c_{k_ax}(φ̃) per coefficient;
+    /// length m^d.
+    deconv_tab: Vec<f64>,
     fft: FftNdPlan,
+    pool: parallel::ObjectPool<NfftWorkspace>,
 }
 
 impl NfftPlan {
@@ -78,7 +126,7 @@ impl NfftPlan {
     /// (Any points in [-1/2, 1/2) work for the pure transforms; the
     /// fast-summation wrapper enforces the quarter box.)
     pub fn new(pts: &[f64], d: usize, params: NfftParams) -> NfftPlan {
-        assert!(d >= 1 && d <= 3, "NFFT supports d in 1..=3 (d_max = 3)");
+        assert!((1..=3).contains(&d), "NFFT supports d in 1..=3 (d_max = 3)");
         assert_eq!(pts.len() % d, 0);
         let n = pts.len() / d;
         let big_m = params.grid_size();
@@ -86,7 +134,6 @@ impl NfftPlan {
         let s = params.s;
         let two_s = 2 * s;
 
-        let mut base = vec![0i32; n * d];
         let mut weights = vec![0.0f64; n * d * two_s];
         let mf = big_m as f64;
         parallel::parallel_rows(&mut weights, n, d * two_s, |i, wrow| {
@@ -102,14 +149,13 @@ impl NfftPlan {
                 }
             }
         });
-        // Base indices + wrapped per-tap grid indices (serial second pass).
+        // Wrapped per-tap grid indices (serial second pass).
         let mut wrapped = vec![0i32; n * d * two_s];
         for i in 0..n {
             for ax in 0..d {
                 let x = pts[i * d + ax];
                 let c = (x * mf).floor() as i64;
                 let u0 = c - s as i64 + 1;
-                base[i * d + ax] = u0 as i32;
                 for t in 0..two_s {
                     wrapped[(i * d + ax) * two_s + t] =
                         (u0 + t as i64).rem_euclid(big_m as i64) as i32;
@@ -119,13 +165,53 @@ impl NfftPlan {
 
         let m = params.m;
         let mut inv_phihat = vec![0.0f64; m];
-        for t in 0..m {
+        for (t, inv) in inv_phihat.iter_mut().enumerate() {
             let k = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
-            inv_phihat[t] = 1.0 / window.phi_hat(k);
+            *inv = 1.0 / window.phi_hat(k);
+        }
+
+        // Table-driven deconvolution: for each small-grid flat index sf,
+        // precompute the big-grid flat index of k and of −k plus the
+        // per-axis deconvolution product, so project/embed are linear scans.
+        let ncoef = m.pow(d as u32);
+        let mut pad_idx = vec![0u32; ncoef];
+        let mut pad_neg_idx = vec![0u32; ncoef];
+        let mut deconv_tab = vec![0.0f64; ncoef];
+        for sf in 0..ncoef {
+            let mut rem = sf;
+            let mut small_idx = [0usize; 3];
+            for ax in (0..d).rev() {
+                small_idx[ax] = rem % m;
+                rem /= m;
+            }
+            let mut bf = 0usize;
+            let mut bfn = 0usize;
+            let mut prod = 1.0f64;
+            for &t in small_idx.iter().take(d) {
+                let k = if t < m / 2 { t as i64 } else { t as i64 - m as i64 };
+                bf = bf * big_m + k.rem_euclid(big_m as i64) as usize;
+                bfn = bfn * big_m + (-k).rem_euclid(big_m as i64) as usize;
+                prod *= inv_phihat[t];
+            }
+            pad_idx[sf] = bf as u32;
+            pad_neg_idx[sf] = bfn as u32;
+            deconv_tab[sf] = prod;
         }
 
         let fft = FftNdPlan::new(&vec![big_m; d]);
-        NfftPlan { d, n, params, big_m, base, weights, wrapped, inv_phihat, fft }
+        NfftPlan {
+            d,
+            n,
+            params,
+            big_m,
+            weights,
+            wrapped,
+            pad_idx,
+            pad_neg_idx,
+            deconv_tab,
+            fft,
+            pool: parallel::ObjectPool::new(),
+        }
     }
 
     #[inline]
@@ -133,30 +219,35 @@ impl NfftPlan {
         self.big_m.pow(self.d as u32)
     }
 
-    /// Spread coefficients onto the oversampled grid:
-    /// G_u = Σ_j v_j φ̃(x_j − u/M). Complex input to serve both directions.
-    fn spread(&self, v: &[Complex]) -> Vec<Complex> {
-        assert_eq!(v.len(), self.n);
-        let glen = self.grid_len();
-        // Per-chunk private grids reduced at the end — the grid is small
-        // (at most 64³ ≈ 262k entries), so thread-local copies beat atomics.
-        let nchunks = parallel::num_threads().min(16).max(1);
-        let grids = std::sync::Mutex::new(Vec::<Vec<Complex>>::new());
-        parallel::parallel_chunks(self.n, nchunks, |_c, lo, hi| {
-            let mut grid = vec![Complex::ZERO; glen];
-            for j in lo..hi {
-                self.spread_point(j, v[j], &mut grid);
-            }
-            grids.lock().unwrap().push(grid);
-        });
-        let grids = grids.into_inner().unwrap();
-        let mut acc = vec![Complex::ZERO; glen];
-        for g in &grids {
-            for (a, b) in acc.iter_mut().zip(g) {
-                *a += *b;
-            }
-        }
-        acc
+    /// Number of small-grid coefficients |I_m| = m^d.
+    pub fn num_coeffs(&self) -> usize {
+        self.params.m.pow(self.d as u32)
+    }
+
+    /// Grid memory footprint in bytes (for perf estimates).
+    pub fn grid_bytes(&self) -> usize {
+        self.grid_len() * std::mem::size_of::<Complex>()
+    }
+
+    /// Borrow a workspace from the plan's pool (allocating only when the
+    /// pool is dry, i.e. during warm-up).
+    pub fn acquire_workspace(&self) -> NfftWorkspace {
+        self.pool.take_or_else(|| NfftWorkspace::new_for(self))
+    }
+
+    /// Return a workspace for reuse by later transforms.
+    pub fn release_workspace(&self, ws: NfftWorkspace) {
+        self.pool.put(ws);
+    }
+
+    #[inline]
+    pub(crate) fn fft_forward(&self, grid: &mut [Complex], scratch: &mut [Complex]) {
+        self.fft.forward_with(grid, scratch);
+    }
+
+    #[inline]
+    pub(crate) fn fft_inverse(&self, grid: &mut [Complex], scratch: &mut [Complex]) {
+        self.fft.inverse_with(grid, scratch);
     }
 
     #[inline]
@@ -197,16 +288,60 @@ impl NfftPlan {
         }
     }
 
-    /// Serial spread of one coefficient vector (no internal threading) —
-    /// the building block for the batched transforms, which parallelize
-    /// across RHS columns instead of within one column.
-    fn spread_serial(&self, v: &[Complex]) -> Vec<Complex> {
+    /// Serial spread of one coefficient vector into `grid` (zeroed first).
+    pub(crate) fn spread_serial_into(&self, v: &[Complex], grid: &mut [Complex]) {
         assert_eq!(v.len(), self.n);
-        let mut grid = vec![Complex::ZERO; self.grid_len()];
+        assert_eq!(grid.len(), self.grid_len());
+        grid.fill(Complex::ZERO);
         for j in 0..self.n {
-            self.spread_point(j, v[j], &mut grid);
+            self.spread_point(j, v[j], grid);
         }
-        grid
+    }
+
+    /// Parallel spread with a *deterministic* reduction: chunk c always
+    /// covers points [c·per, (c+1)·per) and the per-chunk grids are summed
+    /// in chunk order, so repeated calls are bitwise identical (the old
+    /// implementation pushed chunk grids into a Mutex in thread-completion
+    /// order, making the floating-point summation order run-dependent).
+    /// Chunk 0 spreads directly into `grid`; the extra chunks borrow pooled
+    /// workspaces, so this path too is allocation-free after warm-up.
+    pub(crate) fn spread_parallel_into(&self, v: &[Complex], grid: &mut [Complex]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(grid.len(), self.grid_len());
+        let n = self.n;
+        let nchunks_max = parallel::num_threads().clamp(1, 16).min(n.max(1));
+        let per = n.div_ceil(nchunks_max.max(1)).max(1);
+        let nchunks = n.div_ceil(per).max(1);
+        if nchunks <= 1 {
+            self.spread_serial_into(v, grid);
+            return;
+        }
+        let mut extra: Vec<NfftWorkspace> =
+            (1..nchunks).map(|_| self.acquire_workspace()).collect();
+        std::thread::scope(|s| {
+            for (ci, ws) in extra.iter_mut().enumerate() {
+                let c = ci + 1;
+                let lo = c * per;
+                let hi = ((c + 1) * per).min(n);
+                s.spawn(move || {
+                    ws.grid.fill(Complex::ZERO);
+                    for j in lo..hi {
+                        self.spread_point(j, v[j], &mut ws.grid);
+                    }
+                });
+            }
+            // Chunk 0 on the calling thread, straight into the output.
+            grid.fill(Complex::ZERO);
+            for j in 0..per.min(n) {
+                self.spread_point(j, v[j], grid);
+            }
+        });
+        for ws in extra {
+            for (a, b) in grid.iter_mut().zip(&ws.grid) {
+                *a += *b;
+            }
+            self.release_workspace(ws);
+        }
     }
 
     #[inline]
@@ -252,111 +387,175 @@ impl NfftPlan {
         acc
     }
 
-    /// Gather from the grid at each point: out_j = Σ_u G_u φ̃(x_j − u/M).
-    fn gather(&self, grid: &[Complex]) -> Vec<Complex> {
-        assert_eq!(grid.len(), self.grid_len());
-        parallel::parallel_map(self.n, |j| self.gather_point(j, grid))
-    }
-
-    fn gather_serial(&self, grid: &[Complex]) -> Vec<Complex> {
-        assert_eq!(grid.len(), self.grid_len());
-        (0..self.n).map(|j| self.gather_point(j, grid)).collect()
-    }
-
-    /// Map a frequency k ∈ I_m (component-wise DFT layout index over the
-    /// *small* grid m) to the flat index on the oversampled DFT grid.
-    fn pad_index(&self, small_flat: usize) -> usize {
-        let m = self.params.m;
-        let mm = self.big_m;
-        let mut rem = small_flat;
-        let mut out = 0usize;
-        // Row-major over d axes of size m.
-        let mut small_idx = [0usize; 3];
-        for ax in (0..self.d).rev() {
-            small_idx[ax] = rem % m;
-            rem /= m;
+    /// Gather the real parts at every point, serially (batch hot path).
+    pub(crate) fn gather_re_serial_into(&self, grid: &[Complex], out: &mut [f64]) {
+        assert_eq!(out.len(), self.n);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.gather_point(j, grid).re;
         }
-        for ax in 0..self.d {
-            let t = small_idx[ax];
-            let k = if t < m / 2 {
-                t as i64
-            } else {
-                t as i64 - m as i64
-            };
-            let big_t = k.rem_euclid(mm as i64) as usize;
-            out = out * mm + big_t;
-        }
-        out
     }
 
-    /// Per-axis deconvolution product Π 1/c_{k_ax}(φ̃) at small flat index.
-    fn deconv(&self, small_flat: usize) -> f64 {
-        let m = self.params.m;
-        let mut rem = small_flat;
-        let mut prod = 1.0;
-        for _ax in 0..self.d {
-            let t = rem % m;
-            rem /= m;
-            prod *= self.inv_phihat[t];
-        }
-        prod
+    /// Gather the real parts at every point, parallel over points.
+    pub(crate) fn gather_re_parallel_into(&self, grid: &[Complex], out: &mut [f64]) {
+        assert_eq!(out.len(), self.n);
+        parallel::parallel_rows(out, self.n, 1, |j, slot| {
+            slot[0] = self.gather_point(j, grid).re;
+        });
     }
 
-    /// Number of small-grid coefficients |I_m| = m^d.
-    pub fn num_coeffs(&self) -> usize {
-        self.params.m.pow(self.d as u32)
+    /// Packed gather: after a Hermitian-packed inverse transform the grid
+    /// holds Re(g_a) + i·Re(g_b); the real-weighted gather keeps the two
+    /// lanes exactly separate, so `out_a` = column a, `out_b` = column b.
+    pub(crate) fn gather_packed_serial_into(
+        &self,
+        grid: &[Complex],
+        out_a: &mut [f64],
+        out_b: &mut [f64],
+    ) {
+        assert_eq!(out_a.len(), self.n);
+        assert_eq!(out_b.len(), self.n);
+        for j in 0..self.n {
+            let c = self.gather_point(j, grid);
+            out_a[j] = c.re;
+            out_b[j] = c.im;
+        }
     }
 
     /// Post-FFT projection onto the small grid: deconvolve and scale each
-    /// k ∈ I_m out of the oversampled spectrum.
-    fn project_small(&self, grid: &[Complex]) -> Vec<Complex> {
+    /// k ∈ I_m out of the oversampled spectrum (table-driven).
+    pub(crate) fn project_single_into(&self, grid: &[Complex], out: &mut [Complex]) {
+        assert_eq!(out.len(), self.num_coeffs());
         let scale = 1.0 / self.grid_len() as f64;
-        let ncoef = self.num_coeffs();
-        let mut out = vec![Complex::ZERO; ncoef];
         for (sf, o) in out.iter_mut().enumerate() {
-            let bf = self.pad_index(sf);
-            *o = grid[bf].scale(self.deconv(sf) * scale);
+            let bf = self.pad_idx[sf] as usize;
+            *o = grid[bf].scale(self.deconv_tab[sf] * scale);
         }
-        out
+    }
+
+    /// Hermitian-packed projection: `grid` is the forward FFT of a spread
+    /// of packed coefficients a + i·b with a, b *real*. On the integer
+    /// oversampled grid the FFT of real data satisfies
+    /// conj(Ĝ[(M−K) mod M]) = Ĝ[K] exactly, so the two spectra separate as
+    ///   ĝa[k] = (Ĝ[k] + conj(Ĝ[−k]))/2,  ĝb[k] = (Ĝ[k] − conj(Ĝ[−k]))/(2i),
+    /// evaluated via the precomputed mirror table `pad_neg_idx` (the ½ is
+    /// folded into the deconvolution scale).
+    pub(crate) fn project_packed_into(
+        &self,
+        grid: &[Complex],
+        out_a: &mut [Complex],
+        out_b: &mut [Complex],
+    ) {
+        assert_eq!(out_a.len(), self.num_coeffs());
+        assert_eq!(out_b.len(), self.num_coeffs());
+        let half = 0.5 / self.grid_len() as f64;
+        for sf in 0..out_a.len() {
+            let rho = self.deconv_tab[sf] * half;
+            let g = grid[self.pad_idx[sf] as usize];
+            let gm = grid[self.pad_neg_idx[sf] as usize];
+            out_a[sf] = Complex::new((g.re + gm.re) * rho, (g.im - gm.im) * rho);
+            out_b[sf] = Complex::new((g.im + gm.im) * rho, (gm.re - g.re) * rho);
+        }
     }
 
     /// Pre-IFFT embedding of small-grid coefficients into the oversampled
-    /// spectrum, with deconvolution applied.
-    fn embed_large(&self, fhat: &[Complex]) -> Vec<Complex> {
+    /// spectrum (zeroed first), with deconvolution applied.
+    pub(crate) fn embed_single_into(&self, fhat: &[Complex], grid: &mut [Complex]) {
         assert_eq!(fhat.len(), self.num_coeffs());
-        let mut grid = vec![Complex::ZERO; self.grid_len()];
+        assert_eq!(grid.len(), self.grid_len());
+        grid.fill(Complex::ZERO);
         for (sf, &fk) in fhat.iter().enumerate() {
-            let bf = self.pad_index(sf);
-            grid[bf] = fk.scale(self.deconv(sf));
+            let bf = self.pad_idx[sf] as usize;
+            grid[bf] = fk.scale(self.deconv_tab[sf]);
         }
-        grid
+    }
+
+    /// Fused embed: like [`NfftPlan::embed_single_into`] but multiplying
+    /// each coefficient by `mult` (the diagonal b_k factors) on the fly,
+    /// saving a pass over the spectrum.
+    pub(crate) fn embed_single_scaled_into(
+        &self,
+        fhat: &[Complex],
+        mult: &[Complex],
+        grid: &mut [Complex],
+    ) {
+        assert_eq!(fhat.len(), self.num_coeffs());
+        assert_eq!(mult.len(), self.num_coeffs());
+        assert_eq!(grid.len(), self.grid_len());
+        grid.fill(Complex::ZERO);
+        for (sf, (&fk, &mk)) in fhat.iter().zip(mult).enumerate() {
+            let bf = self.pad_idx[sf] as usize;
+            grid[bf] = (fk * mk).scale(self.deconv_tab[sf]);
+        }
+    }
+
+    /// Hermitian-packed embed: builds the spectrum Q = herm(E_a) + i·herm(E_b)
+    /// (E_x the deconvolved embedding of `s_x ⊙ mult`), so that a single
+    /// inverse FFT yields Re(g_a) + i·Re(g_b) on the grid. Each coefficient
+    /// contributes to both its own big-grid slot and the mirrored −k slot;
+    /// accumulation (`+=`) handles the self-paired DC bin. −k may fall
+    /// outside the embedded index set (k_ax = −m/2 mirrors to +m/2 ∉ I_m),
+    /// which is exactly why the split happens on the oversampled grid.
+    pub(crate) fn embed_packed_scaled_into(
+        &self,
+        sa: &[Complex],
+        sb: &[Complex],
+        mult: &[Complex],
+        grid: &mut [Complex],
+    ) {
+        assert_eq!(sa.len(), self.num_coeffs());
+        assert_eq!(sb.len(), self.num_coeffs());
+        assert_eq!(mult.len(), self.num_coeffs());
+        assert_eq!(grid.len(), self.grid_len());
+        grid.fill(Complex::ZERO);
+        for sf in 0..sa.len() {
+            let w = self.deconv_tab[sf] * 0.5;
+            let mk = mult[sf];
+            let ea = (sa[sf] * mk).scale(w);
+            let eb = (sb[sf] * mk).scale(w);
+            let bf = self.pad_idx[sf] as usize;
+            let bfn = self.pad_neg_idx[sf] as usize;
+            grid[bf] += Complex::new(ea.re - eb.im, ea.im + eb.re);
+            grid[bfn] += Complex::new(ea.re + eb.im, eb.re - ea.im);
+        }
     }
 
     /// Adjoint NFFT: ĝ_k = Σ_j v_j e^{−2πi kᵀx_j} for k ∈ I_m.
     /// Output in DFT layout over the small m^d grid.
     pub fn adjoint(&self, v: &[Complex]) -> Vec<Complex> {
-        let mut grid = self.spread(v);
-        self.fft.forward(&mut grid);
-        self.project_small(&grid)
+        let mut ws = self.acquire_workspace();
+        self.spread_parallel_into(v, &mut ws.grid);
+        self.fft.forward_with(&mut ws.grid, &mut ws.fft_scratch);
+        let mut out = vec![Complex::ZERO; self.num_coeffs()];
+        self.project_single_into(&ws.grid, &mut out);
+        self.release_workspace(ws);
+        out
     }
 
     /// Single-column adjoint with no internal threading (see
     /// [`NfftPlan::trafo_serial`] for the batching rationale).
     pub fn adjoint_serial(&self, v: &[Complex]) -> Vec<Complex> {
-        let mut grid = self.spread_serial(v);
-        self.fft.forward(&mut grid);
-        self.project_small(&grid)
+        let mut ws = self.acquire_workspace();
+        self.spread_serial_into(v, &mut ws.grid);
+        self.fft.forward_with(&mut ws.grid, &mut ws.fft_scratch);
+        let mut out = vec![Complex::ZERO; self.num_coeffs()];
+        self.project_single_into(&ws.grid, &mut out);
+        self.release_workspace(ws);
+        out
     }
 
     /// Forward NFFT (trafo): h_j = Σ_{k∈I_m} f̂_k e^{+2πi kᵀx_j}.
     /// `fhat` in DFT layout over the small m^d grid.
     pub fn trafo(&self, fhat: &[Complex]) -> Vec<Complex> {
-        let mut grid = self.embed_large(fhat);
+        let mut ws = self.acquire_workspace();
+        self.embed_single_into(fhat, &mut ws.grid);
         // g_u = (1/M^d) Σ_k ĥ_k e^{+2πi ku/M}  — our ifftn does exactly this.
         // (The analysis wants the 1/M^d, see module docs: g must satisfy
         // Σ_u g_u e^{-2πiku/M} = ĥ_k.)
-        self.fft.inverse(&mut grid);
-        self.gather(&grid)
+        self.fft.inverse_with(&mut ws.grid, &mut ws.fft_scratch);
+        let grid = &ws.grid;
+        let out = parallel::parallel_map(self.n, |j| self.gather_point(j, grid));
+        self.release_workspace(ws);
+        out
     }
 
     /// Single-column trafo with no internal threading — the batched
@@ -364,14 +563,12 @@ impl NfftPlan {
     /// each running this serial pipeline while sharing the plan's
     /// precomputed spreading stencils, wrapped indices, and FFT twiddles.
     pub fn trafo_serial(&self, fhat: &[Complex]) -> Vec<Complex> {
-        let mut grid = self.embed_large(fhat);
-        self.fft.inverse(&mut grid);
-        self.gather_serial(&grid)
-    }
-
-    /// Grid memory footprint in bytes (for perf estimates).
-    pub fn grid_bytes(&self) -> usize {
-        self.grid_len() * std::mem::size_of::<Complex>()
+        let mut ws = self.acquire_workspace();
+        self.embed_single_into(fhat, &mut ws.grid);
+        self.fft.inverse_with(&mut ws.grid, &mut ws.fft_scratch);
+        let out = (0..self.n).map(|j| self.gather_point(j, &ws.grid)).collect();
+        self.release_workspace(ws);
+        out
     }
 }
 
@@ -560,6 +757,111 @@ mod tests {
         for (j, hj) in h.iter().enumerate() {
             let want = Complex::cis(2.0 * std::f64::consts::PI * 3.0 * pts[j]);
             assert!((*hj - want).abs() < 1e-9, "j={j}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not an integer")]
+    fn grid_size_rejects_inconsistent_sigma() {
+        // σ = 1.999, m = 32 → σm = 63.968 would silently round to 64 while
+        // the window keeps the exact σ; must be refused.
+        let params =
+            NfftParams { m: 32, sigma: 1.999, s: 8, window: WindowKind::KaiserBessel };
+        let _ = params.grid_size();
+    }
+
+    #[test]
+    fn adjoint_is_bitwise_deterministic() {
+        // The deterministic chunked spread must make repeated transforms
+        // bitwise identical (fixed floating-point summation order).
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(500, 2, 50);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let v = cvec(500, 51);
+        let a1 = plan.adjoint(&v);
+        let a2 = plan.adjoint(&v);
+        for k in 0..a1.len() {
+            assert_eq!(a1[k].re, a2[k].re, "k={k}");
+            assert_eq!(a1[k].im, a2[k].im, "k={k}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_has_no_stale_state() {
+        // Interleaved adjoint/trafo calls recycle pooled workspaces; the
+        // results must not depend on what a previous transform left behind.
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(60, 2, 60);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let v = cvec(60, 61);
+        let fhat = cvec(256, 62);
+        let a1 = plan.adjoint_serial(&v);
+        let t1 = plan.trafo_serial(&fhat);
+        let a2 = plan.adjoint_serial(&v);
+        let t2 = plan.trafo_serial(&fhat);
+        for k in 0..a1.len() {
+            assert_eq!(a1[k].re, a2[k].re, "adjoint k={k}");
+            assert_eq!(a1[k].im, a2[k].im, "adjoint k={k}");
+        }
+        for j in 0..t1.len() {
+            assert_eq!(t1[j].re, t2[j].re, "trafo j={j}");
+            assert_eq!(t1[j].im, t2[j].im, "trafo j={j}");
+        }
+    }
+
+    #[test]
+    fn packed_adjoint_matches_two_single_adjoints() {
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(50, 2, 31);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let mut rng = Rng::new(32);
+        let a = rng.normal_vec(50);
+        let b = rng.normal_vec(50);
+        // Packed: spread a + i·b, one FFT, Hermitian split.
+        let packed: Vec<Complex> =
+            a.iter().zip(&b).map(|(&x, &y)| Complex::new(x, y)).collect();
+        let mut ws = plan.acquire_workspace();
+        plan.spread_serial_into(&packed, &mut ws.grid);
+        plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+        let ncoef = plan.num_coeffs();
+        let mut oa = vec![Complex::ZERO; ncoef];
+        let mut ob = vec![Complex::ZERO; ncoef];
+        plan.project_packed_into(&ws.grid, &mut oa, &mut ob);
+        plan.release_workspace(ws);
+        // Reference: two independent single-column adjoints.
+        let ca: Vec<Complex> = a.iter().map(|&x| Complex::new(x, 0.0)).collect();
+        let cb: Vec<Complex> = b.iter().map(|&x| Complex::new(x, 0.0)).collect();
+        let ra = plan.adjoint_serial(&ca);
+        let rb = plan.adjoint_serial(&cb);
+        let scale: f64 = a.iter().chain(&b).map(|x| x.abs()).sum();
+        for k in 0..ncoef {
+            assert!((oa[k] - ra[k]).abs() < 1e-12 * scale, "a k={k}");
+            assert!((ob[k] - rb[k]).abs() < 1e-12 * scale, "b k={k}");
+        }
+    }
+
+    #[test]
+    fn packed_trafo_matches_two_single_trafos() {
+        let params = NfftParams { m: 16, sigma: 2.0, s: 8, window: WindowKind::KaiserBessel };
+        let pts = random_pts(45, 2, 33);
+        let plan = NfftPlan::new(&pts, 2, params);
+        let ncoef = plan.num_coeffs();
+        let sa = cvec(ncoef, 41);
+        let sb = cvec(ncoef, 42);
+        let ones = vec![Complex::ONE; ncoef];
+        let mut ws = plan.acquire_workspace();
+        plan.embed_packed_scaled_into(&sa, &sb, &ones, &mut ws.grid);
+        plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+        let mut oa = vec![0.0; plan.n];
+        let mut ob = vec![0.0; plan.n];
+        plan.gather_packed_serial_into(&ws.grid, &mut oa, &mut ob);
+        plan.release_workspace(ws);
+        let ta = plan.trafo_serial(&sa);
+        let tb = plan.trafo_serial(&sb);
+        let scale: f64 = sa.iter().chain(&sb).map(|c| c.abs()).sum();
+        for j in 0..plan.n {
+            assert!((oa[j] - ta[j].re).abs() < 1e-12 * scale, "a j={j}");
+            assert!((ob[j] - tb[j].re).abs() < 1e-12 * scale, "b j={j}");
         }
     }
 }

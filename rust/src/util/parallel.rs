@@ -6,6 +6,61 @@
 //! provide with no unsafe code and no persistent pool.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A lock-guarded free-list of reusable scratch objects. Hot loops that
+/// need large per-worker buffers (e.g. NFFT grid workspaces) check one
+/// out, use it, and return it, so steady-state iterations perform no
+/// heap allocation: the pool grows to the worker count during warm-up and
+/// then recycles. Checkout order is LIFO, which keeps buffers cache-warm.
+pub struct ObjectPool<T> {
+    slots: Mutex<Vec<T>>,
+}
+
+impl<T> ObjectPool<T> {
+    pub fn new() -> Self {
+        Self { slots: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a pooled object, or build a fresh one with `make`.
+    pub fn take_or_else(&self, make: impl FnOnce() -> T) -> T {
+        self.slots.lock().unwrap().pop().unwrap_or_else(make)
+    }
+
+    /// Return an object to the pool for reuse.
+    pub fn put(&self, item: T) {
+        self.slots.lock().unwrap().push(item);
+    }
+
+    /// Number of idle objects currently pooled.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for ObjectPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cloning a pool yields an EMPTY pool: pooled scratch is an optimization,
+/// not state, and must not be shared or duplicated across clones.
+impl<T> Clone for ObjectPool<T> {
+    fn clone(&self) -> Self {
+        Self::new()
+    }
+}
+
+impl<T> std::fmt::Debug for ObjectPool<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ObjectPool(idle={})", self.len())
+    }
+}
 
 /// Number of worker threads to use (respects `FGP_THREADS`).
 pub fn num_threads() -> usize {
@@ -110,8 +165,8 @@ pub fn parallel_map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
 
 /// Mutate disjoint row-slices of a flat buffer in parallel:
 /// `f(row_index, row_slice)` over `rows` rows of width `width`.
-pub fn parallel_rows<F: Fn(usize, &mut [f64]) + Sync>(
-    buf: &mut [f64],
+pub fn parallel_rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    buf: &mut [T],
     rows: usize,
     width: usize,
     f: F,
@@ -141,6 +196,56 @@ pub fn parallel_rows<F: Fn(usize, &mut [f64]) + Sync>(
             s.spawn(move || {
                 for (k, row) in band.chunks_mut(width).enumerate() {
                     fr(base + k, row);
+                }
+            });
+            row0 += take;
+        }
+    });
+}
+
+/// Mutate matching row-slices of TWO flat buffers in parallel:
+/// `f(row_index, row_a, row_b)` over `rows` rows of width `width` in each.
+/// Both buffers are banded identically, so each call sees the same row of
+/// both — the shape needed by paired outputs (kernel + derivative MVMs).
+pub fn parallel_zip_rows<T: Send, F: Fn(usize, &mut [T], &mut [T]) + Sync>(
+    a: &mut [T],
+    b: &mut [T],
+    rows: usize,
+    width: usize,
+    f: F,
+) {
+    assert_eq!(a.len(), rows * width);
+    assert_eq!(b.len(), rows * width);
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        for (r, (ra, rb)) in
+            a.chunks_mut(width).zip(b.chunks_mut(width)).enumerate()
+        {
+            f(r, ra, rb);
+        }
+        return;
+    }
+    let fr = &f;
+    std::thread::scope(|s| {
+        let per = rows.div_ceil(nt);
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut row0 = 0usize;
+        for _ in 0..nt {
+            let take = per.min(rest_a.len() / width);
+            if take == 0 {
+                break;
+            }
+            let (band_a, tail_a) = rest_a.split_at_mut(take * width);
+            let (band_b, tail_b) = rest_b.split_at_mut(take * width);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let base = row0;
+            s.spawn(move || {
+                let rows_a = band_a.chunks_mut(width);
+                let rows_b = band_b.chunks_mut(width);
+                for (k, (ra, rb)) in rows_a.zip(rows_b).enumerate() {
+                    fr(base + k, ra, rb);
                 }
             });
             row0 += take;
@@ -236,6 +341,45 @@ mod tests {
         for h in &hits {
             assert_eq!(h.load(Ordering::Relaxed), 1);
         }
+    }
+
+    #[test]
+    fn parallel_zip_rows_pairs_matching_rows() {
+        let rows = 29;
+        let width = 13;
+        let mut a = vec![0.0f64; rows * width];
+        let mut b = vec![0.0f64; rows * width];
+        parallel_zip_rows(&mut a, &mut b, rows, width, |r, ra, rb| {
+            for (c, v) in ra.iter_mut().enumerate() {
+                *v = (r * width + c) as f64;
+            }
+            for (c, v) in rb.iter_mut().enumerate() {
+                *v = -((r * width + c) as f64);
+            }
+        });
+        for (i, (va, vb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(*va, i as f64);
+            assert_eq!(*vb, -(i as f64));
+        }
+    }
+
+    #[test]
+    fn object_pool_recycles() {
+        let pool: ObjectPool<Vec<f64>> = ObjectPool::new();
+        assert!(pool.is_empty());
+        let mut v = pool.take_or_else(|| vec![0.0; 8]);
+        v[0] = 7.0;
+        pool.put(v);
+        assert_eq!(pool.len(), 1);
+        // LIFO: same buffer (with its contents) comes back.
+        let v2 = pool.take_or_else(|| unreachable!("pool must not be empty"));
+        assert_eq!(v2[0], 7.0);
+        assert!(pool.is_empty());
+        // Clones start empty.
+        pool.put(v2);
+        let fresh = pool.clone();
+        assert!(fresh.is_empty());
+        assert_eq!(pool.len(), 1);
     }
 
     #[test]

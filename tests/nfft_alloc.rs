@@ -1,0 +1,97 @@
+//! Steady-state NFFT applies must be free of grid-sized heap allocations.
+//!
+//! The training loop calls `Fastsum::apply_batch_into` / `apply_batch_pair_into`
+//! every CG iteration; after a warm-up call has populated the plan's workspace
+//! pool, no further oversampled-grid (M^d complex) buffers may be allocated.
+//! A counting global allocator records every allocation at least as large as
+//! one grid while tracking is enabled — thread spawns, pool bookkeeping, and
+//! other small allocations stay under the threshold and are ignored.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::{Fastsum, NfftParams};
+use fourier_gp::util::rng::Rng;
+
+struct CountingAlloc;
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static THRESHOLD: AtomicUsize = AtomicUsize::new(usize::MAX);
+static LARGE_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static LARGEST: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACKING.load(Ordering::Relaxed) {
+            if layout.size() >= THRESHOLD.load(Ordering::Relaxed) {
+                LARGE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+            }
+            LARGEST.fetch_max(layout.size(), Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn random_points(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.uniform_in(-0.25, 0.2499)).collect()
+}
+
+#[test]
+fn steady_state_applies_do_not_allocate_grids() {
+    let n = 4096;
+    let d = 2;
+    let nb = 8;
+    let params = NfftParams::default_for_dim(d);
+    let pts = random_points(n, d, 7);
+    let fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.6, params);
+
+    // One oversampled grid: (σm)^d complex entries.
+    let grid_bytes = fs.plan().grid_bytes();
+
+    let mut rng = Rng::new(11);
+    let mut v = Matrix::zeros(nb, n);
+    for x in &mut v.data {
+        *x = rng.normal();
+    }
+    let mut out = Matrix::zeros(nb, n);
+    let mut out_k = Matrix::zeros(nb, n);
+    let mut out_d = Matrix::zeros(nb, n);
+    let mut single = vec![0.0; n];
+
+    // Warm up every code path once so the workspace pool reaches its
+    // steady-state population (one workspace per concurrent band/chunk).
+    fs.apply_batch_into(&v, false, &mut out);
+    fs.apply_batch_pair_into(&v, &mut out_k, &mut out_d);
+    fs.apply_into(v.row(0), false, &mut single);
+
+    THRESHOLD.store(grid_bytes, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for _ in 0..3 {
+        fs.apply_batch_into(&v, true, &mut out);
+        fs.apply_batch_into(&v, false, &mut out);
+        fs.apply_batch_pair_into(&v, &mut out_k, &mut out_d);
+        fs.apply_into(v.row(1), false, &mut single);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+
+    let count = LARGE_ALLOCS.load(Ordering::SeqCst);
+    let largest = LARGEST.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state NFFT applies performed {count} allocation(s) of at \
+         least one grid ({grid_bytes} bytes); largest seen: {largest} bytes"
+    );
+    // Sanity: the outputs were actually computed (non-trivial values).
+    assert!(out.data.iter().any(|x| x.abs() > 1e-12));
+    assert!(out_k.data.iter().any(|x| x.abs() > 1e-12));
+}
