@@ -1,18 +1,24 @@
 # fourier-gp developer targets. `make test` is the tier-1 gate
 # (see ROADMAP.md); `make ci` is the full local gate (format, lints,
-# tests); `make bench-mvm` / `make bench-nfft` track the perf trajectory
-# in BENCH_mvm.json / BENCH_nfft.json from PR 1 / PR 6 onward.
+# invariant lint, tests); `make bench-mvm` / `make bench-nfft` track the
+# perf trajectory in BENCH_mvm.json / BENCH_nfft.json from PR 1 / PR 6
+# onward. `make miri` / `make tsan` are nightly-gated sanitizer lanes and
+# skip gracefully when the toolchain is missing.
 
 CARGO ?= cargo
 
-.PHONY: all ci fmt clippy test bench-mvm bench-nfft python-test
+.PHONY: all ci fmt clippy lint test miri tsan stress bench-mvm bench-nfft python-test
 
 all: test
 
-# Full local gate: formatting, clippy with warnings denied, tier-1 tests.
+# Full local gate: formatting, clippy with warnings denied, the invariant
+# lint (panic-freedom, no-alloc hot paths, determinism, unsafe hygiene —
+# see DESIGN.md), the lint's own fixture tests, then tier-1 tests.
 ci:
 	$(CARGO) fmt --check
 	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) run -p xtask -- lint
+	$(CARGO) test -p xtask -q
 	$(CARGO) test -q
 
 fmt:
@@ -21,9 +27,40 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
+# Invariant lint alone: `cargo run -p xtask -- lint` scans rust/src and
+# fails on any unwaived violation; waivers are counted and reported.
+lint:
+	$(CARGO) run -p xtask -- lint
+
 test:
 	$(CARGO) build --release
 	$(CARGO) test -q
+
+# Miri lane (nightly-only): interprets the FFT scratch and NFFT workspace
+# pool tests under Miri's UB checker — the code that recycles buffers and
+# slices them into bands. Skips gracefully without nightly + miri.
+miri:
+	@if $(CARGO) +nightly miri --version >/dev/null 2>&1; then \
+		$(CARGO) +nightly miri test --lib -- fft:: nfft::plan; \
+	else \
+		echo "miri: nightly toolchain with the miri component not found; skipping"; \
+	fi
+
+# ThreadSanitizer lane (nightly-only): util::parallel under TSan,
+# including the ignored stress tests. Skips gracefully without nightly.
+tsan:
+	@if $(CARGO) +nightly --version >/dev/null 2>&1; then \
+		RUSTFLAGS="-Z sanitizer=thread" $(CARGO) +nightly test \
+			-Z build-std --target $$(rustc +nightly -vV | sed -n 's/^host: //p') \
+			--lib -- --include-ignored util::parallel; \
+	else \
+		echo "tsan: nightly toolchain not found; skipping"; \
+	fi
+
+# Repeated-run stress of the parallel primitives on the stable toolchain
+# (release build, elevated iteration count).
+stress:
+	FGP_STRESS_ITERS=200 $(CARGO) test --release --lib -- --ignored stress_
 
 # Batch-size sweep (1/4/16 × n sweep) + NLL/gradient operator-traversal
 # accounting; writes BENCH_mvm.json in the repo root and results/*.csv.

@@ -145,7 +145,7 @@ fn main() {
     } else {
         vec![1000, 2000, 4000, 8000, 16000]
     };
-    mvm_scaling(&sizes);
+    mvm_scaling(&sizes).expect("mvm scaling");
 
     // Plan-build vs apply split at a representative size.
     let n = 20_000;

@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(full: bool) {
-    fourier_gp::coordinator::experiments::fig1(if full { 1000 } else { 400 });
+    fourier_gp::coordinator::experiments::fig1(if full { 1000 } else { 400 }).expect("fig1");
 }

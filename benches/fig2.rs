@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(_full: bool) {
-    fourier_gp::coordinator::experiments::fig2();
+    fourier_gp::coordinator::experiments::fig2().expect("fig2");
 }

@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(full: bool) {
-    fourier_gp::coordinator::experiments::fig4(if full { 10000 } else { 2000 });
+    fourier_gp::coordinator::experiments::fig4(if full { 10000 } else { 2000 }).expect("fig4");
 }

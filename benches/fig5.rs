@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(full: bool) {
-    fourier_gp::coordinator::experiments::fig5(if full { 3000 } else { 800 });
+    fourier_gp::coordinator::experiments::fig5(if full { 3000 } else { 800 }).expect("fig5");
 }

@@ -6,5 +6,5 @@ fn main() {
 }
 fn run(full: bool) {
     let (n, reps) = if full { (3000, 10) } else { (600, 5) };
-    fourier_gp::coordinator::experiments::fig6(n, reps);
+    fourier_gp::coordinator::experiments::fig6(n, reps).expect("fig6");
 }

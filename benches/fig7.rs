@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(full: bool) {
-    fourier_gp::coordinator::experiments::fig7(if full { 500 } else { 60 });
+    fourier_gp::coordinator::experiments::fig7(if full { 500 } else { 60 }).expect("fig7");
 }

@@ -6,5 +6,5 @@ fn main() {
 }
 fn run(full: bool) {
     let (n, iters) = if full { (3000, 500) } else { (800, 40) };
-    fourier_gp::coordinator::experiments::fig8(n, iters);
+    fourier_gp::coordinator::experiments::fig8(n, iters).expect("fig8");
 }

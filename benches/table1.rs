@@ -5,5 +5,5 @@ fn main() {
     run(full);
 }
 fn run(_full: bool) {
-    fourier_gp::coordinator::experiments::table1();
+    fourier_gp::coordinator::experiments::table1().expect("table1");
 }

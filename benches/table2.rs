@@ -6,5 +6,5 @@ fn main() {
 }
 fn run(full: bool) {
     let (n, iters) = if full { (4000, 200) } else { (800, 15) };
-    fourier_gp::coordinator::experiments::table2(n, iters);
+    fourier_gp::coordinator::experiments::table2(n, iters).expect("table2");
 }

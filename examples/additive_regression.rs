@@ -21,7 +21,7 @@ fn main() {
     let (n, iters) = if full { (3000, 500) } else { (1200, 80) };
     println!("=== additive_regression (Fig. 8 end-to-end) n={n} iters={iters} ===");
 
-    let ds = synthetic::fig8_dataset(n, 43);
+    let ds = synthetic::fig8_dataset(n, 43).expect("synthetic dataset");
     let (train, test) = ds.split(0.8, 47);
 
     // EN feature grouping (paper: identifies the six active features).
@@ -58,12 +58,12 @@ fn main() {
             cg_tol: 1e-10,
             seed: 0,
         };
-        let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+        let trained = GpModel::new(cfg).fit(&train.x, &train.y).expect("training");
         for &(it, loss) in &trained.loss_trace {
             results.push_row(&[eid as f64, it as f64, loss]);
         }
         let mean = trained.predict_mean(&test.x);
-        let var = trained.predict_variance(&test.x, 100);
+        let var = trained.predict_variance(&test.x, 100).expect("variance");
         let rmse = fourier_gp::util::rmse(&mean, &test.y);
         // Empirical CI coverage on the variance-evaluated points.
         let mut covered = 0;

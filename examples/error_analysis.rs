@@ -8,7 +8,7 @@ use fourier_gp::coordinator::experiments as exp;
 use fourier_gp::nfft::fastsum::error_bounds;
 
 fn main() {
-    let t = exp::fig4(2000);
+    let t = exp::fig4(2000).expect("fig4");
     // Validate the headline property of §4: the estimate upper-bounds the
     // measured error over the whole sweep (cf. Fig. 4, "the error
     // estimator remains a valid upper bound").

@@ -11,7 +11,7 @@ use fourier_gp::precond::AfnOptions;
 fn main() {
     // 1. Data: 20-dimensional inputs whose labels depend on the first six
     //    features (the paper's Fig. 8 workload, scaled down).
-    let ds = synthetic::fig8_dataset(1200, 7);
+    let ds = synthetic::fig8_dataset(1200, 7).expect("synthetic dataset");
     let (train, test) = ds.split(0.8, 1);
     println!("train n={} p={}   test n={}", train.n(), train.p(), test.n());
 
@@ -37,7 +37,7 @@ fn main() {
     cfg.adam_lr = 0.05;
     cfg.loss_every = 10;
 
-    let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+    let trained = GpModel::new(cfg).fit(&train.x, &train.y).expect("training");
     println!(
         "trained in {:.1}s: σ_f={:.3} ℓ={:.3} σ_ε={:.3}",
         trained.train_seconds, trained.hyper.sigma_f, trained.hyper.ell, trained.hyper.sigma_eps
@@ -48,7 +48,7 @@ fn main() {
 
     // 4. Predict with uncertainty.
     let mean = trained.predict_mean(&test.x);
-    let var = trained.predict_variance(&test.x, 50);
+    let var = trained.predict_variance(&test.x, 50).expect("variance");
     let rmse = fourier_gp::util::rmse(&mean, &test.y);
     println!("test RMSE = {rmse:.4}");
     let ystd = fourier_gp::util::variance(&test.y).sqrt();

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     }
     let rt = Arc::new(PjrtRuntime::load(&dir)?);
     let n = 480;
-    let ds = synthetic::fig8_dataset(n + 120, 3);
+    let ds = synthetic::fig8_dataset(n + 120, 3)?;
     let (train, test) = ds.split(n as f64 / (n + 120) as f64, 5);
     let windows = Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]);
     let (ell, sf2, se2) = (1.0, 0.5, 0.05);

@@ -10,8 +10,8 @@ fn main() {
     let args = Args::from_env(&["full"]);
     let full = args.has_flag("full");
     let (max_n, iters) = if full { (4000, 200) } else { (800, 15) };
-    exp::table1();
-    exp::table2(max_n, iters);
-    exp::table3(max_n, iters);
+    exp::table1().expect("table1");
+    exp::table2(max_n, iters).expect("table2");
+    exp::table3(max_n, iters).expect("table3");
     println!("rows written to results/table1.csv .. table3.csv");
 }

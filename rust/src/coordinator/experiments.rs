@@ -18,6 +18,7 @@ use crate::precond::{AafnPrecond, AfnOptions};
 use crate::solvers::cg::{cg, pcg, CgOptions};
 use crate::util::csv::Table;
 use crate::util::rng::Rng;
+use crate::util::FgpResult;
 use std::path::Path;
 
 pub use crate::nfft::fastsum::error_bounds as bounds;
@@ -42,7 +43,7 @@ fn announce(id: &str, detail: &str, scale_note: &str) {
 
 /// Fig. 1: unpreconditioned CG iterations + spectra over 20 length-scales,
 /// n points in R⁶ (three 2-d disc windows), tol 1e-3.
-pub fn fig1(n: usize) -> Table {
+pub fn fig1(n: usize) -> FgpResult<Table> {
     announce(
         "Fig 1",
         "CG iterations & spectra vs ℓ (additive Gaussian, 3×2-d windows)",
@@ -70,14 +71,14 @@ pub fn fig1(n: usize) -> Table {
         );
     }
     t.save(&results_path("fig1")).ok();
-    t
+    Ok(t)
 }
 
 // ------------------------------------------------------------- Fig 2/3 --
 
 /// Fig. 2: 1-d kernel, periodic continuation and Fourier approximation
 /// (m = 8) — emits the plot series.
-pub fn fig2() -> Table {
+pub fn fig2() -> FgpResult<Table> {
     announce("Fig 2", "κ, κ_R, κ_RF in 1-d (m=8)", "");
     let m = 8usize;
     let ell = 0.15;
@@ -97,11 +98,11 @@ pub fn fig2() -> Table {
     }
     t.save(&results_path("fig2")).ok();
     println!("  series written to results/fig2.csv (401 samples)");
-    t
+    Ok(t)
 }
 
 /// Fig. 3: Matérn(½) and its 1-periodization (ℓ = 0.2).
-pub fn fig3() -> Table {
+pub fn fig3() -> FgpResult<Table> {
     announce("Fig 3", "Matérn(½) vs 1-periodization, ℓ=0.2", "");
     let ell = 0.2;
     let mut t = Table::with_cols(&["r", "kappa", "kappa_periodized"]);
@@ -117,14 +118,14 @@ pub fn fig3() -> Table {
     }
     t.save(&results_path("fig3")).ok();
     println!("  series written to results/fig3.csv");
-    t
+    Ok(t)
 }
 
 // ---------------------------------------------------------------- Fig 4 --
 
 /// Fig. 4: measured trivariate Fourier approximation error vs the
 /// Theorem 4.4/4.5 estimates over ℓ, for m ∈ {16,32,64}.
-pub fn fig4(npts: usize) -> Table {
+pub fn fig4(npts: usize) -> FgpResult<Table> {
     announce(
         "Fig 4",
         "measured ‖κ−κ_RF‖∞ vs Thm 4.4/4.5 bounds (trivariate Matérn ½)",
@@ -148,7 +149,7 @@ pub fn fig4(npts: usize) -> Table {
         }
     }
     t.save(&results_path("fig4")).ok();
-    t
+    Ok(t)
 }
 
 /// max |κ(r) − κ_RF(r)| over a fine uniform grid of offsets r, and the
@@ -196,7 +197,7 @@ fn measured_fourier_error(_pts: &[f64], _n: usize, m: usize, ell: f64) -> (f64, 
 
 /// Fig. 5: CG vs AAFN-PCG iterations over ℓ for Gaussian and Matérn(½),
 /// n points in a hypercube of side ∛n, windows [[1,2,3],[4,5,6]].
-pub fn fig5(n: usize) -> Table {
+pub fn fig5(n: usize) -> FgpResult<Table> {
     announce(
         "Fig 5",
         "CG vs AAFN-PCG iterations vs ℓ (tol 1e-4, maxit 200)",
@@ -218,7 +219,7 @@ pub fn fig5(n: usize) -> Table {
         for &ell in &ells {
             let k = ak.gram_full(&x, ell, sigma_f2, sigma_eps2);
             let plain = cg(&k, &b, &opts);
-            let p = AafnPrecond::build(&x, &ak, ell, sigma_f2, sigma_eps2, &afn);
+            let p = AafnPrecond::build(&x, &ak, ell, sigma_f2, sigma_eps2, &afn)?;
             let pre = pcg(&k, &p, &b, &opts);
             t.push_row(&[kid as f64, ell, plain.iterations as f64, pre.iterations as f64]);
             println!(
@@ -230,14 +231,14 @@ pub fn fig5(n: usize) -> Table {
         }
     }
     t.save(&results_path("fig5")).ok();
-    t
+    Ok(t)
 }
 
 // ---------------------------------------------------------------- Fig 6 --
 
 /// Fig. 6: mean ± 95% CI of Z̃ and ∂Z̃/∂ℓ vs iteration count (1..10),
 /// unpreconditioned vs AAFN, Gaussian kernel, ℓ=2, σ_ε²=1.
-pub fn fig6(n: usize, reps: usize) -> Table {
+pub fn fig6(n: usize, reps: usize) -> FgpResult<Table> {
     announce(
         "Fig 6",
         "estimator mean ± CI vs iteration count, plain vs AAFN",
@@ -270,7 +271,7 @@ pub fn fig6(n: usize, reps: usize) -> Table {
         sf2,
         se2,
         &AfnOptions { k_per_window: rank, max_rank: rank, fill: 40.min(n / 10) },
-    );
+    )?;
     let mut t = Table::with_cols(&[
         "iters", "plain_nll_mean", "plain_nll_ci", "pre_nll_mean", "pre_nll_ci",
         "plain_dell_mean", "plain_dell_ci", "pre_dell_mean", "pre_dell_ci",
@@ -314,15 +315,15 @@ pub fn fig6(n: usize, reps: usize) -> Table {
         );
     }
     t.save(&results_path("fig6")).ok();
-    t
+    Ok(t)
 }
 
 // ------------------------------------------------------------- Fig 7/8 --
 
 /// Fig. 7: 1-d GRF, exact vs NFFT GP (both kernels): loss curves + RMSE.
-pub fn fig7(iters: usize) -> Table {
+pub fn fig7(iters: usize) -> FgpResult<Table> {
     announce("Fig 7", "1-d GRF: exact vs NFFT GPs", &format!("{iters} Adam iters (paper: 500)"));
-    let ds = synthetic::fig7_dataset(1000, 37);
+    let ds = synthetic::fig7_dataset(1000, 37)?;
     let (train, test) = ds.split(0.8, 41);
     let mut t = Table::with_cols(&["kernel", "engine", "iter", "loss", "rmse"]);
     for (kid, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
@@ -342,7 +343,7 @@ pub fn fig7(iters: usize) -> Table {
                 max_rank: 80,
                 fill: 10,
             });
-            let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+            let trained = GpModel::new(cfg).fit(&train.x, &train.y)?;
             let pred = trained.predict_mean(&test.x);
             let rmse = crate::util::rmse(&pred, &test.y);
             for &(it, loss) in &trained.loss_trace {
@@ -361,17 +362,17 @@ pub fn fig7(iters: usize) -> Table {
         }
     }
     t.save(&results_path("fig7")).ok();
-    t
+    Ok(t)
 }
 
 /// Fig. 8: R²⁰ GRF on six features, EN grouping, exact vs NFFT additive GP.
-pub fn fig8(n: usize, iters: usize) -> Table {
+pub fn fig8(n: usize, iters: usize) -> FgpResult<Table> {
     announce(
         "Fig 8",
         "R²⁰ GRF: EN grouping + additive GPs (exact vs NFFT)",
         &format!("n={n}, {iters} Adam iters (paper: 3000, 500)"),
     );
-    let ds = synthetic::fig8_dataset(n, 43);
+    let ds = synthetic::fig8_dataset(n, 43)?;
     let (windows, scores) = en_windows(&ds.x, &ds.y, 0.01, &SelectionRule::Count(9), 1000, 1);
     println!("  EN windows: {} (scores head: {:?})", windows.to_one_based_string(),
              &scores[..6.min(scores.len())]);
@@ -384,7 +385,7 @@ pub fn fig8(n: usize, iters: usize) -> Table {
             cfg.max_iters = iters;
             cfg.adam_lr = 0.05;
             cfg.loss_every = (iters / 20).max(1);
-            let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+            let trained = GpModel::new(cfg).fit(&train.x, &train.y)?;
             let pred = trained.predict_mean(&test.x);
             let rmse = crate::util::rmse(&pred, &test.y);
             for &(it, loss) in &trained.loss_trace {
@@ -400,17 +401,17 @@ pub fn fig8(n: usize, iters: usize) -> Table {
         }
     }
     t.save(&results_path("fig8")).ok();
-    t
+    Ok(t)
 }
 
 // ------------------------------------------------------------ Tables ----
 
 /// Table 1: MIS feature windows at d_ratio ∈ {⅓, ⅔, 1}.
-pub fn table1() -> Table {
+pub fn table1() -> FgpResult<Table> {
     announce("Table 1", "MIS feature windows per d_ratio", "UCI simulacra (see DESIGN.md)");
     let mut t = Table::with_cols(&["dataset", "ratio", "num_windows", "num_features"]);
     for (di, name) in ["bike", "elevators", "poletele"].iter().enumerate() {
-        let ds = uci::by_name(name, 0).unwrap().subsample(4000, 3);
+        let ds = uci::by_name(name, 0)?.subsample(4000, 3);
         for (ri, ratio) in [(1.0 / 3.0), (2.0 / 3.0), 1.0].iter().enumerate() {
             let (w, _) = mis_windows(&ds.x, &ds.y, &SelectionRule::Ratio(*ratio), 1000, 5);
             println!("  {name:<10} ratio={ratio:.2}  W = {}", w.to_one_based_string());
@@ -418,7 +419,7 @@ pub fn table1() -> Table {
         }
     }
     t.save(&results_path("table1")).ok();
-    t
+    Ok(t)
 }
 
 /// Shared train/eval for Tables 2–3.
@@ -429,7 +430,7 @@ pub fn run_gp_rmse(
     engine: EngineKind,
     iters: usize,
     seed: u64,
-) -> f64 {
+) -> FgpResult<f64> {
     let (train, test) = ds.split(0.8, seed);
     let mut cfg = GpConfig::new(kernel, windows.clone());
     cfg.engine = engine;
@@ -438,13 +439,13 @@ pub fn run_gp_rmse(
     cfg.loss_every = 0;
     cfg.nll = NllOptions { train_cg_iters: 10, num_probes: 5, slq_steps: 10, cg_tol: 1e-10, seed };
     cfg.precond = PrecondKind::Aafn(AfnOptions { k_per_window: 10, max_rank: 100, fill: 10 });
-    let trained = GpModel::new(cfg).fit(&train.x, &train.y);
+    let trained = GpModel::new(cfg).fit(&train.x, &train.y)?;
     let pred = trained.predict_mean(&test.x);
-    crate::util::rmse(&pred, &test.y)
+    Ok(crate::util::rmse(&pred, &test.y))
 }
 
 /// Table 2: RMSE of NFFT-additive GPs at MIS ratios vs exact single-kernel.
-pub fn table2(max_n: usize, iters: usize) -> Table {
+pub fn table2(max_n: usize, iters: usize) -> FgpResult<Table> {
     announce(
         "Table 2",
         "RMSE: NFFT-additive at MIS ratios vs exact GP",
@@ -452,19 +453,19 @@ pub fn table2(max_n: usize, iters: usize) -> Table {
     );
     let mut t = Table::with_cols(&["dataset", "kernel", "ratio", "rmse", "rmse_exact"]);
     for (di, name) in ["bike", "elevators", "poletele"].iter().enumerate() {
-        let mut ds = uci::by_name(name, 0).unwrap().subsample(max_n, 3);
+        let mut ds = uci::by_name(name, 0)?.subsample(max_n, 3);
         ds.standardize();
         for (ki, kernel) in [KernelFn::Gaussian, KernelFn::Matern12].iter().enumerate() {
             // exact single-kernel baseline: one window with ≤3 top features
             // per chunk over ALL features
             let all = Windows::consecutive(ds.p(), 3);
             let exact_rmse =
-                run_gp_rmse(&ds, *kernel, &all, EngineKind::ExactRust, iters, 71);
+                run_gp_rmse(&ds, *kernel, &all, EngineKind::ExactRust, iters, 71)?;
             for (ri, ratio) in [1.0 / 3.0, 2.0 / 3.0, 1.0].iter().enumerate() {
                 let (w, _) =
                     mis_windows(&ds.x, &ds.y, &SelectionRule::Ratio(*ratio), 1000, 5);
                 let rmse =
-                    run_gp_rmse(&ds, *kernel, &w, EngineKind::NfftRust, iters, 73);
+                    run_gp_rmse(&ds, *kernel, &w, EngineKind::NfftRust, iters, 73)?;
                 println!(
                     "  {name:<10} {:<9} ratio={ratio:.2}  rmse={rmse:.3}  (exact={exact_rmse:.3})",
                     kernel.name()
@@ -474,11 +475,11 @@ pub fn table2(max_n: usize, iters: usize) -> Table {
         }
     }
     t.save(&results_path("table2")).ok();
-    t
+    Ok(t)
 }
 
 /// Table 3: RMSE of EN-grouped NFFT-additive vs exact vs SVGP (+ road3d).
-pub fn table3(max_n: usize, iters: usize) -> Table {
+pub fn table3(max_n: usize, iters: usize) -> FgpResult<Table> {
     announce(
         "Table 3",
         "RMSE: EN-grouped NFFT-additive vs exact vs SVGP",
@@ -487,7 +488,7 @@ pub fn table3(max_n: usize, iters: usize) -> Table {
     let mut t = Table::with_cols(&["dataset", "svgp", "exact_g", "exact_m", "additive_g", "additive_m"]);
     for (di, name) in ["bike", "elevators", "poletele", "road3d"].iter().enumerate() {
         let cap = if *name == "road3d" { max_n * 4 } else { max_n };
-        let mut ds = uci::by_name(name, 0).unwrap().subsample(cap, 3);
+        let mut ds = uci::by_name(name, 0)?.subsample(cap, 3);
         ds.standardize();
         let (w, _) = if ds.p() > 3 {
             en_windows(&ds.x, &ds.y, 0.01, &SelectionRule::Count(9), 1000, 5)
@@ -505,7 +506,7 @@ pub fn table3(max_n: usize, iters: usize) -> Table {
             adam_lr: 0.05,
             init: Default::default(),
         })
-        .fit(&ak, &tr.x, &tr.y);
+        .fit(&ak, &tr.x, &tr.y)?;
         let svgp_rmse = crate::util::rmse(&svgp.predict_mean(&te.x), &te.y);
         // Exact engines on the full windows (the "exact GP" column; dense
         // MVM, so bounded by max_n); road3d uses high-accuracy NFFT as the
@@ -515,23 +516,23 @@ pub fn table3(max_n: usize, iters: usize) -> Table {
         } else {
             EngineKind::ExactRust
         };
-        let exact_g = run_gp_rmse(&ds, KernelFn::Gaussian, &all, exact_engine, iters, 83);
-        let exact_m = run_gp_rmse(&ds, KernelFn::Matern12, &all, exact_engine, iters, 89);
-        let add_g = run_gp_rmse(&ds, KernelFn::Gaussian, &w, EngineKind::NfftRust, iters, 97);
-        let add_m = run_gp_rmse(&ds, KernelFn::Matern12, &w, EngineKind::NfftRust, iters, 101);
+        let exact_g = run_gp_rmse(&ds, KernelFn::Gaussian, &all, exact_engine, iters, 83)?;
+        let exact_m = run_gp_rmse(&ds, KernelFn::Matern12, &all, exact_engine, iters, 89)?;
+        let add_g = run_gp_rmse(&ds, KernelFn::Gaussian, &w, EngineKind::NfftRust, iters, 97)?;
+        let add_m = run_gp_rmse(&ds, KernelFn::Matern12, &w, EngineKind::NfftRust, iters, 101)?;
         println!(
             "  {name:<10} SVGP-G={svgp_rmse:.3}  exact G={exact_g:.3} M={exact_m:.3}  additive G={add_g:.3} M={add_m:.3}"
         );
         t.push_row(&[di as f64, svgp_rmse, exact_g, exact_m, add_g, add_m]);
     }
     t.save(&results_path("table3")).ok();
-    t
+    Ok(t)
 }
 
 // ------------------------------------------------------ MVM scaling ------
 
 /// Headline complexity: exact O(n²) vs NFFT O(n log n) MVM scaling.
-pub fn mvm_scaling(sizes: &[usize]) -> Table {
+pub fn mvm_scaling(sizes: &[usize]) -> FgpResult<Table> {
     announce("MVM scaling", "exact vs NFFT sub-kernel MVM wall-clock", "");
     let mut t = Table::with_cols(&["n", "exact_s", "nfft_s", "speedup"]);
     for &n in sizes {
@@ -565,5 +566,5 @@ pub fn mvm_scaling(sizes: &[usize]) -> Table {
         t.push_row(&[n as f64, te, tn, te / tn]);
     }
     t.save(&results_path("mvm_scaling")).ok();
-    t
+    Ok(t)
 }

@@ -11,6 +11,7 @@ use crate::kernels::additive::{dense_mvm, dense_mvm_batch, WindowedPoints};
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
 use crate::nfft::{Fastsum, NfftParams};
+use crate::util::{FgpError, FgpResult};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
@@ -21,13 +22,15 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
-    pub fn parse(s: &str) -> anyhow::Result<EngineKind> {
+    pub fn parse(s: &str) -> FgpResult<EngineKind> {
         match s.to_ascii_lowercase().as_str() {
             "exact-rust" | "exact" | "dense" => Ok(EngineKind::ExactRust),
             "nfft-rust" | "nfft" => Ok(EngineKind::NfftRust),
             "exact-pjrt" => Ok(EngineKind::ExactPjrt),
             "nfft-pjrt" => Ok(EngineKind::NfftPjrt),
-            other => anyhow::bail!("unknown engine {other:?}"),
+            other => Err(FgpError::InvalidArg(format!(
+                "unknown engine {other:?} (exact-rust|nfft-rust|exact-pjrt|nfft-pjrt)"
+            ))),
         }
     }
 
@@ -111,6 +114,7 @@ impl SubKernelMvm for ExactRustMvm {
         dense_mvm_batch(self.kernel, &self.wp, self.ell, v, deriv, &mut out);
         out
     }
+    // lint: no_alloc
     fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
         assert_eq!(out.rows, v.rows);
         assert_eq!(out.cols, v.cols);
@@ -186,6 +190,7 @@ impl SubKernelMvm for NfftRustMvm {
         }
         (k, d)
     }
+    // lint: no_alloc
     fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
         self.fastsum.apply_batch_into(v, deriv, out);
         if deriv {
@@ -205,16 +210,16 @@ pub fn build_sub_mvm(
     wp: WindowedPoints,
     ell: f64,
     nfft_params: Option<NfftParams>,
-) -> Box<dyn SubKernelMvm> {
+) -> FgpResult<Box<dyn SubKernelMvm>> {
     match kind {
-        EngineKind::ExactRust => Box::new(ExactRustMvm::new(kernel, wp, ell)),
+        EngineKind::ExactRust => Ok(Box::new(ExactRustMvm::new(kernel, wp, ell))),
         EngineKind::NfftRust => {
             let params = nfft_params.unwrap_or_else(|| NfftParams::default_for_dim(wp.d));
-            Box::new(NfftRustMvm::new(kernel, &wp, ell, params))
+            Ok(Box::new(NfftRustMvm::new(kernel, &wp, ell, params)))
         }
-        EngineKind::ExactPjrt | EngineKind::NfftPjrt => {
-            panic!("PJRT engines are built via runtime::engine::build_pjrt_sub_mvm")
-        }
+        EngineKind::ExactPjrt | EngineKind::NfftPjrt => Err(FgpError::InvalidArg(
+            "PJRT engines are built via runtime::engine::build_pjrt_sub_mvm".to_string(),
+        )),
     }
 }
 

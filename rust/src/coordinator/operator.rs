@@ -117,8 +117,8 @@ impl KernelOperator {
                 Some(self.subs[s].apply_batch(v, deriv))
             });
             out.data.fill(0.0);
-            for o in outs {
-                out.add_assign(&o.expect("window result"));
+            for o in outs.into_iter().flatten() {
+                out.add_assign(&o);
             }
         }
         for a in &mut out.data {
@@ -160,8 +160,7 @@ impl KernelOperator {
             );
             let mut acc_k = Matrix::zeros(v.rows, v.cols);
             let mut acc_d = Matrix::zeros(v.rows, v.cols);
-            for o in outs {
-                let (k, d) = o.expect("window result");
+            for (k, d) in outs.into_iter().flatten() {
                 acc_k.add_assign(&k);
                 acc_d.add_assign(&d);
             }
@@ -213,6 +212,7 @@ impl LinOp for KernelOperator {
             y[i] = kv[i] + self.sigma_eps2 * x[i];
         }
     }
+    // lint: no_alloc
     fn apply_batch(&self, x: &Matrix, y: &mut Matrix) {
         assert_eq!(x.cols, self.n);
         assert_eq!(y.cols, self.n);

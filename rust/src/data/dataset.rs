@@ -3,6 +3,7 @@
 
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
+use crate::util::FgpResult;
 
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -90,7 +91,7 @@ impl Dataset {
         Dataset::new(&self.name, x, y)
     }
 
-    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save_csv(&self, path: &std::path::Path) -> FgpResult<()> {
         let mut cols: Vec<String> = (0..self.p()).map(|c| format!("x{c}")).collect();
         cols.push("y".to_string());
         let mut t = crate::util::csv::Table::new(cols);
@@ -102,7 +103,7 @@ impl Dataset {
         t.save(path)
     }
 
-    pub fn load_csv(name: &str, path: &std::path::Path) -> anyhow::Result<Dataset> {
+    pub fn load_csv(name: &str, path: &std::path::Path) -> FgpResult<Dataset> {
         let t = crate::util::csv::Table::load(path)?;
         let p = t.ncols() - 1;
         let n = t.nrows();

@@ -8,6 +8,7 @@ use crate::kernels::additive::AdditiveKernel;
 use crate::kernels::{KernelFn, Windows};
 use crate::linalg::{Cholesky, Matrix};
 use crate::util::rng::Rng;
+use crate::util::{FgpError, FgpResult};
 
 /// Sample a zero-mean GRF y ~ N(0, K + σ_ε²I) over the rows of `x`
 /// restricted to `active` features (Cholesky sampling; O(n³), fine for the
@@ -20,15 +21,17 @@ pub fn sample_grf(
     sigma_f2: f64,
     sigma_eps2: f64,
     seed: u64,
-) -> Vec<f64> {
+) -> FgpResult<Vec<f64>> {
     let ak = AdditiveKernel::new(kernel, Windows(vec![active.to_vec()]));
     let mut k = ak.gram_full(x, ell, sigma_f2, sigma_eps2 + 1e-10);
     // jitter for numerical PD
     k.add_diag(1e-10);
-    let ch = Cholesky::factor(&k).expect("GRF covariance SPD");
+    let ch = Cholesky::factor(&k).map_err(|_| {
+        FgpError::NotSpd("GRF covariance K + σε²I failed to factor".to_string())
+    })?;
     let mut rng = Rng::new(seed);
     let z = rng.normal_vec(x.rows);
-    ch.mul_lower(&z)
+    Ok(ch.mul_lower(&z))
 }
 
 /// Fig. 1 cloud: n points per 2-d window sampled uniformly in a disc of
@@ -86,14 +89,14 @@ pub fn fig6_dataset(n: usize, seed: u64) -> Dataset {
 
 /// Fig. 7 dataset: n points in [0,1], labels from a 1-d Gaussian-kernel
 /// GRF with σ_f² = 1/P = 1, ℓ = 0.1, σ_ε² = 0.01.
-pub fn fig7_dataset(n: usize, seed: u64) -> Dataset {
+pub fn fig7_dataset(n: usize, seed: u64) -> FgpResult<Dataset> {
     let mut rng = Rng::new(seed);
     let mut x = Matrix::zeros(n, 1);
     for v in &mut x.data {
         *v = rng.uniform();
     }
-    let y = sample_grf(&x, &[0], KernelFn::Gaussian, 0.1, 1.0, 0.01, seed ^ 0xbeef);
-    Dataset::new("fig7", x, y)
+    let y = sample_grf(&x, &[0], KernelFn::Gaussian, 0.1, 1.0, 0.01, seed ^ 0xbeef)?;
+    Ok(Dataset::new("fig7", x, y))
 }
 
 /// Fig. 8 dataset: n points in R²⁰, labels from a Gaussian-kernel GRF on
@@ -103,7 +106,7 @@ pub fn fig7_dataset(n: usize, seed: u64) -> Dataset {
 /// distances ≈ √12 ≫ ℓ), so we use ℓ = 2.5 to keep the paper's
 /// smoothness *relative to the data scale* — the property the experiment
 /// actually exercises.
-pub fn fig8_dataset(n: usize, seed: u64) -> Dataset {
+pub fn fig8_dataset(n: usize, seed: u64) -> FgpResult<Dataset> {
     let mut rng = Rng::new(seed);
     let mut x = Matrix::zeros(n, 20);
     for v in &mut x.data {
@@ -117,8 +120,8 @@ pub fn fig8_dataset(n: usize, seed: u64) -> Dataset {
         0.5, // σ_f² = 1/P with P = 2 windows of the 6 active features
         1e-4,
         seed ^ 0xf00d,
-    );
-    Dataset::new("fig8", x, y)
+    )?;
+    Ok(Dataset::new("fig8", x, y))
 }
 
 #[cfg(test)]
@@ -133,7 +136,7 @@ mod tests {
         for v in &mut x.data {
             *v = rng.uniform();
         }
-        let y = sample_grf(&x, &[0], KernelFn::Gaussian, 0.5, 1.0, 1e-6, 2);
+        let y = sample_grf(&x, &[0], KernelFn::Gaussian, 0.5, 1.0, 1e-6, 2).unwrap();
         // empirical correlation between close pairs must beat far pairs
         let mut close = Vec::new();
         let mut far = Vec::new();
@@ -188,7 +191,7 @@ mod tests {
         // A 6-d GRF has weak *marginal* dependence per feature, and the
         // histogram MI estimator carries a positive bias ≈ (B−1)²/(2n);
         // compare bias-corrected scores, needing n large and B small.
-        let d = fig8_dataset(3000, 6);
+        let d = fig8_dataset(3000, 6).unwrap();
         let nbins = 8;
         let scores = crate::features::mis_scores(&d.x, &d.y, nbins);
         let bias = ((nbins - 1) * (nbins - 1)) as f64 / (2.0 * d.n() as f64);
@@ -202,8 +205,8 @@ mod tests {
 
     #[test]
     fn deterministic_generators() {
-        let a = fig7_dataset(100, 9);
-        let b = fig7_dataset(100, 9);
+        let a = fig7_dataset(100, 9).unwrap();
+        let b = fig7_dataset(100, 9).unwrap();
         assert_eq!(a.y, b.y);
     }
 }

@@ -12,6 +12,7 @@
 use super::dataset::Dataset;
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
+use crate::util::{FgpError, FgpResult};
 
 /// Paper Table 3 shapes.
 pub const BIKE: (usize, usize) = (13034, 13);
@@ -19,13 +20,16 @@ pub const ELEVATORS: (usize, usize) = (13279, 18);
 pub const POLETELE: (usize, usize) = (4406, 19);
 pub const ROAD3D: (usize, usize) = (326_155, 2);
 
-pub fn by_name(name: &str, seed: u64) -> anyhow::Result<Dataset> {
+pub fn by_name(name: &str, seed: u64) -> FgpResult<Dataset> {
     match name.to_ascii_lowercase().as_str() {
         "bike" => Ok(bike(seed)),
         "elevators" => Ok(elevators(seed)),
         "poletele" => Ok(poletele(seed)),
         "road3d" => Ok(road3d(seed)),
-        other => anyhow::bail!("unknown dataset {other:?} (bike|elevators|poletele|road3d)"),
+        other => Err(FgpError::UnknownDataset {
+            name: other.to_string(),
+            known: "bike|elevators|poletele|road3d",
+        }),
     }
 }
 
@@ -196,7 +200,14 @@ mod tests {
     #[test]
     fn by_name_dispatch() {
         assert!(by_name("bike", 0).is_ok());
-        assert!(by_name("nope", 0).is_err());
+        // The error is typed (not a string match) and lists valid names.
+        match by_name("nope", 0) {
+            Err(FgpError::UnknownDataset { name, known }) => {
+                assert_eq!(name, "nope");
+                assert!(known.contains("bike"));
+            }
+            other => panic!("expected UnknownDataset, got {other:?}"),
+        }
     }
 
     #[test]

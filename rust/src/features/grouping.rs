@@ -29,7 +29,7 @@ pub fn windows_from_scores(
 ) -> Windows {
     let p = scores.len();
     let mut order: Vec<usize> = (0..p).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
     let kept: Vec<usize> = match rule {
         SelectionRule::Ratio(r) => {
             let keep = ((r * p as f64).ceil() as usize).clamp(1, p);

@@ -7,7 +7,7 @@ use crate::linalg::Matrix;
 /// Equal-frequency bin edges (quantiles) for `nbins` bins.
 fn quantile_edges(values: &[f64], nbins: usize) -> Vec<f64> {
     let mut sorted = values.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     (1..nbins)
         .map(|k| sorted[(k * sorted.len()) / nbins])
         .collect()
@@ -15,7 +15,7 @@ fn quantile_edges(values: &[f64], nbins: usize) -> Vec<f64> {
 
 fn bin_of(edges: &[f64], v: f64) -> usize {
     // first edge greater than v
-    match edges.binary_search_by(|e| e.partial_cmp(&v).unwrap()) {
+    match edges.binary_search_by(|e| e.total_cmp(&v)) {
         Ok(mut i) => {
             // place ties deterministically in the right bin
             while i < edges.len() && edges[i] <= v {

@@ -38,6 +38,7 @@ impl FftPlan {
         Self { n, bitrev, twiddles }
     }
 
+    // lint: no_alloc
     fn permute(&self, data: &mut [Complex]) {
         for i in 0..self.n {
             let j = self.bitrev[i] as usize;
@@ -47,6 +48,7 @@ impl FftPlan {
         }
     }
 
+    // lint: no_alloc
     fn butterfly_passes(&self, data: &mut [Complex]) {
         for tw in &self.twiddles {
             let m = tw.len(); // half-width
@@ -65,6 +67,7 @@ impl FftPlan {
     }
 
     /// In-place forward DFT (negative exponent, unscaled).
+    // lint: no_alloc
     pub fn forward(&self, data: &mut [Complex]) {
         assert_eq!(data.len(), self.n);
         if self.n == 1 {
@@ -75,6 +78,7 @@ impl FftPlan {
     }
 
     /// In-place inverse DFT (positive exponent, scaled by 1/n).
+    // lint: no_alloc
     pub fn inverse(&self, data: &mut [Complex]) {
         assert_eq!(data.len(), self.n);
         if self.n == 1 {

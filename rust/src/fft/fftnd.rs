@@ -51,15 +51,18 @@ impl FftNdPlan {
 
     /// Allocation-free forward transform: the caller owns the line scratch
     /// (at least [`FftNdPlan::scratch_len`] entries, contents irrelevant).
+    // lint: no_alloc
     pub fn forward_with(&self, data: &mut [Complex], scratch: &mut [Complex]) {
         self.transform(data, scratch, true);
     }
 
     /// Allocation-free inverse transform (see [`FftNdPlan::forward_with`]).
+    // lint: no_alloc
     pub fn inverse_with(&self, data: &mut [Complex], scratch: &mut [Complex]) {
         self.transform(data, scratch, false);
     }
 
+    // lint: no_alloc
     fn transform(&self, data: &mut [Complex], scratch: &mut [Complex], fwd: bool) {
         assert_eq!(data.len(), self.len());
         assert!(scratch.len() >= self.scratch_len(), "scratch too small");

@@ -4,6 +4,7 @@
 
 use crate::kernels::additive::{gram, AdditiveKernel, WindowedPoints};
 use crate::linalg::{Cholesky, Matrix};
+use crate::util::{FgpError, FgpResult};
 
 pub struct ExactGp<'a> {
     ak: &'a AdditiveKernel,
@@ -28,23 +29,31 @@ impl<'a> ExactGp<'a> {
         self.ak.gram_full(self.x, ell, sf2, se2)
     }
 
-    /// Exact negative log marginal likelihood (eq. (1.2)).
-    pub fn nll(&self, ell: f64, sf2: f64, se2: f64) -> f64 {
+    fn factor_khat(&self, ell: f64, sf2: f64, se2: f64) -> FgpResult<Cholesky> {
         let k = self.khat(ell, sf2, se2);
-        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+        Cholesky::factor(&k).map_err(|_| {
+            FgpError::NotSpd(format!(
+                "K̂ (ℓ = {ell:.3e}, σf² = {sf2:.3e}, σε² = {se2:.3e}) is not SPD"
+            ))
+        })
+    }
+
+    /// Exact negative log marginal likelihood (eq. (1.2)).
+    pub fn nll(&self, ell: f64, sf2: f64, se2: f64) -> FgpResult<f64> {
+        let ch = self.factor_khat(ell, sf2, se2)?;
         let alpha = ch.solve(self.y);
         let n = self.y.len() as f64;
-        0.5 * (crate::linalg::dot(self.y, &alpha)
-            + ch.logdet()
-            + n * (2.0 * std::f64::consts::PI).ln())
+        Ok(0.5
+            * (crate::linalg::dot(self.y, &alpha)
+                + ch.logdet()
+                + n * (2.0 * std::f64::consts::PI).ln()))
     }
 
     /// Exact gradient d NLL / d (σ_f, ℓ, σ_ε):
     /// ½( tr(K̂⁻¹ ∂K̂) − αᵀ ∂K̂ α ).
-    pub fn grad(&self, ell: f64, sf2: f64, se2: f64) -> [f64; 3] {
+    pub fn grad(&self, ell: f64, sf2: f64, se2: f64) -> FgpResult<[f64; 3]> {
         let n = self.y.len();
-        let k = self.khat(ell, sf2, se2);
-        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+        let ch = self.factor_khat(ell, sf2, se2)?;
         let alpha = ch.solve(self.y);
         // ∂K̂ for each parameter (dense).
         let sf = sf2.sqrt();
@@ -81,7 +90,7 @@ impl<'a> ExactGp<'a> {
             tr_inv += ch.solve(&e)[c];
         }
         out[2] = 0.5 * (2.0 * se * tr_inv - 2.0 * se * crate::linalg::dot(&alpha, &alpha));
-        out
+        Ok(out)
     }
 
     /// Exact posterior mean and variance at test points.
@@ -91,9 +100,8 @@ impl<'a> ExactGp<'a> {
         ell: f64,
         sf2: f64,
         se2: f64,
-    ) -> (Vec<f64>, Vec<f64>) {
-        let k = self.khat(ell, sf2, se2);
-        let ch = Cholesky::factor(&k).expect("K̂ SPD");
+    ) -> FgpResult<(Vec<f64>, Vec<f64>)> {
+        let ch = self.factor_khat(ell, sf2, se2)?;
         let alpha = ch.solve(self.y);
         let ntest = xtest.rows;
         let n = self.x.rows;
@@ -120,7 +128,7 @@ impl<'a> ExactGp<'a> {
             let prior = sf2 * p + se2;
             var[t] = (prior - crate::linalg::dot(&kstar, &s)).max(1e-12);
         }
-        (mean, var)
+        Ok((mean, var))
     }
 }
 
@@ -149,16 +157,16 @@ mod tests {
         let (x, y, ak) = setup(40, 1);
         let gp = ExactGp::new(&ak, &x, &y);
         let (ell, sf2, se2) = (0.8, 0.6, 0.3);
-        let g = gp.grad(ell, sf2, se2);
+        let g = gp.grad(ell, sf2, se2).unwrap();
         let h = 1e-5;
         let sf = sf2.sqrt();
         let se = se2.sqrt();
-        let fd_sf = (gp.nll(ell, (sf + h) * (sf + h), se2)
-            - gp.nll(ell, (sf - h) * (sf - h), se2))
+        let fd_sf = (gp.nll(ell, (sf + h) * (sf + h), se2).unwrap()
+            - gp.nll(ell, (sf - h) * (sf - h), se2).unwrap())
             / (2.0 * h);
-        let fd_ell = (gp.nll(ell + h, sf2, se2) - gp.nll(ell - h, sf2, se2)) / (2.0 * h);
-        let fd_se = (gp.nll(ell, sf2, (se + h) * (se + h))
-            - gp.nll(ell, sf2, (se - h) * (se - h)))
+        let fd_ell = (gp.nll(ell + h, sf2, se2).unwrap() - gp.nll(ell - h, sf2, se2).unwrap()) / (2.0 * h);
+        let fd_se = (gp.nll(ell, sf2, (se + h) * (se + h)).unwrap()
+            - gp.nll(ell, sf2, (se - h) * (se - h)).unwrap())
             / (2.0 * h);
         assert!((g[0] - fd_sf).abs() < 1e-4 * (1.0 + fd_sf.abs()), "sf: {} vs {fd_sf}", g[0]);
         assert!((g[1] - fd_ell).abs() < 1e-4 * (1.0 + fd_ell.abs()), "ell: {} vs {fd_ell}", g[1]);
@@ -175,7 +183,7 @@ mod tests {
         let w: Vec<f64> = rng.normal_vec(50);
         let y = k.matvec(&w);
         let gp = ExactGp::new(&ak, &x, &y);
-        let (mean, var) = gp.predict(&x, 0.8, 1.0, 1e-6);
+        let (mean, var) = gp.predict(&x, 0.8, 1.0, 1e-6).unwrap();
         let yscale = crate::util::variance(&y).sqrt();
         for i in 0..50 {
             assert!((mean[i] - y[i]).abs() < 1e-3 * yscale, "i={i}");
@@ -191,8 +199,8 @@ mod tests {
         for c in 0..4 {
             far[(0, c)] = 50.0; // far outside [0,2]^4
         }
-        let (_, var_far) = gp.predict(&far, 0.5, 1.0, 0.01);
-        let (_, var_near) = gp.predict(&x.submatrix(&[0], &[0, 1, 2, 3]), 0.5, 1.0, 0.01);
+        let (_, var_far) = gp.predict(&far, 0.5, 1.0, 0.01).unwrap();
+        let (_, var_near) = gp.predict(&x.submatrix(&[0], &[0, 1, 2, 3]), 0.5, 1.0, 0.01).unwrap();
         assert!(var_far[0] > var_near[0]);
         // At infinity: prior variance σf²P + σε².
         assert!((var_far[0] - (1.0 * 2.0 + 0.01)).abs() < 1e-6);

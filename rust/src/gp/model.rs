@@ -14,6 +14,7 @@ use crate::nfft::NfftParams;
 use crate::precond::{AafnGeometry, AafnPrecond, AfnOptions};
 use crate::solvers::cg::{cg_batch, pcg, CgOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
+use crate::util::{FgpError, FgpResult};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum PrecondKind {
@@ -81,7 +82,7 @@ impl GpModel {
         GpModel { config }
     }
 
-    fn build_operator(&self, x: &Matrix, hyper: &Hyper) -> KernelOperator {
+    fn build_operator(&self, x: &Matrix, hyper: &Hyper) -> FgpResult<KernelOperator> {
         let subs: Vec<Box<dyn SubKernelMvm>> = self
             .config
             .windows
@@ -95,8 +96,8 @@ impl GpModel {
                     .unwrap_or_else(|| NfftParams::default_for_dim(wp.d));
                 build_sub_mvm(self.config.engine, self.config.kernel, wp, hyper.ell, Some(nfft))
             })
-            .collect();
-        KernelOperator::new(subs, hyper.sigma_f2(), hyper.sigma_eps2())
+            .collect::<FgpResult<Vec<_>>>()?;
+        Ok(KernelOperator::new(subs, hyper.sigma_f2(), hyper.sigma_eps2()))
     }
 
     fn build_precond(
@@ -105,44 +106,48 @@ impl GpModel {
         x: &Matrix,
         hyper: &Hyper,
         geo: Option<&AafnGeometry>,
-    ) -> Option<Box<dyn Precond>> {
+    ) -> FgpResult<Option<Box<dyn Precond>>> {
         match &self.config.precond {
-            PrecondKind::None => None,
+            PrecondKind::None => Ok(None),
             PrecondKind::Aafn(_opts) => {
-                let geo = geo.expect("AAFN geometry prepared");
-                Some(Box::new(AafnPrecond::build_with(
+                let geo = geo.ok_or_else(|| {
+                    FgpError::InvalidArg(
+                        "AAFN geometry must be prepared before build_precond".to_string(),
+                    )
+                })?;
+                Ok(Some(Box::new(AafnPrecond::build_with(
                     ak,
                     hyper.ell,
                     hyper.sigma_f2(),
                     hyper.sigma_eps2(),
                     geo,
-                )))
+                )?)))
             }
-            PrecondKind::Nystrom { rank } => Some(Box::new(
-                crate::precond::NystromPrecond::build(
+            PrecondKind::Nystrom { rank } => {
+                Ok(Some(Box::new(crate::precond::NystromPrecond::build(
                     x,
                     ak,
                     hyper.ell,
                     hyper.sigma_f2(),
                     hyper.sigma_eps2(),
                     *rank,
-                ),
-            )),
+                )?)))
+            }
         }
     }
 
     /// Train on (x, y); y should be standardized (the examples handle it).
-    pub fn fit(&self, x: &Matrix, y: &[f64]) -> TrainedGp {
+    pub fn fit(&self, x: &Matrix, y: &[f64]) -> FgpResult<TrainedGp> {
         let t0 = std::time::Instant::now();
         let cfg = &self.config;
-        self.config.windows.validate(x.cols).expect("invalid windows");
+        self.config.windows.validate(x.cols)?;
         let ak = AdditiveKernel::new(cfg.kernel, cfg.windows.clone());
         let geo = match &cfg.precond {
             PrecondKind::Aafn(opts) => Some(AafnGeometry::new(x, &ak, opts)),
             _ => None,
         };
         let mut raw = cfg.init;
-        let mut op = self.build_operator(x, &raw.transform());
+        let mut op = self.build_operator(x, &raw.transform())?;
         let mut adam = Adam::new(3, cfg.adam_lr);
         let mut loss_trace = Vec::new();
         let mut hyper_trace = Vec::new();
@@ -151,7 +156,7 @@ impl GpModel {
         for it in 0..cfg.max_iters {
             let hyper = raw.transform();
             op.set_hyper(hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2());
-            let precond = self.build_precond(&ak, x, &hyper, geo.as_ref());
+            let precond = self.build_precond(&ak, x, &hyper, geo.as_ref())?;
             let pref: Option<&dyn Precond> = precond.as_deref();
             let mut nll_opts = cfg.nll.clone();
             nll_opts.seed = cfg.nll.seed.wrapping_add(it as u64);
@@ -179,14 +184,14 @@ impl GpModel {
         // accuracy (50 CG iterations by default).
         let hyper = raw.transform();
         op.set_hyper(hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2());
-        let precond = self.build_precond(&ak, x, &hyper, geo.as_ref());
+        let precond = self.build_precond(&ak, x, &hyper, geo.as_ref())?;
         let pref: Option<&dyn Precond> = precond.as_deref();
         let identity = IdentityPrecond(op.dim());
         let m: &dyn Precond = pref.unwrap_or(&identity);
         let cg_opts = CgOptions { tol: 1e-10, max_iter: cfg.predict_cg_iters, relative: true };
         let alpha = pcg(&op, m, y, &cg_opts).x;
 
-        TrainedGp {
+        Ok(TrainedGp {
             config: cfg.clone(),
             hyper,
             raw,
@@ -196,7 +201,7 @@ impl GpModel {
             x: x.clone(),
             mvms: op.mvms_performed().max(mvms),
             train_seconds: t0.elapsed().as_secs_f64(),
-        }
+        })
     }
 }
 
@@ -227,12 +232,12 @@ impl TrainedGp {
     /// that means one packed transform sweep instead of a transform per
     /// test point. Use `max_points` to bound the cost on large test sets
     /// (the rest get the prior variance).
-    pub fn predict_variance(&self, xtest: &Matrix, max_points: usize) -> Vec<f64> {
+    pub fn predict_variance(&self, xtest: &Matrix, max_points: usize) -> FgpResult<Vec<f64>> {
         let cfg = &self.config;
         let ak_prior =
             self.hyper.sigma_f2() * cfg.windows.len() as f64 + self.hyper.sigma_eps2();
         let model = GpModel { config: cfg.clone() };
-        let op = model.build_operator(&self.x, &self.hyper);
+        let op = model.build_operator(&self.x, &self.hyper)?;
         let n = self.x.rows;
         let cg_opts = CgOptions { tol: 1e-8, max_iter: cfg.predict_cg_iters, relative: true };
         let npts = xtest.rows.min(max_points);
@@ -268,7 +273,7 @@ impl TrainedGp {
             }
             t0 += nb;
         }
-        var
+        Ok(var)
     }
 }
 
@@ -346,7 +351,7 @@ mod tests {
     fn training_reduces_loss_and_fits() {
         let (x, y) = toy_data(150, 1);
         let model = GpModel::new(quick_config(EngineKind::ExactRust));
-        let trained = model.fit(&x, &y);
+        let trained = model.fit(&x, &y).unwrap();
         assert!(trained.loss_trace.len() >= 2);
         let first = trained.loss_trace.first().unwrap().1;
         let last = trained.loss_trace.last().unwrap().1;
@@ -361,8 +366,8 @@ mod tests {
     #[test]
     fn nfft_and_exact_training_agree() {
         let (x, y) = toy_data(150, 2);
-        let exact = GpModel::new(quick_config(EngineKind::ExactRust)).fit(&x, &y);
-        let nfft = GpModel::new(quick_config(EngineKind::NfftRust)).fit(&x, &y);
+        let exact = GpModel::new(quick_config(EngineKind::ExactRust)).fit(&x, &y).unwrap();
+        let nfft = GpModel::new(quick_config(EngineKind::NfftRust)).fit(&x, &y).unwrap();
         // Stochastic training amplifies tiny MVM differences over the Adam
         // trajectory, so compare with optimizer-scale slack: both runs must
         // land in the same hyperparameter basin and predict alike.
@@ -390,8 +395,8 @@ mod tests {
         let (x, y) = toy_data(100, 3);
         let mut cfg = quick_config(EngineKind::ExactRust);
         cfg.max_iters = 10;
-        let trained = GpModel::new(cfg).fit(&x, &y);
-        let var = trained.predict_variance(&x, 20);
+        let trained = GpModel::new(cfg).fit(&x, &y).unwrap();
+        let var = trained.predict_variance(&x, 20).unwrap();
         let prior = trained.hyper.sigma_f2() * 2.0 + trained.hyper.sigma_eps2();
         for (i, &v) in var.iter().take(20).enumerate() {
             assert!(v > 0.0 && v <= prior + 1e-9, "i={i} v={v} prior={prior}");

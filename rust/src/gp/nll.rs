@@ -64,6 +64,7 @@ pub fn estimate_nll(
 ) -> NllEstimate {
     let n = op.dim();
     assert_eq!(y.len(), n);
+    crate::util::debug_assert_all_finite(y, "estimate_nll targets y");
     let cg_opts = CgOptions {
         tol: opts.cg_tol,
         max_iter: opts.train_cg_iters,
@@ -72,6 +73,7 @@ pub fn estimate_nll(
     let identity = IdentityPrecond(n);
     let m: &dyn Precond = precond.unwrap_or(&identity);
     let sol: CgResult = pcg(op, m, y, &cg_opts);
+    crate::util::debug_assert_all_finite(&sol.x, "estimate_nll solution α");
     let slq_opts = SlqOptions {
         num_probes: opts.num_probes,
         steps: opts.slq_steps,
@@ -84,6 +86,7 @@ pub fn estimate_nll(
     };
     let value = 0.5
         * (dot(y, &sol.x) + est.mean + n as f64 * (2.0 * std::f64::consts::PI).ln());
+    crate::util::debug_assert_finite(value, "estimate_nll Z̃");
     NllEstimate {
         value,
         logdet: est.mean,
@@ -158,6 +161,7 @@ fn assemble_grad(
         var[j] = crate::util::variance(&samples[j]);
         grad[j] = 0.5 * (-quad[j] + tr);
     }
+    crate::util::debug_assert_all_finite(&grad, "estimate_grad ∇Z̃");
     GradEstimate { grad, trace_variance: var }
 }
 
@@ -196,6 +200,7 @@ pub fn estimate_nll_grad(
 ) -> (NllEstimate, GradEstimate) {
     let n = op.dim();
     assert_eq!(y.len(), n);
+    crate::util::debug_assert_all_finite(y, "estimate_nll_grad targets y");
     let identity = IdentityPrecond(n);
     let m: &dyn Precond = precond.unwrap_or(&identity);
     let cg_opts = CgOptions {
@@ -229,6 +234,7 @@ pub fn estimate_nll_grad(
     };
     let value = 0.5
         * (dot(y, &alpha) + est.mean + n as f64 * (2.0 * std::f64::consts::PI).ln());
+    crate::util::debug_assert_finite(value, "estimate_nll_grad Z̃");
     let grad = assemble_grad(op, &alpha, &z, &s);
     let nll = NllEstimate {
         value,
@@ -274,13 +280,32 @@ mod tests {
         (op, x, ak, y)
     }
 
+    /// Debug-build tripwire: a NaN in the targets must trip the finite
+    /// guard at the estimate_nll boundary instead of propagating silently
+    /// through CG and SLQ.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "estimate_nll targets y")]
+    fn nan_targets_trip_the_finite_guard() {
+        let (op, _x, _ak, mut y) = setup(30, 9, 0.8, 0.6, 0.3);
+        y[7] = f64::NAN;
+        let opts = NllOptions {
+            train_cg_iters: 10,
+            num_probes: 4,
+            slq_steps: 5,
+            cg_tol: 1e-8,
+            seed: 10,
+        };
+        let _ = estimate_nll(&op, None, &y, &opts);
+    }
+
     #[test]
     fn nll_estimate_close_to_exact_oracle() {
         let n = 80;
         let (ell, sf2, se2) = (0.8, 0.6, 0.3);
         let (op, x, ak, y) = setup(n, 1, ell, sf2, se2);
         let exact = ExactGp::new(&ak, &x, &y);
-        let want = exact.nll(ell, sf2, se2);
+        let want = exact.nll(ell, sf2, se2).unwrap();
         let opts = NllOptions {
             train_cg_iters: 80,
             num_probes: 40,
@@ -303,7 +328,7 @@ mod tests {
         let (ell, sf2, se2) = (0.9, 0.5, 0.4);
         let (op, x, ak, y) = setup(n, 3, ell, sf2, se2);
         let exact = ExactGp::new(&ak, &x, &y);
-        let want = exact.grad(ell, sf2, se2);
+        let want = exact.grad(ell, sf2, se2).unwrap();
         let opts = NllOptions {
             train_cg_iters: 70,
             num_probes: 400,
@@ -377,7 +402,8 @@ mod tests {
             sf2,
             se2,
             &crate::precond::AfnOptions { k_per_window: 30, max_rank: 60, fill: 10 },
-        );
+        )
+        .unwrap();
         let opts = NllOptions {
             train_cg_iters: 8,
             num_probes: 10,

@@ -13,6 +13,7 @@ use super::hyper::{Hyper, RawHyper};
 use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
 use crate::linalg::{Cholesky, Matrix};
 use crate::precond::farthest_point_sampling;
+use crate::util::{FgpError, FgpResult};
 
 pub struct SvgpConfig {
     pub num_inducing: usize,
@@ -124,7 +125,7 @@ impl Svgp {
         Svgp { config }
     }
 
-    pub fn fit(&self, ak: &AdditiveKernel, x: &Matrix, y: &[f64]) -> TrainedSvgp {
+    pub fn fit(&self, ak: &AdditiveKernel, x: &Matrix, y: &[f64]) -> FgpResult<TrainedSvgp> {
         let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
         let wp_full = WindowedPoints::extract(x, &concat);
         let inducing = farthest_point_sampling(&wp_full, self.config.num_inducing.min(x.rows));
@@ -160,7 +161,11 @@ impl Svgp {
         b.scale(h.sigma_eps2());
         b.add_assign(&kmn_knm);
         b.add_diag(1e-10);
-        let lb = Cholesky::factor(&b).expect("SVGP system SPD");
+        let lb = Cholesky::factor(&b).map_err(|_| {
+            FgpError::NotSpd(
+                "SVGP collapsed system σε²K_mm + K_mn·K_nm is not SPD".to_string(),
+            )
+        })?;
         let kmn_y = knm.matvec_t(y);
         let w = lb.solve(&kmn_y);
         // Inducing point coordinates.
@@ -168,14 +173,14 @@ impl Svgp {
         for (r, &i) in inducing.iter().enumerate() {
             xm.row_mut(r).copy_from_slice(x.row(i));
         }
-        TrainedSvgp {
+        Ok(TrainedSvgp {
             hyper: h,
             elbo_trace,
             inducing,
             w,
             xm,
             ak: AdditiveKernel::new(ak.kernel, ak.windows.clone()),
-        }
+        })
     }
 }
 
@@ -221,7 +226,7 @@ mod tests {
             adam_lr: 0.05,
             init: RawHyper::default(),
         });
-        let t = svgp.fit(&ak, &x, &y);
+        let t = svgp.fit(&ak, &x, &y).unwrap();
         let first = t.elbo_trace.first().unwrap().1;
         let last = t.elbo_trace.last().unwrap().1;
         assert!(last > first, "ELBO did not increase: {first} -> {last}");
@@ -236,7 +241,7 @@ mod tests {
             adam_lr: 0.05,
             init: RawHyper::default(),
         });
-        let t = svgp.fit(&ak, &x, &y);
+        let t = svgp.fit(&ak, &x, &y).unwrap();
         let pred = t.predict_mean(&x);
         let rmse = crate::util::rmse(&pred, &y);
         let ystd = crate::util::variance(&y).sqrt();
@@ -256,7 +261,7 @@ mod tests {
         let h = Hyper::new(0.8, 1.0, 0.3);
         let elbo = ws.elbo(&h);
         let exact_gp = crate::gp::exact::ExactGp::new(&ak, &x, &y);
-        let exact_evidence = -exact_gp.nll(h.ell, h.sigma_f2(), h.sigma_eps2());
+        let exact_evidence = -exact_gp.nll(h.ell, h.sigma_f2(), h.sigma_eps2()).unwrap();
         assert!(
             elbo <= exact_evidence + 1e-6,
             "elbo={elbo} exceeds evidence={exact_evidence}"

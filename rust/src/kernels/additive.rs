@@ -8,6 +8,7 @@
 use super::KernelFn;
 use crate::linalg::Matrix;
 use crate::util::parallel;
+use crate::util::{FgpError, FgpResult};
 
 /// Feature windows W = [W₁, …, W_P]; each inner vec holds 0-based feature
 /// indices (the paper prints them 1-based).
@@ -30,23 +31,22 @@ impl Windows {
 
     /// Parse "[[1,2,3],[4,5,6]]" (1-based, as printed in the paper) into
     /// 0-based windows.
-    pub fn parse_one_based(s: &str) -> anyhow::Result<Windows> {
+    pub fn parse_one_based(s: &str) -> FgpResult<Windows> {
+        let err = |msg: &str| FgpError::Parse(format!("windows: {msg}"));
         let json = crate::util::json::Json::parse(s)
-            .map_err(|e| anyhow::anyhow!("windows: {e}"))?;
-        let arr = json
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("windows must be a JSON array"))?;
+            .map_err(|e| err(&e.to_string()))?;
+        let arr = json.as_arr().ok_or_else(|| err("must be a JSON array"))?;
         let mut out = Vec::new();
         for w in arr {
-            let idx = w
-                .as_arr()
-                .ok_or_else(|| anyhow::anyhow!("window must be an array"))?;
+            let idx = w.as_arr().ok_or_else(|| err("window must be an array"))?;
             let mut ws = Vec::new();
             for v in idx {
                 let i = v
                     .as_usize()
-                    .ok_or_else(|| anyhow::anyhow!("window index must be a number"))?;
-                anyhow::ensure!(i >= 1, "windows are 1-based in this format");
+                    .ok_or_else(|| err("window index must be a number"))?;
+                if i < 1 {
+                    return Err(err("windows are 1-based in this format"));
+                }
                 ws.push(i - 1);
             }
             out.push(ws);
@@ -81,13 +81,23 @@ impl Windows {
     }
 
     /// Validate against feature dimension p: indices in range, disjoint.
-    pub fn validate(&self, p: usize) -> anyhow::Result<()> {
+    pub fn validate(&self, p: usize) -> FgpResult<()> {
         let mut seen = vec![false; p];
         for w in &self.0 {
-            anyhow::ensure!(!w.is_empty(), "empty window");
+            if w.is_empty() {
+                return Err(FgpError::InvalidArg("empty window".to_string()));
+            }
             for &i in w {
-                anyhow::ensure!(i < p, "window index {i} out of range (p={p})");
-                anyhow::ensure!(!seen[i], "feature {i} appears in two windows");
+                if i >= p {
+                    return Err(FgpError::InvalidArg(format!(
+                        "window index {i} out of range (p={p})"
+                    )));
+                }
+                if seen[i] {
+                    return Err(FgpError::InvalidArg(format!(
+                        "feature {i} appears in two windows"
+                    )));
+                }
                 seen[i] = true;
             }
         }

@@ -19,12 +19,14 @@ pub enum KernelFn {
 }
 
 impl KernelFn {
-    pub fn parse(s: &str) -> anyhow::Result<KernelFn> {
+    pub fn parse(s: &str) -> crate::util::FgpResult<KernelFn> {
         match s.to_ascii_lowercase().as_str() {
             "gaussian" | "rbf" | "g" => Ok(KernelFn::Gaussian),
             "matern" | "matern12" | "m" | "matern0.5" => Ok(KernelFn::Matern12),
             "matern32" | "matern1.5" => Ok(KernelFn::Matern32),
-            other => anyhow::bail!("unknown kernel {other:?}"),
+            other => Err(crate::util::FgpError::InvalidArg(format!(
+                "unknown kernel {other:?} (gaussian|matern12|matern32)"
+            ))),
         }
     }
 

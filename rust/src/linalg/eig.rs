@@ -107,7 +107,7 @@ pub fn tridiag_eig(
 
     // Sort ascending (and permute eigenvectors accordingly).
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    order.sort_by(|&a, &b| d[a].total_cmp(&d[b]));
     let sorted_d: Vec<f64> = order.iter().map(|&i| d[i]).collect();
     let sorted_z = z.map(|zm| {
         let mut out = Matrix::zeros(n, n);
@@ -256,7 +256,7 @@ pub fn jacobi_eig(a_in: &Matrix) -> (Vec<f64>, Matrix) {
     let mut vals: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
     // Sort ascending, permute V columns.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&x, &y| vals[x].partial_cmp(&vals[y]).unwrap());
+    order.sort_by(|&x, &y| vals[x].total_cmp(&vals[y]));
     let sorted: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
     let mut vout = Matrix::zeros(n, n);
     for (newc, &oldc) in order.iter().enumerate() {

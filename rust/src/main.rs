@@ -49,9 +49,9 @@ fn load_dataset(args: &Args) -> anyhow::Result<Dataset> {
     let data = args.str_or("data", "bike");
     let seed = args.u64_or("seed", 0);
     if data.ends_with(".csv") {
-        Dataset::load_csv(&data, std::path::Path::new(&data))
+        Ok(Dataset::load_csv(&data, std::path::Path::new(&data))?)
     } else {
-        uci::by_name(&data, seed)
+        Ok(uci::by_name(&data, seed)?)
     }
 }
 
@@ -111,7 +111,7 @@ fn cmd_train(args: &Args, write_pred: bool) -> anyhow::Result<()> {
     );
     let (train, test) = ds.split(0.8, args.u64_or("seed", 0) + 1);
     let model = GpModel::new(cfg);
-    let trained = model.fit(&train.x, &train.y);
+    let trained = model.fit(&train.x, &train.y)?;
     println!(
         "trained in {:.1}s ({} MVMs) | σ_f={:.4} ℓ={:.4} σ_ε={:.4}",
         trained.train_seconds,
@@ -130,7 +130,7 @@ fn cmd_train(args: &Args, write_pred: bool) -> anyhow::Result<()> {
         let out = args.str_or("out", "results/predictions.csv");
         let mut t = fourier_gp::util::csv::Table::with_cols(&["y_true", "y_pred", "variance"]);
         let var = if args.has_flag("variance") {
-            trained.predict_variance(&test.x, args.usize_or("variance-points", 200))
+            trained.predict_variance(&test.x, args.usize_or("variance-points", 200))?
         } else {
             vec![f64::NAN; test.n()]
         };
@@ -157,17 +157,17 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     };
     let run = |id: &str| -> anyhow::Result<()> {
         match id {
-            "fig1" => drop(exp::fig1(n1)),
-            "fig2" => drop(exp::fig2()),
-            "fig3" => drop(exp::fig3()),
-            "fig4" => drop(exp::fig4(2000)),
-            "fig5" => drop(exp::fig5(n5)),
-            "fig6" => drop(exp::fig6(n6, reps6)),
-            "fig7" => drop(exp::fig7(it7)),
-            "fig8" => drop(exp::fig8(n8, it8)),
-            "table1" => drop(exp::table1()),
-            "table2" => drop(exp::table2(tmaxn.min(4000), tit)),
-            "table3" => drop(exp::table3(tmaxn.min(4000), tit)),
+            "fig1" => drop(exp::fig1(n1)?),
+            "fig2" => drop(exp::fig2()?),
+            "fig3" => drop(exp::fig3()?),
+            "fig4" => drop(exp::fig4(2000)?),
+            "fig5" => drop(exp::fig5(n5)?),
+            "fig6" => drop(exp::fig6(n6, reps6)?),
+            "fig7" => drop(exp::fig7(it7)?),
+            "fig8" => drop(exp::fig8(n8, it8)?),
+            "table1" => drop(exp::table1()?),
+            "table2" => drop(exp::table2(tmaxn.min(4000), tit)?),
+            "table3" => drop(exp::table3(tmaxn.min(4000), tit)?),
             other => anyhow::bail!("unknown experiment {other:?}"),
         }
         Ok(())
@@ -216,6 +216,9 @@ fn run(args: &Args) -> anyhow::Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
+    // Fail fast on a malformed FGP_THREADS instead of silently falling
+    // back to the hardware default mid-run.
+    fourier_gp::util::parallel::threads_from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args, false),
         Some("predict") => cmd_train(args, true),
@@ -225,7 +228,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 .f64_list("sizes")
                 .map(|v| v.into_iter().map(|x| x as usize).collect::<Vec<_>>())
                 .unwrap_or_else(|| vec![1000, 2000, 4000, 8000, 16000]);
-            exp::mvm_scaling(&sizes);
+            exp::mvm_scaling(&sizes)?;
             Ok(())
         }
         Some("info") => cmd_info(),

@@ -176,8 +176,10 @@ impl Fastsum {
     }
 
     /// Allocation-free single apply: internally parallel, writes into `out`.
+    // lint: no_alloc
     pub fn apply_into(&self, v: &[f64], deriv: bool, out: &mut [f64]) {
         assert_eq!(v.len(), self.n());
+        crate::util::debug_assert_all_finite(v, "fastsum apply input");
         assert_eq!(out.len(), self.n());
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
         let plan = &*self.plan;
@@ -207,8 +209,10 @@ impl Fastsum {
 
     /// In-place batched apply (see [`Fastsum::apply_batch`]); `out` must be
     /// the same shape as `v` and is fully overwritten.
+    // lint: no_alloc
     pub fn apply_batch_into(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
         assert_eq!(v.cols, self.n());
+        crate::util::debug_assert_all_finite(&v.data, "fastsum batch apply input");
         assert_eq!(out.rows, v.rows);
         assert_eq!(out.cols, v.cols);
         let nb = v.rows;
@@ -311,6 +315,7 @@ impl Fastsum {
 
     /// In-place fused kernel + derivative batch apply (see
     /// [`Fastsum::apply_batch_pair`]); both outputs are fully overwritten.
+    // lint: no_alloc
     pub fn apply_batch_pair_into(
         &self,
         v: &Matrix,

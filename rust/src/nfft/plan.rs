@@ -251,6 +251,7 @@ impl NfftPlan {
     }
 
     #[inline]
+    // lint: no_alloc
     fn spread_point(&self, j: usize, vj: Complex, grid: &mut [Complex]) {
         let two_s = 2 * self.params.s;
         let w = &self.weights[j * self.d * two_s..(j + 1) * self.d * two_s];
@@ -289,9 +290,14 @@ impl NfftPlan {
     }
 
     /// Serial spread of one coefficient vector into `grid` (zeroed first).
+    // lint: no_alloc
     pub(crate) fn spread_serial_into(&self, v: &[Complex], grid: &mut [Complex]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(grid.len(), self.grid_len());
+        debug_assert!(
+            v.iter().all(|c| c.re.is_finite() && c.im.is_finite()),
+            "NFFT spread input contains non-finite coefficients"
+        );
         grid.fill(Complex::ZERO);
         for j in 0..self.n {
             self.spread_point(j, v[j], grid);
@@ -308,6 +314,10 @@ impl NfftPlan {
     pub(crate) fn spread_parallel_into(&self, v: &[Complex], grid: &mut [Complex]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(grid.len(), self.grid_len());
+        debug_assert!(
+            v.iter().all(|c| c.re.is_finite() && c.im.is_finite()),
+            "NFFT spread input contains non-finite coefficients"
+        );
         let n = self.n;
         let nchunks_max = parallel::num_threads().clamp(1, 16).min(n.max(1));
         let per = n.div_ceil(nchunks_max.max(1)).max(1);
@@ -345,6 +355,7 @@ impl NfftPlan {
     }
 
     #[inline]
+    // lint: no_alloc
     fn gather_point(&self, j: usize, grid: &[Complex]) -> Complex {
         let two_s = 2 * self.params.s;
         let d = self.d;
@@ -388,24 +399,29 @@ impl NfftPlan {
     }
 
     /// Gather the real parts at every point, serially (batch hot path).
+    // lint: no_alloc
     pub(crate) fn gather_re_serial_into(&self, grid: &[Complex], out: &mut [f64]) {
         assert_eq!(out.len(), self.n);
         for (j, o) in out.iter_mut().enumerate() {
             *o = self.gather_point(j, grid).re;
         }
+        crate::util::debug_assert_all_finite(out, "NFFT gather output");
     }
 
     /// Gather the real parts at every point, parallel over points.
+    // lint: no_alloc
     pub(crate) fn gather_re_parallel_into(&self, grid: &[Complex], out: &mut [f64]) {
         assert_eq!(out.len(), self.n);
         parallel::parallel_rows(out, self.n, 1, |j, slot| {
             slot[0] = self.gather_point(j, grid).re;
         });
+        crate::util::debug_assert_all_finite(out, "NFFT gather output");
     }
 
     /// Packed gather: after a Hermitian-packed inverse transform the grid
     /// holds Re(g_a) + i·Re(g_b); the real-weighted gather keeps the two
     /// lanes exactly separate, so `out_a` = column a, `out_b` = column b.
+    // lint: no_alloc
     pub(crate) fn gather_packed_serial_into(
         &self,
         grid: &[Complex],
@@ -419,10 +435,13 @@ impl NfftPlan {
             out_a[j] = c.re;
             out_b[j] = c.im;
         }
+        crate::util::debug_assert_all_finite(out_a, "NFFT packed gather output a");
+        crate::util::debug_assert_all_finite(out_b, "NFFT packed gather output b");
     }
 
     /// Post-FFT projection onto the small grid: deconvolve and scale each
     /// k ∈ I_m out of the oversampled spectrum (table-driven).
+    // lint: no_alloc
     pub(crate) fn project_single_into(&self, grid: &[Complex], out: &mut [Complex]) {
         assert_eq!(out.len(), self.num_coeffs());
         let scale = 1.0 / self.grid_len() as f64;
@@ -439,6 +458,7 @@ impl NfftPlan {
     ///   ĝa[k] = (Ĝ[k] + conj(Ĝ[−k]))/2,  ĝb[k] = (Ĝ[k] − conj(Ĝ[−k]))/(2i),
     /// evaluated via the precomputed mirror table `pad_neg_idx` (the ½ is
     /// folded into the deconvolution scale).
+    // lint: no_alloc
     pub(crate) fn project_packed_into(
         &self,
         grid: &[Complex],
@@ -459,6 +479,7 @@ impl NfftPlan {
 
     /// Pre-IFFT embedding of small-grid coefficients into the oversampled
     /// spectrum (zeroed first), with deconvolution applied.
+    // lint: no_alloc
     pub(crate) fn embed_single_into(&self, fhat: &[Complex], grid: &mut [Complex]) {
         assert_eq!(fhat.len(), self.num_coeffs());
         assert_eq!(grid.len(), self.grid_len());
@@ -472,6 +493,7 @@ impl NfftPlan {
     /// Fused embed: like [`NfftPlan::embed_single_into`] but multiplying
     /// each coefficient by `mult` (the diagonal b_k factors) on the fly,
     /// saving a pass over the spectrum.
+    // lint: no_alloc
     pub(crate) fn embed_single_scaled_into(
         &self,
         fhat: &[Complex],
@@ -495,6 +517,7 @@ impl NfftPlan {
     /// accumulation (`+=`) handles the self-paired DC bin. −k may fall
     /// outside the embedded index set (k_ax = −m/2 mirrors to +m/2 ∉ I_m),
     /// which is exactly why the split happens on the oversampled grid.
+    // lint: no_alloc
     pub(crate) fn embed_packed_scaled_into(
         &self,
         sa: &[Complex],

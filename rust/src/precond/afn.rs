@@ -14,6 +14,7 @@ use super::sparse::{knn_pattern, IcFactor, SparseLower};
 use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
 use crate::linalg::{Cholesky, Matrix};
 use crate::solvers::Precond;
+use crate::util::{FgpError, FgpResult};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AfnOptions {
@@ -103,7 +104,7 @@ impl AafnPrecond {
         sigma_f2: f64,
         sigma_eps2: f64,
         opts: &AfnOptions,
-    ) -> AafnPrecond {
+    ) -> FgpResult<AafnPrecond> {
         let geo = AafnGeometry::new(x, ak, opts);
         Self::build_with(ak, ell, sigma_f2, sigma_eps2, &geo)
     }
@@ -116,7 +117,7 @@ impl AafnPrecond {
         sigma_f2: f64,
         sigma_eps2: f64,
         geo: &AafnGeometry,
-    ) -> AafnPrecond {
+    ) -> FgpResult<AafnPrecond> {
         let k = geo.landmarks.len();
         let n2 = geo.rest.len();
         let n = k + n2;
@@ -131,13 +132,20 @@ impl AafnPrecond {
         a21.scale(sigma_f2);
         a11.add_diag(sigma_eps2);
 
-        let l11 = Cholesky::factor(&a11).unwrap_or_else(|_| {
-            // Kernel blocks are PSD; σ_ε² keeps this PD except under
-            // extreme duplication — add jitter then.
-            let mut a = a11.clone();
-            a.add_diag(1e-10 + 1e-8 * sigma_f2);
-            Cholesky::factor(&a).expect("landmark block not SPD even with jitter")
-        });
+        let l11 = match Cholesky::factor(&a11) {
+            Ok(l) => l,
+            Err(_) => {
+                // Kernel blocks are PSD; σ_ε² keeps this PD except under
+                // extreme duplication — add jitter then.
+                let mut a = a11.clone();
+                a.add_diag(1e-10 + 1e-8 * sigma_f2);
+                Cholesky::factor(&a).map_err(|_| {
+                    FgpError::NotSpd(format!(
+                        "AAFN landmark block A₁₁ (k = {k}) is not SPD even with jitter"
+                    ))
+                })?
+            }
+        };
 
         // E = A21 · L11^{-T} ⇒ each row of E is the forward-solve of the
         // corresponding row of A21 (Eᵀ = L11^{-1} A12).
@@ -167,9 +175,9 @@ impl AafnPrecond {
         let sp = SparseLower::from_pattern(n2, &geo.pattern, |i, j| {
             a22(i, j) - crate::linalg::dot(e.row(i), e.row(j))
         });
-        let schur = sp.ic0();
+        let schur = sp.ic0()?;
 
-        AafnPrecond { n, perm: geo.perm.clone(), k, l11, e, schur }
+        Ok(AafnPrecond { n, perm: geo.perm.clone(), k, l11, e, schur })
     }
 
     pub fn rank(&self) -> usize {
@@ -318,7 +326,8 @@ mod tests {
             0.5,
             0.01,
             &AfnOptions { k_per_window: 15, max_rank: 40, fill: 8 },
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(2);
         let v = rng.normal_vec(150);
         let roundtrip = p.solve_upper(&p.mul_upper(&v));
@@ -344,7 +353,8 @@ mod tests {
             sf2,
             se2,
             &AfnOptions { k_per_window: 40, max_rank: 80, fill: 20 },
-        );
+        )
+        .unwrap();
         let a = ak.gram_full(&x, ell, sf2, se2);
         // Check L⁻¹AL⁻ᵀ has eigen-ish values near 1 via Rayleigh quotients.
         let mut rng = Rng::new(4);
@@ -372,7 +382,8 @@ mod tests {
             sf2,
             se2,
             &AfnOptions { k_per_window: 40, max_rank: 80, fill: 10 },
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(6);
         let b: Vec<f64> = (0..300).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
         let opts = CgOptions { tol: 1e-4, max_iter: 400, relative: true };
@@ -404,7 +415,8 @@ mod tests {
             sf2,
             se2,
             &AfnOptions { k_per_window: 45, max_rank: 90, fill: 9 },
-        );
+        )
+        .unwrap();
         let got = p.logdet();
         assert!(
             (got - exact).abs() < 0.15 * exact.abs().max(10.0),

@@ -8,6 +8,7 @@ use super::fps::farthest_point_sampling;
 use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
 use crate::linalg::{eig::jacobi_eig, Cholesky, Matrix};
 use crate::solvers::Precond;
+use crate::util::{FgpError, FgpResult};
 
 pub struct NystromPrecond {
     n: usize,
@@ -29,7 +30,7 @@ impl NystromPrecond {
         sigma_f2: f64,
         sigma_eps2: f64,
         rank: usize,
-    ) -> NystromPrecond {
+    ) -> FgpResult<NystromPrecond> {
         let n = x.rows;
         let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
         let wp_full = WindowedPoints::extract(x, &concat);
@@ -55,7 +56,11 @@ impl NystromPrecond {
         kmm.scale(sigma_f2);
         kmm.add_diag(1e-10 + 1e-8 * sigma_f2); // jitter
 
-        let lmm = Cholesky::factor(&kmm).expect("landmark block SPD");
+        let lmm = Cholesky::factor(&kmm).map_err(|_| {
+            FgpError::NotSpd(format!(
+                "Nyström landmark block K_mm (k = {k}) is not SPD even with jitter"
+            ))
+        })?;
         // U = K_nm L_mm⁻ᵀ: each row solved by forward substitution.
         let mut u = Matrix::zeros(n, k);
         {
@@ -89,8 +94,12 @@ impl NystromPrecond {
         let b_inv = spectral(&q, &dbp);
         let mut small = g;
         small.add_diag(sigma_eps2);
-        let m_small = Cholesky::factor(&small).expect("σε²I + G SPD");
-        NystromPrecond { n, sigma_eps, u, b_mul, b_inv, m_small, logdet }
+        let m_small = Cholesky::factor(&small).map_err(|_| {
+            FgpError::NotSpd(format!(
+                "Nyström SMW block σε²I + UᵀU (σε² = {sigma_eps2:.3e}) is not SPD"
+            ))
+        })?;
+        Ok(NystromPrecond { n, sigma_eps, u, b_mul, b_inv, m_small, logdet })
     }
 
     pub fn rank(&self) -> usize {
@@ -175,7 +184,7 @@ mod tests {
     #[test]
     fn split_is_consistent_with_solve() {
         let (x, ak) = setup(80, 1);
-        let p = NystromPrecond::build(&x, &ak, 1.0, 0.5, 0.05, 25);
+        let p = NystromPrecond::build(&x, &ak, 1.0, 0.5, 0.05, 25).unwrap();
         let mut rng = Rng::new(2);
         let v = rng.normal_vec(80);
         // L⁻ᵀ L⁻¹ == M⁻¹
@@ -200,7 +209,7 @@ mod tests {
     fn m_times_minv_identity() {
         // M = σε²I + UUᵀ applied explicitly must invert `solve`.
         let (x, ak) = setup(60, 3);
-        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 20);
+        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 20).unwrap();
         let mut rng = Rng::new(4);
         let v = rng.normal_vec(60);
         let minv_v = p.solve(&v);
@@ -216,7 +225,7 @@ mod tests {
     #[test]
     fn logdet_matches_dense() {
         let (x, ak) = setup(50, 5);
-        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 15);
+        let p = NystromPrecond::build(&x, &ak, 0.8, 1.0, 0.1, 15).unwrap();
         // dense M = σε²I + UUᵀ
         let mut m = p.u.matmul(&p.u.transpose());
         m.add_diag(0.1);
@@ -229,7 +238,7 @@ mod tests {
         // rank = n ⇒ UUᵀ == K̃ exactly (up to jitter), so M⁻¹A ≈ I.
         let (x, ak) = setup(40, 6);
         let (ell, sf2, se2) = (0.8, 0.7, 0.05);
-        let p = NystromPrecond::build(&x, &ak, ell, sf2, se2, 40);
+        let p = NystromPrecond::build(&x, &ak, ell, sf2, se2, 40).unwrap();
         let a = ak.gram_full(&x, ell, sf2, se2);
         let mut rng = Rng::new(7);
         let v = rng.normal_vec(40);

@@ -2,6 +2,8 @@
 //! triangular solves — the bounded-fill Schur-complement factorization
 //! inside AFN/AAFN (the paper's "maximum Schur complement fill level").
 
+use crate::util::{FgpError, FgpResult};
+
 /// Symmetric sparse matrix stored as its lower triangle in CSR
 /// (column indices strictly ascending per row, diagonal entry last).
 #[derive(Clone, Debug)]
@@ -29,7 +31,7 @@ impl SparseLower {
             let mut cs: Vec<usize> = cols.iter().copied().filter(|&j| j <= i).collect();
             cs.sort_unstable();
             cs.dedup();
-            assert_eq!(*cs.last().expect("row must include diagonal"), i);
+            assert_eq!(cs.last().copied(), Some(i), "row must include diagonal");
             for &j in &cs {
                 col_idx.push(j);
                 vals.push(value(i, j));
@@ -67,7 +69,7 @@ impl SparseLower {
     /// breakdown (non-positive pivot) the diagonal is shifted by growing
     /// multiples of its mean and the factorization restarts — the standard
     /// Manteuffel remedy. Returns the factor L (same pattern).
-    pub fn ic0(&self) -> IcFactor {
+    pub fn ic0(&self) -> FgpResult<IcFactor> {
         let mean_diag = (0..self.n)
             .map(|i| {
                 let (cols, vals) = self.row(i);
@@ -79,7 +81,7 @@ impl SparseLower {
         for attempt in 0..12 {
             match self.try_ic0(shift) {
                 Some(l) => {
-                    return IcFactor { l, shift };
+                    return Ok(IcFactor { l, shift });
                 }
                 None => {
                     shift = if shift == 0.0 {
@@ -91,7 +93,9 @@ impl SparseLower {
                 }
             }
         }
-        panic!("IC(0) failed even with large diagonal shift");
+        Err(FgpError::NotSpd(format!(
+            "IC(0) failed even with diagonal shift {shift:.3e}"
+        )))
     }
 
     fn try_ic0(&self, shift: f64) -> Option<SparseLower> {
@@ -250,10 +254,10 @@ pub fn knn_pattern(pts: &crate::kernels::additive::WindowedPoints, fill: usize) 
             let d2 = crate::linalg::dist2(pts.point(i), pts.point(j));
             if best.len() < fill {
                 best.push((d2, j));
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
             } else if d2 < best[fill - 1].0 {
                 best[fill - 1] = (d2, j);
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
             }
         }
         best.into_iter().map(|(_, j)| j).collect()
@@ -268,7 +272,7 @@ pub fn knn_pattern(pts: &crate::kernels::additive::WindowedPoints, fill: usize) 
     for (i, row) in pattern.iter_mut().enumerate() {
         row.sort_unstable();
         row.dedup();
-        debug_assert_eq!(*row.last().unwrap(), i);
+        debug_assert_eq!(row.last().copied(), Some(i));
     }
     pattern
 }
@@ -294,7 +298,7 @@ mod tests {
                 -1.0
             }
         });
-        let f = sp.ic0();
+        let f = sp.ic0().unwrap();
         assert_eq!(f.shift, 0.0);
         // Check L Lᵀ x == A x for random x.
         let mut rng = Rng::new(1);
@@ -324,7 +328,7 @@ mod tests {
         a.add_diag(n as f64);
         let pattern: Vec<Vec<usize>> = (0..n).map(|i| (0..=i).collect()).collect();
         let sp = SparseLower::from_pattern(n, &pattern, |i, j| a[(i, j)]);
-        let f = sp.ic0();
+        let f = sp.ic0().unwrap();
         let want = crate::linalg::Cholesky::factor(&a).unwrap().logdet();
         assert!((f.logdet() - want).abs() < 1e-9);
     }
@@ -342,7 +346,7 @@ mod tests {
                 -1.0
             }
         });
-        let f = sp.ic0();
+        let f = sp.ic0().unwrap();
         assert!(f.shift > 0.0);
         // Factor must be usable.
         let y = f.solve_lower(&[1.0, 1.0, 1.0, 1.0]);

@@ -11,13 +11,16 @@ use crate::coordinator::mvm::SubKernelMvm;
 use crate::kernels::additive::WindowedPoints;
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
+use crate::util::{FgpError, FgpResult};
 use std::sync::Arc;
 
-fn kernel_name(k: KernelFn) -> &'static str {
+fn kernel_name(k: KernelFn) -> FgpResult<&'static str> {
     match k {
-        KernelFn::Gaussian => "gaussian",
-        KernelFn::Matern12 => "matern12",
-        KernelFn::Matern32 => panic!("no Matérn(3/2) artifacts"),
+        KernelFn::Gaussian => Ok("gaussian"),
+        KernelFn::Matern12 => Ok("matern12"),
+        KernelFn::Matern32 => Err(FgpError::PjrtUnavailable(
+            "no Matérn(3/2) artifacts — use a *-rust engine for matern32".to_string(),
+        )),
     }
 }
 
@@ -37,17 +40,24 @@ impl ExactPjrtMvm {
         kernel: KernelFn,
         wp: WindowedPoints,
         ell: f64,
-    ) -> anyhow::Result<ExactPjrtMvm> {
-        let kn = kernel_name(kernel);
+    ) -> FgpResult<ExactPjrtMvm> {
+        let kn = kernel_name(kernel)?;
         let meta_k = rt
             .manifest
             .find("exact", kn, false, wp.d, 1)
-            .ok_or_else(|| anyhow::anyhow!("no exact artifact for {kn} d={}", wp.d))?
+            .ok_or_else(|| {
+                FgpError::PjrtUnavailable(format!(
+                    "no exact artifact for {kn} d={}",
+                    wp.d
+                ))
+            })?
             .clone();
         let meta_der = rt
             .manifest
             .find("exact", kn, true, wp.d, 1)
-            .ok_or_else(|| anyhow::anyhow!("no exact-deriv artifact for {kn}"))?
+            .ok_or_else(|| {
+                FgpError::PjrtUnavailable(format!("no exact-deriv artifact for {kn}"))
+            })?
             .clone();
         Ok(ExactPjrtMvm { rt, meta_k, meta_der, wp, ell })
     }
@@ -98,6 +108,9 @@ impl SubKernelMvm for ExactPjrtMvm {
                             (&ell, &[1]),
                         ],
                     )
+                    // lint: allow(panic) — SubKernelMvm::apply is infallible by
+                    // trait contract; a PJRT fault mid-solve is unrecoverable,
+                    // and stub builds cannot reach here (construction fails).
                     .expect("PJRT exact MVM");
                 for (a, p) in acc.iter_mut().zip(&part) {
                     *a += p;
@@ -153,6 +166,7 @@ impl SubKernelMvm for ExactPjrtMvm {
                                 (&ell, &[1]),
                             ],
                         )
+                        // lint: allow(panic) — infallible trait method; see apply.
                         .expect("PJRT exact MVM");
                     for (a, p) in acc.row_mut(r).iter_mut().zip(&part) {
                         *a += p;
@@ -186,24 +200,25 @@ impl NfftPjrtMvm {
         kernel: KernelFn,
         wp: &WindowedPoints,
         ell: f64,
-    ) -> anyhow::Result<NfftPjrtMvm> {
-        let kn = kernel_name(kernel);
+    ) -> FgpResult<NfftPjrtMvm> {
+        let kn = kernel_name(kernel)?;
         let meta_k = rt
             .manifest
             .find("nfft", kn, false, wp.d, wp.n)
             .ok_or_else(|| {
-                anyhow::anyhow!(
+                FgpError::PjrtUnavailable(format!(
                     "no nfft artifact for {kn} d={} with capacity >= {} (regenerate \
                      artifacts with a larger n)",
-                    wp.d,
-                    wp.n
-                )
+                    wp.d, wp.n
+                ))
             })?
             .clone();
         let meta_der = rt
             .manifest
             .find("nfft", kn, true, wp.d, wp.n)
-            .ok_or_else(|| anyhow::anyhow!("no nfft-deriv artifact for {kn}"))?
+            .ok_or_else(|| {
+                FgpError::PjrtUnavailable(format!("no nfft-deriv artifact for {kn}"))
+            })?
             .clone();
         let (scaled, scale) = wp.scale_to_quarter_box();
         let cap = meta_k.n;
@@ -243,6 +258,7 @@ impl SubKernelMvm for NfftPjrtMvm {
                     (&ell, &[1]),
                 ],
             )
+            // lint: allow(panic) — infallible trait method; see ExactPjrtMvm::apply.
             .expect("PJRT nfft MVM");
         let mut res = out[..self.n].to_vec();
         if deriv {
@@ -265,12 +281,14 @@ pub fn build_pjrt_sub_mvm(
     kernel: KernelFn,
     wp: WindowedPoints,
     ell: f64,
-) -> anyhow::Result<Box<dyn SubKernelMvm>> {
+) -> FgpResult<Box<dyn SubKernelMvm>> {
     use crate::coordinator::mvm::EngineKind;
     match kind {
         EngineKind::ExactPjrt => Ok(Box::new(ExactPjrtMvm::new(rt, kernel, wp, ell)?)),
         EngineKind::NfftPjrt => Ok(Box::new(NfftPjrtMvm::new(rt, kernel, &wp, ell)?)),
-        _ => anyhow::bail!("build_pjrt_sub_mvm called with a pure-rust engine"),
+        _ => Err(FgpError::InvalidArg(
+            "build_pjrt_sub_mvm called with a pure-rust engine".to_string(),
+        )),
     }
 }
 
@@ -288,7 +306,13 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return None;
         }
-        Some(Arc::new(PjrtRuntime::load(&dir).unwrap()))
+        match PjrtRuntime::load(&dir) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                None
+            }
+        }
     }
 
     fn points(n: usize, d: usize, seed: u64) -> WindowedPoints {

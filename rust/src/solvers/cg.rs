@@ -69,6 +69,7 @@ pub fn pcg(a: &dyn LinOp, m: &dyn Precond, b: &[f64], opts: &CgOptions) -> CgRes
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
         let rnorm = norm2(&r);
+        crate::util::debug_assert_finite(rnorm, "pcg residual norm");
         residuals.push(rnorm);
         iterations = it;
         if rnorm <= target {
@@ -175,6 +176,7 @@ pub fn pcg_batch(
             axpy(alpha, &p[c], x.row_mut(c));
             axpy(-alpha, apc, r.row_mut(c));
             let rnorm = norm2(r.row(c));
+            crate::util::debug_assert_finite(rnorm, "pcg_batch residual norm");
             residuals[c].push(rnorm);
             iterations[c] = it;
             if rnorm <= targets[c] {

@@ -171,7 +171,11 @@ pub fn quadrature(res: &LanczosResult, f: impl Fn(f64) -> f64) -> f64 {
         return 0.0;
     }
     let (theta, z) = crate::linalg::eig::tridiag_eig(&res.alpha, &res.beta, true);
-    let z = z.unwrap();
+    // `with_vectors = true` always yields eigenvectors; treat the
+    // impossible miss as "no quadrature contribution" rather than panic.
+    let Some(z) = z else {
+        return 0.0;
+    };
     let mut s = 0.0;
     for (i, &t) in theta.iter().enumerate() {
         let tau = z[(0, i)] * z[(0, i)];

@@ -51,7 +51,7 @@ pub struct BenchResult {
 
 impl BenchResult {
     fn from_samples(name: &str, mut s: Vec<f64>) -> Self {
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         let median = if n % 2 == 1 {
             s[n / 2]
@@ -60,7 +60,7 @@ impl BenchResult {
         };
         let mean = s.iter().sum::<f64>() / n as f64;
         let mut devs: Vec<f64> = s.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = devs[n / 2];
         Self {
             name: name.to_string(),
@@ -155,7 +155,7 @@ impl Bencher {
     }
 
     /// Write all recorded results to a CSV file under `results/`.
-    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save_csv(&self, path: &std::path::Path) -> crate::util::FgpResult<()> {
         let mut t = crate::util::csv::Table::with_cols(&[
             "median_s", "mean_s", "mad_s", "min_s", "max_s", "samples",
         ]);
@@ -174,7 +174,10 @@ impl Bencher {
             names.push('\n');
         }
         t.save(path)?;
-        std::fs::write(path.with_extension("names.txt"), names)?;
+        let names_path = path.with_extension("names.txt");
+        std::fs::write(&names_path, names).map_err(|e| {
+            crate::util::FgpError::io(format!("writing {}", names_path.display()), e)
+        })?;
         Ok(())
     }
 }

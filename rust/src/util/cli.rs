@@ -89,10 +89,13 @@ impl Args {
     }
 
     /// Error if any provided option/flag is not in `known`.
-    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+    pub fn check_known(&self, known: &[&str]) -> crate::util::FgpResult<()> {
         for k in self.options.keys().chain(self.flags.iter()) {
             if !known.contains(&k.as_str()) {
-                anyhow::bail!("unknown option --{k} (known: {})", known.join(", "));
+                return Err(crate::util::FgpError::InvalidArg(format!(
+                    "unknown option --{k} (known: {})",
+                    known.join(", ")
+                )));
             }
         }
         Ok(())

@@ -4,6 +4,7 @@
 //! rows. Quoting is supported on read (for robustness), never needed on
 //! write since we only emit numbers and simple identifiers.
 
+use crate::util::{FgpError, FgpResult};
 use std::io::Write as _;
 use std::path::Path;
 
@@ -54,29 +55,32 @@ impl Table {
         Some((0..self.nrows()).map(|r| self.row(r)[j]).collect())
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &Path) -> FgpResult<()> {
+        let ctx = |e| FgpError::io(format!("writing {}", path.display()), e);
         if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+            std::fs::create_dir_all(dir).map_err(ctx)?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "{}", self.columns.join(","))?;
+        let mut f =
+            std::io::BufWriter::new(std::fs::File::create(path).map_err(ctx)?);
+        writeln!(f, "{}", self.columns.join(",")).map_err(ctx)?;
         for r in 0..self.nrows() {
             let row: Vec<String> = self.row(r).iter().map(|v| format!("{v}")).collect();
-            writeln!(f, "{}", row.join(","))?;
+            writeln!(f, "{}", row.join(",")).map_err(ctx)?;
         }
         Ok(())
     }
 
-    pub fn load(path: &Path) -> anyhow::Result<Table> {
-        let text = std::fs::read_to_string(path)?;
+    pub fn load(path: &Path) -> FgpResult<Table> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| FgpError::io(format!("reading {}", path.display()), e))?;
         Self::parse(&text)
     }
 
-    pub fn parse(text: &str) -> anyhow::Result<Table> {
+    pub fn parse(text: &str) -> FgpResult<Table> {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
         let header = lines
             .next()
-            .ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+            .ok_or_else(|| FgpError::Parse("empty csv".to_string()))?;
         let columns: Vec<String> = split_csv_line(header)
             .into_iter()
             .map(|s| s.trim().to_string())
@@ -85,16 +89,16 @@ impl Table {
         for (lineno, line) in lines.enumerate() {
             let fields = split_csv_line(line);
             if fields.len() != t.ncols() {
-                anyhow::bail!(
+                return Err(FgpError::Parse(format!(
                     "csv row {} has {} fields, expected {}",
                     lineno + 2,
                     fields.len(),
                     t.ncols()
-                );
+                )));
             }
             for f in &fields {
                 let v: f64 = f.trim().parse().map_err(|_| {
-                    anyhow::anyhow!("csv row {}: bad number {f:?}", lineno + 2)
+                    FgpError::Parse(format!("csv row {}: bad number {f:?}", lineno + 2))
                 })?;
                 t.values.push(v);
             }
@@ -159,6 +163,15 @@ mod tests {
     fn rejects_ragged_rows() {
         assert!(Table::parse("a,b\n1,2,3\n").is_err());
         assert!(Table::parse("a,b\n1,x\n").is_err());
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors() {
+        assert!(matches!(Table::parse(""), Err(FgpError::Parse(_))));
+        let e = Table::parse("a,b\n1,2,3\n").unwrap_err();
+        assert!(e.to_string().contains("row 2"), "{e}");
+        let missing = Table::load(std::path::Path::new("/nonexistent/fgp.csv"));
+        assert!(matches!(missing, Err(FgpError::Io { .. })));
     }
 
     #[test]

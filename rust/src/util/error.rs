@@ -1,0 +1,118 @@
+//! The crate-wide typed error: every fallible library API returns
+//! [`FgpResult`] instead of panicking (enforced by `cargo run -p xtask --
+//! lint`, rule `panic`). `anyhow` remains only in the binary / examples,
+//! where `FgpError: std::error::Error + Send + Sync` interops via `?`.
+//!
+//! Policy (DESIGN.md "Invariants and how they are enforced"): a condition
+//! the *caller* can trigger (bad input, missing file, non-SPD system,
+//! absent backend) is an `FgpError`; a condition that can only arise from
+//! a bug inside this crate stays an `assert!`/`debug_assert!`.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type FgpResult<T> = Result<T, FgpError>;
+
+/// Typed error for the fourier-gp library.
+#[derive(Debug)]
+pub enum FgpError {
+    /// Malformed textual input (JSON manifests, CSV tables, window specs).
+    Parse(String),
+    /// Filesystem error, with the operation that failed.
+    Io { what: String, source: std::io::Error },
+    /// An argument outside the accepted domain (unknown kernel / engine /
+    /// grouping name, bad flag value, invalid window spec, …).
+    InvalidArg(String),
+    /// Unknown dataset name passed to `data::uci::by_name`.
+    UnknownDataset { name: String, known: &'static str },
+    /// An environment variable holds a value we refuse to guess around
+    /// (e.g. `FGP_THREADS=0`).
+    InvalidEnv { var: &'static str, value: String, reason: String },
+    /// A linear system that must be SPD was not, even after the documented
+    /// jitter/shift escalation.
+    NotSpd(String),
+    /// A numeric invariant failed at a layer boundary (non-finite value,
+    /// empty sample set, …).
+    Numeric(String),
+    /// The PJRT backend (or a required artifact) is not available in this
+    /// build/container.
+    PjrtUnavailable(String),
+}
+
+impl fmt::Display for FgpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FgpError::Parse(msg) => write!(f, "parse error: {msg}"),
+            FgpError::Io { what, source } => write!(f, "{what}: {source}"),
+            FgpError::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+            FgpError::UnknownDataset { name, known } => {
+                write!(f, "unknown dataset {name:?} ({known})")
+            }
+            FgpError::InvalidEnv { var, value, reason } => {
+                write!(f, "invalid {var}={value:?}: {reason}")
+            }
+            FgpError::NotSpd(msg) => write!(f, "matrix not SPD: {msg}"),
+            FgpError::Numeric(msg) => write!(f, "numeric error: {msg}"),
+            FgpError::PjrtUnavailable(msg) => {
+                write!(f, "PJRT backend unavailable: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FgpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FgpError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for FgpError {
+    fn from(e: crate::util::json::JsonError) -> FgpError {
+        FgpError::Parse(e.to_string())
+    }
+}
+
+impl FgpError {
+    /// Wrap an I/O error with the path/operation that failed.
+    pub fn io(what: impl Into<String>, source: std::io::Error) -> FgpError {
+        FgpError::Io { what: what.into(), source }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        let e = FgpError::UnknownDataset { name: "nope".into(), known: "bike|road3d" };
+        let s = e.to_string();
+        assert!(s.contains("nope") && s.contains("bike"), "{s}");
+
+        let e = FgpError::InvalidEnv {
+            var: "FGP_THREADS",
+            value: "0".into(),
+            reason: "must be >= 1".into(),
+        };
+        assert!(e.to_string().contains("FGP_THREADS"));
+    }
+
+    #[test]
+    fn error_trait_object_compatible() {
+        fn takes(_: Box<dyn std::error::Error + Send + Sync + 'static>) {}
+        takes(Box::new(FgpError::Parse("x".into())));
+    }
+
+    #[test]
+    fn io_source_chained() {
+        let e = FgpError::io(
+            "reading manifest.json",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("manifest.json"));
+    }
+}

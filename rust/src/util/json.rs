@@ -36,9 +36,12 @@ impl Json {
         Ok(v)
     }
 
-    pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
-        let s = std::fs::read_to_string(path)?;
-        Ok(Json::parse(&s).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    pub fn parse_file(path: &std::path::Path) -> crate::util::FgpResult<Json> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| crate::util::FgpError::io(format!("reading {}", path.display()), e))?;
+        Json::parse(&s).map_err(|e| {
+            crate::util::FgpError::Parse(format!("{}: {e}", path.display()))
+        })
     }
 
     // --- accessors -------------------------------------------------------
@@ -246,7 +249,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -301,14 +304,15 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -348,7 +352,9 @@ impl<'a> Parser<'a> {
                     // Copy a full UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.pos..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err(self.err("unterminated string"));
+                    };
                     out.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -357,7 +363,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -381,7 +387,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -392,7 +398,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             out.insert(key, val);
             self.skip_ws();
@@ -440,6 +446,19 @@ mod tests {
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"abc").is_err());
+    }
+
+    #[test]
+    fn parse_file_errors_are_typed_not_panics() {
+        let missing = Json::parse_file(std::path::Path::new("/nonexistent/fgp.json"));
+        assert!(matches!(missing, Err(crate::util::FgpError::Io { .. })));
+        let dir = std::env::temp_dir().join("fgp_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, "{ \"a\": nope }").unwrap();
+        let e = Json::parse_file(&p).unwrap_err();
+        assert!(matches!(e, crate::util::FgpError::Parse(_)), "{e}");
+        assert!(e.to_string().contains("bad.json"), "{e}");
     }
 
     #[test]

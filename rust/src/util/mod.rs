@@ -4,10 +4,37 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod parallel;
 pub mod rng;
+
+pub use error::{FgpError, FgpResult};
+
+/// Debug-build tripwire at layer boundaries: every element of `xs` must
+/// be finite. Free in release builds; in debug builds a NaN/Inf produced
+/// by one layer is caught where it crosses into the next (NLL values, CG
+/// residuals, NFFT spread/gather I/O) instead of corrupting downstream
+/// math silently. See DESIGN.md "Invariants and how they are enforced".
+#[inline]
+pub fn debug_assert_all_finite(xs: &[f64], what: &str) {
+    if cfg!(debug_assertions) {
+        let bad = xs.iter().enumerate().find(|(_, v)| !v.is_finite());
+        debug_assert!(
+            bad.is_none(),
+            "non-finite value in {what}: index {} = {}",
+            bad.map(|(i, _)| i).unwrap_or(0),
+            bad.map(|(_, v)| *v).unwrap_or(0.0),
+        );
+    }
+}
+
+/// Scalar companion of [`debug_assert_all_finite`].
+#[inline]
+pub fn debug_assert_finite(x: f64, what: &str) {
+    debug_assert!(x.is_finite(), "non-finite value in {what}: {x}");
+}
 
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {

@@ -5,8 +5,17 @@
 //! parallel-for / parallel-map over index ranges, which scoped threads
 //! provide with no unsafe code and no persistent pool.
 
+use crate::util::{FgpError, FgpResult};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Poison-recovering lock: a panic on another thread (only possible from
+/// user closures in tests/benches) must not cascade into a second panic
+/// here — the pooled scratch / partial-sum slots are plain data and stay
+/// valid regardless of where the holder unwound.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// A lock-guarded free-list of reusable scratch objects. Hot loops that
 /// need large per-worker buffers (e.g. NFFT grid workspaces) check one
@@ -24,17 +33,17 @@ impl<T> ObjectPool<T> {
 
     /// Pop a pooled object, or build a fresh one with `make`.
     pub fn take_or_else(&self, make: impl FnOnce() -> T) -> T {
-        self.slots.lock().unwrap().pop().unwrap_or_else(make)
+        lock_unpoisoned(&self.slots).pop().unwrap_or_else(make)
     }
 
     /// Return an object to the pool for reuse.
     pub fn put(&self, item: T) {
-        self.slots.lock().unwrap().push(item);
+        lock_unpoisoned(&self.slots).push(item);
     }
 
     /// Number of idle objects currently pooled.
     pub fn len(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        lock_unpoisoned(&self.slots).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -62,18 +71,58 @@ impl<T> std::fmt::Debug for ObjectPool<T> {
     }
 }
 
+/// Validated worker-thread count from the `FGP_THREADS` environment
+/// variable: `Ok(Some(n))` when set to a positive integer, `Ok(None)`
+/// when unset, and a typed error for `0`, non-numeric, or non-unicode
+/// values — the CLI rejects these at startup instead of silently falling
+/// back to a thread count the user did not ask for.
+pub fn threads_from_env() -> FgpResult<Option<usize>> {
+    match std::env::var("FGP_THREADS") {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => Err(FgpError::InvalidEnv {
+            var: "FGP_THREADS",
+            value: "<non-unicode>".to_string(),
+            reason: "must be a positive integer".to_string(),
+        }),
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(0) => Err(FgpError::InvalidEnv {
+                var: "FGP_THREADS",
+                value: v,
+                reason: "thread count must be >= 1".to_string(),
+            }),
+            Ok(n) => Ok(Some(n)),
+            Err(_) => Err(FgpError::InvalidEnv {
+                var: "FGP_THREADS",
+                value: v,
+                reason: "must be a positive integer".to_string(),
+            }),
+        },
+    }
+}
+
 /// Number of worker threads to use (respects `FGP_THREADS`).
+///
+/// Infallible by design — it sits on every hot parallel path. The value
+/// is resolved once: a valid `FGP_THREADS` wins, an *invalid* one (which
+/// `main` rejects up front via [`threads_from_env`]) degrades to the
+/// machine parallelism, and the result is cached for the process.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("FGP_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        let fallback = || {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        match threads_from_env() {
+            Ok(Some(n)) => n,
+            Ok(None) => fallback(),
+            Err(e) => {
+                crate::warnlog!("{e}; using machine parallelism");
+                fallback()
             }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    })
 }
 
 /// Run `f(i)` for every `i` in `0..n`, work-stealing over blocks.
@@ -278,7 +327,7 @@ pub fn parallel_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
                     for i in start..end {
                         acc += fr(i);
                     }
-                    **slots_ref[c].lock().unwrap() = acc;
+                    **lock_unpoisoned(&slots_ref[c]) = acc;
                 });
             }
         });
@@ -380,6 +429,118 @@ mod tests {
         let fresh = pool.clone();
         assert!(fresh.is_empty());
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn threads_env_validation() {
+        // One test owns all FGP_THREADS mutations (tests share a process;
+        // concurrent env writes from several tests would race).
+        let prev = std::env::var("FGP_THREADS").ok();
+        std::env::remove_var("FGP_THREADS");
+        assert!(matches!(threads_from_env(), Ok(None)));
+        std::env::set_var("FGP_THREADS", "4");
+        assert!(matches!(threads_from_env(), Ok(Some(4))));
+        std::env::set_var("FGP_THREADS", "0");
+        let e = threads_from_env().unwrap_err();
+        assert!(e.to_string().contains("FGP_THREADS"), "{e}");
+        assert!(e.to_string().contains(">= 1"), "{e}");
+        std::env::set_var("FGP_THREADS", "lots");
+        assert!(matches!(
+            threads_from_env(),
+            Err(FgpError::InvalidEnv { var: "FGP_THREADS", .. })
+        ));
+        match prev {
+            Some(v) => std::env::set_var("FGP_THREADS", v),
+            None => std::env::remove_var("FGP_THREADS"),
+        }
+    }
+
+    #[test]
+    fn pool_usable_after_panicking_thread() {
+        // A thread that used the pool and then panicked must not leave the
+        // pool unusable for later callers (lock_unpoisoned recovers).
+        let pool = std::sync::Arc::new(ObjectPool::<Vec<f64>>::new());
+        pool.put(vec![1.0; 4]);
+        let p2 = std::sync::Arc::clone(&pool);
+        let _ = std::thread::spawn(move || {
+            let v = p2.take_or_else(Vec::new);
+            p2.put(v);
+            panic!("deliberate");
+        })
+        .join();
+        let v = pool.take_or_else(|| vec![0.0; 1]);
+        pool.put(v);
+        assert!(pool.len() >= 1);
+    }
+
+    /// Iteration count for the stress lane; `FGP_STRESS_ITERS` scales it
+    /// up for `make stress` / the TSan lane.
+    fn stress_iters() -> usize {
+        std::env::var("FGP_STRESS_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20)
+    }
+
+    #[test]
+    #[ignore = "stress lane: run via `make stress` or `make tsan`"]
+    fn stress_object_pool_contention() {
+        // Many overlapping scoped regions hammering one pool: the TSan
+        // lane watches the lock handoff, `make stress` the LIFO recycling.
+        let pool = ObjectPool::<Vec<f64>>::new();
+        for it in 0..stress_iters() {
+            std::thread::scope(|s| {
+                for t in 0..8 {
+                    let p = &pool;
+                    s.spawn(move || {
+                        for k in 0..64 {
+                            let mut v = p.take_or_else(|| vec![0.0; 256]);
+                            v[(t * 37 + k) % 256] = (it + t + k) as f64;
+                            p.put(v);
+                        }
+                    });
+                }
+            });
+        }
+        // Each worker holds at most one buffer at a time, so the pool
+        // never grows past the worker count.
+        assert!(pool.len() <= 8, "pool grew to {}", pool.len());
+    }
+
+    #[test]
+    #[ignore = "stress lane: run via `make stress` or `make tsan`"]
+    fn stress_parallel_for_no_lost_updates() {
+        let n = 10_000;
+        for _ in 0..stress_iters() {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[ignore = "stress lane: run via `make stress` or `make tsan`"]
+    fn stress_banded_writers_agree_with_reduction() {
+        // parallel_rows writes disjoint bands; parallel_sum re-reads them.
+        // Integer-valued data keeps both sums exact, so any discrepancy is
+        // a lost write or a torn read, not floating-point reordering.
+        let rows = 64;
+        let width = 129;
+        for _ in 0..stress_iters() {
+            let mut buf = vec![0.0f64; rows * width];
+            parallel_rows(&mut buf, rows, width, |r, row| {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = (r + c) as f64;
+                }
+            });
+            let direct: f64 = buf.iter().sum();
+            let via_sum = parallel_sum(rows * width, |i| buf[i]);
+            assert_eq!(direct, via_sum);
+        }
     }
 
     #[test]

@@ -1,0 +1,12 @@
+//! Lint fixture: unordered collections have run-dependent iteration
+//! order and are banned from numeric library code.
+
+use std::collections::HashMap;
+
+pub fn histogram(keys: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m
+}

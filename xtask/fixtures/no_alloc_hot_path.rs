@@ -1,0 +1,22 @@
+//! Lint fixture: allocation inside marked allocation-free hot paths.
+
+// lint: no_alloc
+pub fn hot_sum_into(xs: &[f64], out: &mut [f64]) {
+    let doubled: Vec<f64> = xs.iter().map(|x| 2.0 * x).collect();
+    let copies = doubled.clone();
+    let pad = vec![0.0; copies.len()];
+    for ((o, d), p) in out.iter_mut().zip(&copies).zip(&pad) {
+        *o = d + p;
+    }
+}
+
+// lint: no_alloc
+pub fn hot_scale_in_place(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x *= 2.0;
+    }
+}
+
+pub fn cold_copy(xs: &[f64]) -> Vec<f64> {
+    xs.to_vec()
+}

@@ -1,0 +1,23 @@
+//! Lint fixture: panic-capable calls in library code must be flagged by
+//! the `panic` rule, while test-module code stays exempt.
+
+pub fn first(v: &[f64]) -> f64 {
+    *v.first().unwrap()
+}
+
+pub fn last(v: &[f64]) -> f64 {
+    *v.last().expect("non-empty input")
+}
+
+pub fn boom() -> ! {
+    panic!("library code must not panic")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = [1.0];
+        assert_eq!(super::first(&v), *v.first().unwrap());
+    }
+}

@@ -1,0 +1,16 @@
+//! Lint fixture: rule tokens inside strings, comments and docs are not
+//! code. Mentions of `.unwrap()`, `panic!` and `HashMap` here are fine.
+
+/// Returns a description quoting `.expect("...")` and `vec![...]`.
+pub fn describe() -> &'static str {
+    // .unwrap() and HashSet in a comment are fine.
+    "panic!(), .unwrap(), .expect(now), HashMap — text only"
+}
+
+pub fn raw() -> &'static str {
+    r#"todo!() and unimplemented!() in a raw string"#
+}
+
+pub fn escaped() -> char {
+    '\n'
+}

@@ -1,0 +1,12 @@
+//! Lint fixture: `unsafe impl Send/Sync` hygiene — a justifying
+//! `// SAFETY:` comment must sit directly above the impl.
+
+pub struct Owned(*mut f64);
+
+// SAFETY: the raw pointer is uniquely owned and never aliased; moving
+// the wrapper between threads moves ownership with it.
+unsafe impl Send for Owned {}
+
+pub struct Shared(*mut f64);
+
+unsafe impl Sync for Shared {}

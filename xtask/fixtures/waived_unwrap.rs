@@ -1,0 +1,7 @@
+//! Lint fixture: an inline waiver suppresses the violation but is
+//! counted and reported.
+
+pub fn head(v: &[f64]) -> f64 {
+    // lint: allow(panic) — fixture demonstrating a counted waiver.
+    *v.first().unwrap()
+}

@@ -1,0 +1,542 @@
+//! Repo invariant lints, run as `cargo run -p xtask -- lint [src-dir]`.
+//!
+//! Rules (see DESIGN.md, "Invariants and how they are enforced"):
+//!
+//! - `panic`: library modules must not call `.unwrap()`, `.expect(...)`,
+//!   `panic!`, `todo!` or `unimplemented!` — fallible paths return the
+//!   typed `FgpError`. Code under `#[cfg(test)]` is exempt.
+//! - `no_alloc`: a function marked with a `// lint: no_alloc` comment is
+//!   a steady-state hot path and may not allocate (`Vec::new`, `vec!`,
+//!   `.to_vec()`, `.collect()`, `.clone()`, `format!`, ...).
+//! - `determinism`: no `HashMap` / `HashSet` in numeric library code —
+//!   iteration order must be run-to-run stable (`BTreeMap`, sorted
+//!   `Vec`s).
+//! - `unsafe_send_sync`: every `unsafe impl Send`/`Sync` needs a
+//!   `// SAFETY:` comment directly above it.
+//!
+//! A violation is waived by `// lint: allow(<rule>) — <reason>` on the
+//! offending line or within the four lines above it; waivers are counted
+//! and reported so they stay visible.
+//!
+//! The scanner is a small hand-rolled lexer: string/char literals and
+//! comments are stripped into separate channels before token matching,
+//! so text inside strings, docs, or comments never trips a rule.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// How many lines above a violation a waiver comment may sit.
+const WAIVER_SCAN_BACK: usize = 4;
+
+/// `(token, needs_ident_boundary_before)` pairs for the `panic` rule.
+const PANIC_TOKENS: &[(&str, bool)] = &[
+    (".unwrap()", false),
+    (".expect(", false),
+    ("panic!", true),
+    ("todo!", true),
+    ("unimplemented!", true),
+];
+
+/// Allocation tokens forbidden inside `// lint: no_alloc` functions.
+const ALLOC_TOKENS: &[(&str, bool)] = &[
+    ("Vec::new", true),
+    ("vec!", true),
+    (".to_vec(", false),
+    (".collect(", false),
+    (".clone(", false),
+    ("Box::new", true),
+    ("String::new", true),
+    ("format!", true),
+    (".to_string(", false),
+    ("with_capacity(", false),
+];
+
+/// Unordered-collection tokens forbidden by the `determinism` rule.
+const DETERMINISM_TOKENS: &[(&str, bool)] = &[("HashMap", true), ("HashSet", true)];
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+#[derive(Default)]
+struct Report {
+    violations: Vec<Violation>,
+    waivers: Vec<(String, usize, &'static str)>,
+}
+
+impl Report {
+    /// Record a rule hit at 0-based line `i`, honoring nearby waivers.
+    fn emit(
+        &mut self,
+        comments: &[String],
+        file: &str,
+        i: usize,
+        rule: &'static str,
+        msg: String,
+    ) {
+        let lo = i.saturating_sub(WAIVER_SCAN_BACK);
+        let waiver = format!("lint: allow({rule})");
+        if comments[lo..=i].iter().any(|c| c.contains(&waiver)) {
+            self.waivers.push((file.to_string(), i + 1, rule));
+        } else {
+            self.violations.push(Violation { file: file.to_string(), line: i + 1, rule, msg });
+        }
+    }
+}
+
+/// Split source into per-line code and comment channels. The code channel
+/// keeps the layout (braces, tokens) but blanks string/char literal
+/// contents and comment bodies; the comment channel holds the comment
+/// text so marker comments (`lint: ...`, `SAFETY:`) stay visible.
+fn split_channels(src: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    macro_rules! newline {
+        () => {
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+        };
+    }
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            newline!();
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            i += 2;
+            while i < n && chars[i] != '\n' {
+                comment.push(chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // Block comment; Rust block comments nest.
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    newline!();
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            code.push('"');
+            i += 1;
+            while i < n && chars[i] != '"' {
+                if chars[i] == '\n' {
+                    newline!();
+                } else if chars[i] == '\\' && i + 1 < n {
+                    i += 1; // skip the escaped char (handles \" and \\)
+                }
+                i += 1;
+            }
+            if i < n {
+                code.push('"');
+                i += 1;
+            }
+        } else if c == 'r' && is_raw_string_start(&chars, i) {
+            let mut hashes = 0;
+            let mut j = i + 1;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            code.push_str("r\"");
+            i = j + 1; // past the opening quote
+            while i < n {
+                if chars[i] == '"' && closes_raw_string(&chars, i, hashes) {
+                    code.push('"');
+                    i += 1 + hashes;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    newline!();
+                }
+                i += 1;
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime: a literal closes with `'` within a
+            // few chars; a lifetime never does.
+            if i + 1 < n && chars[i + 1] == '\\' {
+                code.push_str("' '");
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+            } else if i + 2 < n && chars[i + 2] == '\'' {
+                code.push_str("' '");
+                i += 3;
+            } else {
+                code.push('\'');
+                i += 1;
+            }
+        } else {
+            code.push(c);
+            i += 1;
+        }
+    }
+    newline!();
+    (code_lines, comment_lines)
+}
+
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    // Only when `r` starts an identifier-free token: r" or r#…#".
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return false;
+    }
+    let mut j = i + 1;
+    while j < chars.len() && chars[j] == '#' {
+        j += 1;
+    }
+    (j > i + 1 && j < chars.len() && chars[j] == '"') || chars.get(i + 1) == Some(&'"')
+}
+
+fn closes_raw_string(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lines covered by a `#[cfg(test)]` item (module or function): from the
+/// attribute to the end of the item's brace block (or its trailing `;`).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut mask = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if !code[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'item: while j < n {
+            mask[j] = true;
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'item;
+                        }
+                    }
+                    ';' if !opened => break 'item,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Find `tok` in `line`, optionally requiring that the character before
+/// the match is not part of an identifier.
+fn has_token(line: &str, tok: &str, boundary_before: bool) -> bool {
+    let mut start = 0;
+    while let Some(off) = line[start..].find(tok) {
+        let pos = start + off;
+        if !boundary_before {
+            return true;
+        }
+        let prev_is_ident = line[..pos].chars().next_back().is_some_and(is_ident_char);
+        if !prev_is_ident {
+            return true;
+        }
+        start = pos + tok.len();
+    }
+    false
+}
+
+/// Lines of the function body following a marker at line `m` (0-based):
+/// the signature line through the matching close of the body brace.
+fn marked_fn_range(code: &[String], m: usize) -> Option<(usize, usize)> {
+    let n = code.len();
+    let start = (m + 1..n.min(m + 10)).find(|&j| code[j].contains("fn "))?;
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for j in start..n {
+        for ch in code[j].chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some((start, j));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+fn lint_source(file: &str, src: &str, report: &mut Report) {
+    let (code, comments) = split_channels(src);
+    let mask = test_mask(&code);
+
+    for (i, line) in code.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        for &(tok, boundary) in PANIC_TOKENS {
+            if has_token(line, tok, boundary) {
+                let msg = format!("`{tok}` in library code; return FgpResult instead");
+                report.emit(&comments, file, i, "panic", msg);
+            }
+        }
+        for &(tok, boundary) in DETERMINISM_TOKENS {
+            if has_token(line, tok, boundary) {
+                let msg =
+                    format!("`{tok}` has unstable iteration order; use BTreeMap/sorted Vec");
+                report.emit(&comments, file, i, "determinism", msg);
+            }
+        }
+        if line.contains("unsafe impl")
+            && (has_token(line, "Send", true) || has_token(line, "Sync", true))
+        {
+            let lo = i.saturating_sub(5);
+            let justified = comments[lo..=i].iter().any(|c| c.contains("SAFETY:"));
+            if !justified {
+                let msg = "`unsafe impl Send/Sync` without a `// SAFETY:` comment".to_string();
+                report.emit(&comments, file, i, "unsafe_send_sync", msg);
+            }
+        }
+    }
+
+    for (m, comment) in comments.iter().enumerate() {
+        if !comment.contains("lint: no_alloc") {
+            continue;
+        }
+        let Some((start, end)) = marked_fn_range(&code, m) else {
+            let msg = "`lint: no_alloc` marker with no function following it".to_string();
+            report.emit(&comments, file, m, "no_alloc", msg);
+            continue;
+        };
+        for j in start..=end {
+            if mask[j] {
+                continue;
+            }
+            for &(tok, boundary) in ALLOC_TOKENS {
+                if has_token(&code[j], tok, boundary) {
+                    let msg = format!("`{tok}` inside a `lint: no_alloc` hot path");
+                    report.emit(&comments, file, j, "no_alloc", msg);
+                }
+            }
+        }
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn run_lint(root: &Path) -> ExitCode {
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(root, &mut files) {
+        eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+    if files.is_empty() {
+        eprintln!("xtask lint: no .rs files under {}", root.display());
+        return ExitCode::from(2);
+    }
+    let mut report = Report::default();
+    for f in &files {
+        let src = match std::fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", f.display());
+                return ExitCode::from(2);
+            }
+        };
+        let shown = f.strip_prefix(root).unwrap_or(f).display().to_string();
+        lint_source(&shown, &src, &mut report);
+    }
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    for (f, l, rule) in &report.waivers {
+        println!("{f}:{l}: waived [{rule}]");
+    }
+    println!(
+        "xtask lint: {} file(s), {} violation(s), {} waiver(s) in effect",
+        files.len(),
+        report.violations.len(),
+        report.waivers.len()
+    );
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src")
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = args.get(1).map(PathBuf::from).unwrap_or_else(default_src_root);
+            run_lint(&root)
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-dir]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_fixture(name: &str) -> Report {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        let src = std::fs::read_to_string(&p).unwrap();
+        let mut r = Report::default();
+        lint_source(name, &src, &mut r);
+        r
+    }
+
+    fn rules(r: &Report) -> Vec<&'static str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn catches_unwrap_expect_panic_in_library_code() {
+        let r = lint_fixture("panic_unwrap.rs");
+        assert_eq!(rules(&r), ["panic", "panic", "panic"], "{:?}", describe(&r));
+        let msgs: Vec<&str> = r.violations.iter().map(|v| v.msg.as_str()).collect();
+        assert!(msgs[0].contains(".unwrap()"));
+        assert!(msgs[1].contains(".expect("));
+        assert!(msgs[2].contains("panic!"));
+    }
+
+    #[test]
+    fn test_module_code_is_exempt_from_panic_rule() {
+        // The fixture's #[cfg(test)] mod also unwraps; only the three
+        // library sites may be reported.
+        let r = lint_fixture("panic_unwrap.rs");
+        assert_eq!(r.violations.len(), 3, "{:?}", describe(&r));
+        assert!(r.violations.iter().all(|v| v.line < 20));
+    }
+
+    #[test]
+    fn catches_allocation_in_marked_hot_path() {
+        let r = lint_fixture("no_alloc_hot_path.rs");
+        assert!(
+            rules(&r).iter().all(|&x| x == "no_alloc"),
+            "{:?}",
+            describe(&r)
+        );
+        assert_eq!(r.violations.len(), 3, "{:?}", describe(&r));
+        // The unmarked cold path (line > 20, uses .to_vec()) is allowed.
+        assert!(r.violations.iter().all(|v| v.line < 20));
+    }
+
+    #[test]
+    fn catches_unordered_collections() {
+        let r = lint_fixture("determinism_hashmap.rs");
+        assert!(!r.violations.is_empty());
+        assert!(
+            rules(&r).iter().all(|&x| x == "determinism"),
+            "{:?}",
+            describe(&r)
+        );
+    }
+
+    #[test]
+    fn catches_unsafe_impl_without_safety_comment() {
+        // Fixture has one justified impl pair and one bare impl; only the
+        // bare one may be flagged.
+        let r = lint_fixture("unsafe_send_sync.rs");
+        assert_eq!(rules(&r), ["unsafe_send_sync"], "{:?}", describe(&r));
+        assert!(r.violations[0].msg.contains("SAFETY"));
+    }
+
+    #[test]
+    fn waiver_suppresses_violation_and_is_counted() {
+        let r = lint_fixture("waived_unwrap.rs");
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+        assert_eq!(r.waivers.len(), 1);
+        assert_eq!(r.waivers[0].2, "panic");
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_rules() {
+        let r = lint_fixture("tokens_in_text.rs");
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_not_flagged() {
+        let mut r = Report::default();
+        let src = "pub fn f(x: Option<f64>) -> f64 {\n    x.unwrap_or(0.0)\n}\n";
+        lint_source("inline.rs", src, &mut r);
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+    }
+
+    #[test]
+    fn repo_library_sources_pass_the_lint() {
+        let root = default_src_root();
+        let mut files = Vec::new();
+        collect_rs_files(&root, &mut files).unwrap();
+        assert!(!files.is_empty());
+        files.sort();
+        let mut r = Report::default();
+        for f in &files {
+            let src = std::fs::read_to_string(f).unwrap();
+            lint_source(&f.display().to_string(), &src, &mut r);
+        }
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+    }
+
+    fn describe(r: &Report) -> Vec<String> {
+        r.violations
+            .iter()
+            .map(|v| format!("{}:{} [{}] {}", v.file, v.line, v.rule, v.msg))
+            .collect()
+    }
+}
