@@ -1,13 +1,14 @@
 # fourier-gp developer targets. `make test` is the tier-1 gate
 # (see ROADMAP.md); `make ci` is the full local gate (format, lints,
-# invariant lint, tests); `make bench-mvm` / `make bench-nfft` track the
-# perf trajectory in BENCH_mvm.json / BENCH_nfft.json from PR 1 / PR 6
-# onward. `make miri` / `make tsan` are nightly-gated sanitizer lanes and
-# skip gracefully when the toolchain is missing.
+# invariant lint, tests); `make bench-mvm` / `make bench-nfft` /
+# `make bench-parallel` track the perf trajectory in BENCH_mvm.json /
+# BENCH_nfft.json / BENCH_parallel.json from PR 1 / PR 6 / PR 8 onward.
+# `make miri` / `make tsan` are nightly-gated sanitizer lanes and skip
+# gracefully when the toolchain is missing.
 
 CARGO ?= cargo
 
-.PHONY: all ci fmt clippy lint test miri tsan stress bench-mvm bench-nfft python-test
+.PHONY: all ci fmt clippy lint test miri tsan stress bench-mvm bench-nfft bench-parallel python-test
 
 all: test
 
@@ -73,6 +74,12 @@ bench-mvm:
 # FGP_FULL=1 extends the n sweep.
 bench-nfft:
 	$(CARGO) bench --bench bench_nfft
+
+# Execution-runtime dispatch sweep: persistent worker-pool dispatch vs the
+# retained scoped-spawn reference (`util::parallel::scoped`), plus NFFT
+# apply throughput pool-vs-scoped; writes BENCH_parallel.json.
+bench-parallel:
+	$(CARGO) bench --bench bench_parallel
 
 python-test:
 	cd python && python -m pytest -q tests

@@ -1,0 +1,171 @@
+//! Execution-runtime bench: persistent worker-pool dispatch vs the
+//! retained scoped-spawn reference (`util::parallel::scoped`).
+//!
+//! Two sections:
+//!  1. Raw dispatch overhead — per-call cost of `Runtime::rows` over a
+//!     tiny row buffer (the work is ~free, so the measurement isolates
+//!     wake/park vs spawn/join) and over a medium compute-bound map.
+//!  2. NFFT apply throughput — `apply_batch_into` (pool) vs
+//!     `apply_batch_scoped_ref` (same packed pipeline, per-call spawned
+//!     threads) for n ∈ {4096, 16384} × batch ∈ {1, 8}.
+//!
+//! Writes `BENCH_parallel.json`; the acceptance gate is pool dispatch
+//! overhead below the scoped reference (`speedup_pool_vs_scoped > 1`).
+
+use fourier_gp::coordinator::mvm::{NfftRustMvm, SubKernelMvm};
+use fourier_gp::kernels::additive::WindowedPoints;
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::NfftParams;
+use fourier_gp::util::bench::black_box;
+use fourier_gp::util::json::Json;
+use fourier_gp::util::parallel;
+use fourier_gp::util::rng::Rng;
+
+/// Median wall clock of `samples` runs of `f` (seconds).
+fn median_of(samples: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Section 1: per-dispatch cost of pool vs scoped on `rows` bands, at a
+/// given amount of per-row work (`reps` multiply-adds per row).
+fn dispatch_point(rows: usize, reps: usize, samples: usize) -> Json {
+    let nt = parallel::num_threads();
+    let rt = parallel::runtime();
+    let mut buf = vec![0.0f64; rows];
+    let body = |i: usize, out: &mut [f64]| {
+        let mut acc = i as f64;
+        for k in 0..reps {
+            acc = acc.mul_add(1.000000119, k as f64 * 1e-9);
+        }
+        out[0] = acc;
+    };
+
+    // Warm both paths (spawns the pool workers; pages the buffer in).
+    rt.rows(&mut buf, rows, 1, body);
+    parallel::scoped::rows(nt, &mut buf, rows, 1, body);
+
+    // Batch many dispatches per timing sample so sub-microsecond pool
+    // wakeups are resolvable against the clock.
+    let inner = 32usize;
+    let t_pool = median_of(samples, || {
+        for _ in 0..inner {
+            rt.rows(&mut buf, rows, 1, body);
+        }
+        black_box(&buf);
+    }) / inner as f64;
+    let t_scoped = median_of(samples, || {
+        for _ in 0..inner {
+            parallel::scoped::rows(nt, &mut buf, rows, 1, body);
+        }
+        black_box(&buf);
+    }) / inner as f64;
+
+    let speedup = t_scoped / t_pool;
+    println!(
+        "  rows={rows:7} reps={reps:5}  pool={:9.3}µs scoped={:9.3}µs ({speedup:5.2}x)",
+        t_pool * 1e6,
+        t_scoped * 1e6
+    );
+    Json::obj(vec![
+        ("rows", Json::Num(rows as f64)),
+        ("reps_per_row", Json::Num(reps as f64)),
+        ("seconds_per_dispatch_pool", Json::Num(t_pool)),
+        ("seconds_per_dispatch_scoped", Json::Num(t_scoped)),
+        ("speedup_pool_vs_scoped", Json::Num(speedup)),
+    ])
+}
+
+/// Section 2: full NFFT batched apply through the pool vs the retained
+/// scoped-spawn pipeline (identical math, identical chunk geometry).
+fn nfft_point(n: usize, nb: usize, samples: usize) -> Json {
+    let mut rng = Rng::new(((n as u64) << 8) | nb as u64);
+    let mut x = Matrix::zeros(n, 2);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 10.0);
+    }
+    let wp = WindowedPoints::extract(&x, &[0, 1]);
+    let engine = NfftRustMvm::new(KernelFn::Gaussian, &wp, 1.0, NfftParams::default_for_dim(2));
+    let mut v = Matrix::zeros(nb, n);
+    for e in &mut v.data {
+        *e = rng.normal();
+    }
+    let mut out = Matrix::zeros(nb, n);
+
+    // Warm up (fills workspace caches/pool; touches all pages).
+    engine.apply_batch_into(&v, false, &mut out);
+    engine.apply_batch_scoped_ref(&v, false, &mut out);
+
+    let t_pool = median_of(samples, || {
+        engine.apply_batch_into(&v, false, &mut out);
+        black_box(&out);
+    });
+    let t_scoped = median_of(samples, || {
+        engine.apply_batch_scoped_ref(&v, false, &mut out);
+        black_box(&out);
+    });
+
+    let speedup = t_scoped / t_pool;
+    println!(
+        "  n={n:7} batch={nb:3}  pool={t_pool:9.5}s scoped={t_scoped:9.5}s ({speedup:5.2}x)"
+    );
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("batch", Json::Num(nb as f64)),
+        ("d", Json::Num(2.0)),
+        ("seconds_per_apply_pool", Json::Num(t_pool)),
+        ("seconds_per_apply_scoped", Json::Num(t_scoped)),
+        ("speedup_pool_vs_scoped", Json::Num(speedup)),
+    ])
+}
+
+fn main() {
+    let full = fourier_gp::coordinator::experiments::full_scale();
+    let rt = parallel::runtime();
+    println!(
+        "=== Runtime dispatch: persistent pool ({} lanes, {} workers) vs scoped spawn ===",
+        rt.threads(),
+        rt.threads_spawned()
+    );
+    let mut dispatch = Vec::new();
+    for &(rows, reps) in &[(64usize, 0usize), (1024, 0), (1024, 256), (16384, 64)] {
+        dispatch.push(dispatch_point(rows, reps, 15));
+    }
+
+    println!("=== NFFT batched apply: pool dispatch vs scoped-spawn reference ===");
+    let sizes: Vec<usize> = if full {
+        vec![4096, 16384, 65536]
+    } else {
+        vec![4096, 16384]
+    };
+    let batches = [1usize, 8];
+    let mut nfft = Vec::new();
+    for &n in &sizes {
+        let samples = if n <= 16384 { 9 } else { 5 };
+        for &nb in &batches {
+            nfft.push(nfft_point(n, nb, samples));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("parallel".into())),
+        (
+            "baseline",
+            Json::Str("parallel::scoped (per-call spawned threads, same band geometry)".into()),
+        ),
+        ("threads", Json::Num(rt.threads() as f64)),
+        ("dispatch_records", Json::Arr(dispatch)),
+        ("nfft_records", Json::Arr(nfft)),
+    ]);
+    std::fs::write("BENCH_parallel.json", doc.to_string_pretty())
+        .expect("write BENCH_parallel.json");
+    println!("wrote BENCH_parallel.json");
+}

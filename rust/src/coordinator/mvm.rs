@@ -82,6 +82,14 @@ pub trait SubKernelMvm: Send + Sync {
         let res = self.apply_batch(v, deriv);
         out.data.copy_from_slice(&res.data);
     }
+
+    /// Take (and clear) a deferred engine fault. The apply signatures are
+    /// infallible, so engines that can fail at apply time (the PJRT
+    /// variants) latch the first error, return zeros, and surface it here;
+    /// pure-rust engines never fault. See `KernelOperator::check_fault`.
+    fn take_fault(&self) -> Option<FgpError> {
+        None
+    }
 }
 
 /// Exact tiled dense MVM (never materializes K_s).
@@ -154,6 +162,17 @@ impl NfftRustMvm {
             }
         }
         out
+    }
+
+    /// Retained scoped-spawn batch apply (bench baseline for the
+    /// persistent-pool dispatch; see [`Fastsum::apply_batch_scoped_ref`]).
+    pub fn apply_batch_scoped_ref(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        self.fastsum.apply_batch_scoped_ref(v, deriv, out);
+        if deriv {
+            for o in &mut out.data {
+                *o *= self.scale;
+            }
+        }
     }
 }
 

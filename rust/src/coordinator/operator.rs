@@ -5,7 +5,7 @@
 use super::mvm::SubKernelMvm;
 use crate::linalg::Matrix;
 use crate::solvers::LinOp;
-use crate::util::parallel;
+use crate::util::FgpResult;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 pub struct KernelOperator {
@@ -88,14 +88,14 @@ impl KernelOperator {
     }
 
     /// Window sum over an RHS block: each window is traversed ONCE for the
-    /// whole block, and the (independent) windows run in parallel. The
-    /// per-window results are reduced in window order, so per column the
-    /// arithmetic matches the serial single-vector path.
-    ///
-    /// The engines parallelize internally as well, so with P windows this
-    /// briefly oversubscribes by ~P× (scoped threads, no persistent pool);
-    /// P ≤ d/d_max is small in practice and the overlap beats serializing
-    /// the windows. Cap the total with `FGP_THREADS` if needed.
+    /// whole block. Windows run sequentially and each engine parallelizes
+    /// internally across the full persistent runtime
+    /// ([`crate::util::parallel::Runtime`]) — with a fixed-size pool this
+    /// keeps every lane busy per window,
+    /// whereas dispatching windows in parallel would force the nested
+    /// engine parallelism inline onto P lanes. The per-window results are
+    /// reduced in window order, so per column the arithmetic matches the
+    /// serial single-vector path (and the scoped-spawn era bitwise).
     fn window_sum_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
         let mut acc = Matrix::zeros(v.rows, v.cols);
         self.window_sum_batch_into(v, deriv, &mut acc);
@@ -113,11 +113,9 @@ impl KernelOperator {
         if self.subs.len() == 1 {
             self.subs[0].apply_batch_into(v, deriv, out);
         } else {
-            let outs: Vec<Option<Matrix>> = parallel::parallel_map(self.subs.len(), |s| {
-                Some(self.subs[s].apply_batch(v, deriv))
-            });
             out.data.fill(0.0);
-            for o in outs.into_iter().flatten() {
+            for s in &self.subs {
+                let o = s.apply_batch(v, deriv);
                 out.add_assign(&o);
             }
         }
@@ -154,13 +152,13 @@ impl KernelOperator {
         let (mut acc_k, mut acc_d) = if self.subs.len() == 1 {
             self.subs[0].apply_batch_pair(v)
         } else {
-            let outs: Vec<Option<(Matrix, Matrix)>> = parallel::parallel_map(
-                self.subs.len(),
-                |s| Some(self.subs[s].apply_batch_pair(v)),
-            );
+            // Same sequential-window / internally-parallel schedule as
+            // `window_sum_batch`; window-order reduction keeps the per-column
+            // arithmetic identical to the serial path.
             let mut acc_k = Matrix::zeros(v.rows, v.cols);
             let mut acc_d = Matrix::zeros(v.rows, v.cols);
-            for (k, d) in outs.into_iter().flatten() {
+            for s in &self.subs {
+                let (k, d) = s.apply_batch_pair(v);
                 acc_k.add_assign(&k);
                 acc_d.add_assign(&d);
             }
@@ -191,6 +189,20 @@ impl KernelOperator {
     pub fn deriv_sigma_eps_mvm(&self, v: &[f64]) -> Vec<f64> {
         let se = self.sigma_eps2.sqrt();
         v.iter().map(|x| 2.0 * se * x).collect()
+    }
+
+    /// Surface the first deferred engine fault, if any. The `LinOp` apply
+    /// signature is infallible, so accelerator-backed sub-kernels that hit a
+    /// runtime error latch it and return zeros; solver drivers call this
+    /// after a solve to turn the latched fault into a recoverable
+    /// [`crate::util::FgpError`] instead of a mid-iteration panic.
+    pub fn check_fault(&self) -> FgpResult<()> {
+        for s in &self.subs {
+            if let Some(e) = s.take_fault() {
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 
     pub fn mvms_performed(&self) -> usize {
@@ -390,6 +402,52 @@ mod tests {
                 assert!((fd[(r, i)] - d1[i]).abs() < 1e-12, "fused-d r={r} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn check_fault_surfaces_and_clears_latched_engine_errors() {
+        use crate::util::parallel::lock_unpoisoned;
+        use crate::util::FgpError;
+        use std::sync::Mutex;
+
+        /// Engine stand-in that faults on every apply, like a PJRT engine
+        /// whose device went away: latches the error, returns zeros.
+        struct FaultyMvm {
+            n: usize,
+            fault: Mutex<Option<FgpError>>,
+        }
+        impl SubKernelMvm for FaultyMvm {
+            fn n(&self) -> usize {
+                self.n
+            }
+            fn apply(&self, v: &[f64], _deriv: bool) -> Vec<f64> {
+                let mut f = lock_unpoisoned(&self.fault);
+                if f.is_none() {
+                    *f = Some(FgpError::PjrtUnavailable("device lost".into()));
+                }
+                vec![0.0; v.len()]
+            }
+            fn set_ell(&mut self, _ell: f64) {}
+            fn take_fault(&self) -> Option<FgpError> {
+                lock_unpoisoned(&self.fault).take()
+            }
+        }
+
+        let n = 8;
+        let subs: Vec<Box<dyn SubKernelMvm>> =
+            vec![Box::new(FaultyMvm { n, fault: Mutex::new(None) })];
+        let op = KernelOperator::new(subs, 1.0, 0.1);
+        assert!(op.check_fault().is_ok(), "no fault before any apply");
+        let y = op.kernel_mvm(&vec![1.0; n]);
+        // The apply itself stays infallible: the faulted engine degrades
+        // to a zero product rather than panicking mid-solve.
+        for (i, yi) in y.iter().enumerate() {
+            assert_eq!(*yi, 0.0, "i={i}");
+        }
+        // …but the latched fault surfaces exactly once, then clears.
+        let err = op.check_fault().expect_err("fault must surface");
+        assert!(err.to_string().contains("device lost"), "{err}");
+        assert!(op.check_fault().is_ok(), "take semantics: fault cleared");
     }
 
     #[test]

@@ -11,8 +11,29 @@
 
 use super::dataset::Dataset;
 use crate::linalg::Matrix;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 use crate::util::{FgpError, FgpResult};
+
+/// Banded label evaluation for the table-3-sized generators: the noise for
+/// every point is drawn serially first (exactly the stream positions the
+/// old interleaved `map` loops consumed, so datasets are bit-identical
+/// across the rewrite — see the seed-stability tests), then the
+/// deterministic per-row label math runs on the persistent runtime.
+fn labels_banded(
+    x: &Matrix,
+    noise: &[f64],
+    noise_std: f64,
+    f: impl Fn(&[f64]) -> f64 + Sync,
+) -> Vec<f64> {
+    let n = x.rows;
+    assert_eq!(noise.len(), n);
+    let mut y = vec![0.0; n];
+    parallel::runtime().rows(&mut y, n, 1, |i, out| {
+        out[0] = f(x.row(i)) + noise_std * noise[i];
+    });
+    y
+}
 
 /// Paper Table 3 shapes.
 pub const BIKE: (usize, usize) = (13034, 13);
@@ -55,19 +76,16 @@ pub fn bike(seed: u64) -> Dataset {
     let (n, p) = BIKE;
     let mut rng = Rng::new(seed ^ 0xb1ce);
     let x = feature_matrix(n, p, 0.3, &mut rng);
-    let y: Vec<f64> = (0..n)
-        .map(|i| {
-            let r = x.row(i);
-            // active: 1,2,3,4,5,6,8,9,11 (0-based), mimicking hour/temp/
-            // season/humidity-type drivers.
-            (2.0 * r[1]).sin() + 0.8 * r[2] + (r[3] * r[4]).tanh()
-                + 0.6 * (r[5] - 0.5).powi(2)
-                + 0.7 * r[6].max(0.0)
-                + 0.4 * (r[8] + r[9]).sin()
-                + 0.3 * r[11]
-                + 0.25 * rng.normal()
-        })
-        .collect();
+    let noise = rng.normal_vec(n);
+    let y = labels_banded(&x, &noise, 0.25, |r| {
+        // active: 1,2,3,4,5,6,8,9,11 (0-based), mimicking hour/temp/
+        // season/humidity-type drivers.
+        (2.0 * r[1]).sin() + 0.8 * r[2] + (r[3] * r[4]).tanh()
+            + 0.6 * (r[5] - 0.5).powi(2)
+            + 0.7 * r[6].max(0.0)
+            + 0.4 * (r[8] + r[9]).sin()
+            + 0.3 * r[11]
+    });
     Dataset::new("bike", x, y)
 }
 
@@ -77,15 +95,12 @@ pub fn elevators(seed: u64) -> Dataset {
     let (n, p) = ELEVATORS;
     let mut rng = Rng::new(seed ^ 0xe1ef);
     let x = feature_matrix(n, p, 0.4, &mut rng);
-    let y: Vec<f64> = (0..n)
-        .map(|i| {
-            let r = x.row(i);
-            1.0 * r[9] + 0.8 * r[10] + 0.6 * r[11] + 0.5 * (r[12] * r[17]).tanh()
-                + 0.4 * (r[5]).sin()
-                + 0.3 * r[3] * r[1]
-                + 0.2 * rng.normal()
-        })
-        .collect();
+    let noise = rng.normal_vec(n);
+    let y = labels_banded(&x, &noise, 0.2, |r| {
+        1.0 * r[9] + 0.8 * r[10] + 0.6 * r[11] + 0.5 * (r[12] * r[17]).tanh()
+            + 0.4 * (r[5]).sin()
+            + 0.3 * r[3] * r[1]
+    });
     Dataset::new("elevators", x, y)
 }
 
@@ -95,16 +110,13 @@ pub fn poletele(seed: u64) -> Dataset {
     let (n, p) = POLETELE;
     let mut rng = Rng::new(seed ^ 0x901e);
     let x = feature_matrix(n, p, 0.35, &mut rng);
-    let y: Vec<f64> = (0..n)
-        .map(|i| {
-            let r = x.row(i);
-            1.2 * (r[0]).tanh() + 1.0 * r[1] + 0.8 * (r[3] * 1.5).sin()
-                + 0.5 * r[6] * r[6].signum()
-                + 0.4 * (r[18] + r[16]).tanh()
-                + 0.3 * r[2]
-                + 0.15 * rng.normal()
-        })
-        .collect();
+    let noise = rng.normal_vec(n);
+    let y = labels_banded(&x, &noise, 0.15, |r| {
+        1.2 * (r[0]).tanh() + 1.0 * r[1] + 0.8 * (r[3] * 1.5).sin()
+            + 0.5 * r[6] * r[6].signum()
+            + 0.4 * (r[18] + r[16]).tanh()
+            + 0.3 * r[2]
+    });
     Dataset::new("poletele", x, y)
 }
 
@@ -142,16 +154,15 @@ pub fn road3d(seed: u64) -> Dataset {
             )
         })
         .collect();
-    let y: Vec<f64> = (0..n)
-        .map(|i| {
-            let (a, b) = (x[(i, 0)], x[(i, 1)]);
-            let mut alt = 0.0;
-            for &(fa, fb, ph, amp) in &freqs {
-                alt += amp * (fa * a + fb * b + ph).sin();
-            }
-            alt + 0.05 * rng.normal()
-        })
-        .collect();
+    let noise = rng.normal_vec(n);
+    let y = labels_banded(&x, &noise, 0.05, |r| {
+        let (a, b) = (r[0], r[1]);
+        let mut alt = 0.0;
+        for &(fa, fb, ph, amp) in &freqs {
+            alt += amp * (fa * a + fb * b + ph).sin();
+        }
+        alt
+    });
     Dataset::new("road3d", x, y)
 }
 
@@ -178,6 +189,29 @@ mod tests {
         assert_eq!(a.y, b.y);
         let c = poletele(6);
         assert_ne!(a.y, c.y);
+    }
+
+    /// Seed stability across the banded rewrite: the runtime-parallel label
+    /// path must reproduce the original serial loop — noise drawn
+    /// *interleaved* with the label math — bit for bit.
+    #[test]
+    fn banded_labels_match_serial_reference() {
+        let d = poletele(7);
+        let (n, p) = POLETELE;
+        let mut rng = Rng::new(7u64 ^ 0x901e);
+        let x = feature_matrix(n, p, 0.35, &mut rng);
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                1.2 * (r[0]).tanh() + 1.0 * r[1] + 0.8 * (r[3] * 1.5).sin()
+                    + 0.5 * r[6] * r[6].signum()
+                    + 0.4 * (r[18] + r[16]).tanh()
+                    + 0.3 * r[2]
+                    + 0.15 * rng.normal()
+            })
+            .collect();
+        assert_eq!(d.x.data, x.data);
+        assert_eq!(d.y, y, "banded generation changed the dataset");
     }
 
     #[test]

@@ -190,6 +190,9 @@ impl GpModel {
         let m: &dyn Precond = pref.unwrap_or(&identity);
         let cg_opts = CgOptions { tol: 1e-10, max_iter: cfg.predict_cg_iters, relative: true };
         let alpha = pcg(&op, m, y, &cg_opts).x;
+        // Accelerator engines run under an infallible apply signature and
+        // latch execute errors instead of panicking — surface them now.
+        op.check_fault()?;
 
         Ok(TrainedGp {
             config: cfg.clone(),
@@ -252,7 +255,7 @@ impl TrainedGp {
         while t0 < npts {
             let nb = (npts - t0).min(Self::VARIANCE_CHUNK);
             let mut kstar = Matrix::zeros(nb, n);
-            crate::util::parallel::parallel_rows(&mut kstar.data, nb, n, |r, row| {
+            crate::util::parallel::runtime().rows(&mut kstar.data, nb, n, |r, row| {
                 let t = t0 + r;
                 for (w, wp) in cfg.windows.0.iter().zip(&wps) {
                     let xt: Vec<f64> = w.iter().map(|&c| xtest[(t, c)]).collect();
@@ -273,6 +276,7 @@ impl TrainedGp {
             }
             t0 += nb;
         }
+        op.check_fault()?;
         Ok(var)
     }
 }
@@ -297,7 +301,7 @@ pub fn cross_mvm(
         .collect();
     let kernel = *kernel;
     let mut mean = vec![0.0; ntest];
-    crate::util::parallel::parallel_rows(&mut mean, ntest, 1, |t, out| {
+    crate::util::parallel::runtime().rows(&mut mean, ntest, 1, |t, out| {
         let mut acc = 0.0;
         for (w, wp) in &wps {
             let xt: Vec<f64> = w.iter().map(|&c| xtest[(t, c)]).collect();

@@ -88,7 +88,7 @@ impl Workspace<'_> {
         let mut u = Matrix::zeros(n, m);
         {
             let ud = &mut u.data;
-            crate::util::parallel::parallel_rows(ud, n, m, |i, row| {
+            crate::util::parallel::runtime().rows(ud, n, m, |i, row| {
                 row.copy_from_slice(&lmm.solve_lower(knm.row(i)));
             });
         }

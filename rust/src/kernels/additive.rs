@@ -218,7 +218,7 @@ pub fn gram(kernel: KernelFn, wp: &WindowedPoints, ell: f64, deriv: bool) -> Mat
     let mut m = Matrix::zeros(n, n);
     let d = wp.d;
     let pts = &wp.pts;
-    parallel::parallel_rows(&mut m.data, n, n, |i, row| {
+    parallel::runtime().rows(&mut m.data, n, n, |i, row| {
         let pi = &pts[i * d..(i + 1) * d];
         for (j, out) in row.iter_mut().enumerate() {
             let pj = &pts[j * d..(j + 1) * d];
@@ -245,7 +245,7 @@ pub fn gram_cross(
     let mut m = Matrix::zeros(wp_a.n, wp_b.n);
     let (d, nb) = (wp_a.d, wp_b.n);
     let (pa, pb) = (&wp_a.pts, &wp_b.pts);
-    parallel::parallel_rows(&mut m.data, wp_a.n, nb, |i, row| {
+    parallel::runtime().rows(&mut m.data, wp_a.n, nb, |i, row| {
         let pi = &pa[i * d..(i + 1) * d];
         for (j, out) in row.iter_mut().enumerate() {
             let pj = &pb[j * d..(j + 1) * d];
@@ -270,7 +270,7 @@ pub fn dense_mvm(
     assert_eq!(out.len(), n);
     let d = wp.d;
     let pts = &wp.pts;
-    parallel::parallel_rows(out, n, 1, |i, acc| {
+    parallel::runtime().rows(out, n, 1, |i, acc| {
         let pi = &pts[i * d..(i + 1) * d];
         let mut s = 0.0;
         match (kernel, deriv) {
@@ -329,7 +329,7 @@ pub fn dense_mvm_batch(
     // Accumulate per target point (row i of the n×b scratch), then
     // transpose back into the row-per-vector output layout.
     let mut tmp = Matrix::zeros(n, nb);
-    parallel::parallel_rows(&mut tmp.data, n, nb, |i, acc| {
+    parallel::runtime().rows(&mut tmp.data, n, nb, |i, acc| {
         let pi = &pts[i * d..(i + 1) * d];
         match (kernel, deriv) {
             // Specialized Gaussian path, matching dense_mvm.

@@ -76,7 +76,7 @@ impl Matrix {
         if self.rows * self.cols >= 1 << 16 {
             let cols = self.cols;
             let data = &self.data;
-            parallel::parallel_rows(y, self.rows, 1, |r, out| {
+            parallel::runtime().rows(y, self.rows, 1, |r, out| {
                 out[0] = dot(&data[r * cols..(r + 1) * cols], x);
             });
         } else {
@@ -109,7 +109,7 @@ impl Matrix {
         let mut c = Matrix::zeros(m, n);
         let a_data = &self.data;
         let b_data = &b.data;
-        parallel::parallel_rows(&mut c.data, m, n, |i, crow| {
+        parallel::runtime().rows(&mut c.data, m, n, |i, crow| {
             let arow = &a_data[i * k..(i + 1) * k];
             for (p, &aip) in arow.iter().enumerate() {
                 if aip != 0.0 {

@@ -187,7 +187,12 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_info() -> anyhow::Result<()> {
     println!("fourier-gp {}", env!("CARGO_PKG_VERSION"));
-    println!("threads: {}", fourier_gp::util::parallel::num_threads());
+    let rt = fourier_gp::util::parallel::runtime();
+    println!(
+        "threads: {} (persistent pool, {} workers + caller lane)",
+        rt.threads(),
+        rt.threads_spawned()
+    );
     let dir = fourier_gp::runtime::PjrtRuntime::default_dir();
     match fourier_gp::runtime::Manifest::load(&dir) {
         Ok(man) => {
@@ -219,6 +224,9 @@ fn run(args: &Args) -> anyhow::Result<()> {
     // Fail fast on a malformed FGP_THREADS instead of silently falling
     // back to the hardware default mid-run.
     fourier_gp::util::parallel::threads_from_env()?;
+    // Spawn the worker pool up front so the first PCG iteration is not the
+    // one paying thread start-up cost.
+    let _ = fourier_gp::util::parallel::runtime();
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args, false),
         Some("predict") => cmd_train(args, true),

@@ -230,7 +230,7 @@ impl Fastsum {
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
         let plan = &*self.plan;
         let npairs = nb / 2;
-        parallel::parallel_rows(
+        parallel::runtime().rows(
             &mut out.data[..npairs * 2 * n],
             npairs,
             2 * n,
@@ -281,7 +281,7 @@ impl Fastsum {
         assert_eq!(v.cols, self.n());
         let nb = v.rows;
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
-        let rows: Vec<Vec<f64>> = parallel::parallel_map(nb, |r| {
+        let rows: Vec<Vec<f64>> = parallel::runtime().map(nb, |r| {
             let vc: Vec<Complex> =
                 v.row(r).iter().map(|&x| Complex::new(x, 0.0)).collect();
             let mut ghat = self.plan.adjoint_serial(&vc);
@@ -299,6 +299,82 @@ impl Fastsum {
             out.row_mut(r).copy_from_slice(&row);
         }
         out
+    }
+
+    /// Retained scoped-spawn batch apply: the SAME packed pipeline as
+    /// [`Fastsum::apply_batch_into`], but parallelized with per-call
+    /// spawned threads (`parallel::scoped`) instead of the persistent
+    /// pool. Exists solely as the `benches/bench_parallel.rs` baseline
+    /// measuring what pool dispatch saves over spawn/join per apply.
+    pub fn apply_batch_scoped_ref(&self, v: &Matrix, deriv: bool, out: &mut Matrix) {
+        assert_eq!(v.cols, self.n());
+        assert_eq!(out.rows, v.rows);
+        assert_eq!(out.cols, v.cols);
+        let nb = v.rows;
+        let n = v.cols;
+        if nb == 0 {
+            return;
+        }
+        let b = if deriv { &self.bhat_deriv } else { &self.bhat };
+        let plan = &*self.plan;
+        if nb == 1 {
+            // Mirror of `apply_into`, with the scoped spread/gather refs.
+            let mut ws = plan.acquire_workspace();
+            for (s, &x) in ws.stage.iter_mut().zip(v.row(0)) {
+                *s = Complex::new(x, 0.0);
+            }
+            plan.spread_scoped_ref_into(&ws.stage, &mut ws.grid);
+            plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+            plan.project_single_into(&ws.grid, &mut ws.small_a);
+            plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            plan.gather_re_scoped_ref_into(&ws.grid, out.row_mut(0));
+            plan.release_workspace(ws);
+            return;
+        }
+        let npairs = nb / 2;
+        parallel::scoped::rows(
+            parallel::num_threads(),
+            &mut out.data[..npairs * 2 * n],
+            npairs,
+            2 * n,
+            |p, band| {
+                let (oa, ob) = band.split_at_mut(n);
+                let va = v.row(2 * p);
+                let vb = v.row(2 * p + 1);
+                let mut ws = plan.acquire_workspace();
+                for (j, s) in ws.stage.iter_mut().enumerate() {
+                    *s = Complex::new(va[j], vb[j]);
+                }
+                plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+                plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                plan.embed_packed_scaled_into(
+                    &ws.small_a,
+                    &ws.small_b,
+                    b,
+                    &mut ws.grid,
+                );
+                plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                plan.gather_packed_serial_into(&ws.grid, oa, ob);
+                plan.release_workspace(ws);
+            },
+        );
+        if nb % 2 == 1 {
+            let r = nb - 1;
+            let mut ws = plan.acquire_workspace();
+            let vr = v.row(r);
+            for (s, &x) in ws.stage.iter_mut().zip(vr) {
+                *s = Complex::new(x, 0.0);
+            }
+            plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
+            plan.project_single_into(&ws.grid, &mut ws.small_a);
+            plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            plan.gather_re_serial_into(&ws.grid, out.row_mut(r));
+            plan.release_workspace(ws);
+        }
     }
 
     /// Fused kernel + ℓ-derivative fast summation over an RHS block: per
@@ -334,7 +410,7 @@ impl Fastsum {
         }
         let plan = &*self.plan;
         let npairs = nb / 2;
-        parallel::parallel_zip_rows(
+        parallel::runtime().zip_rows(
             &mut out_k.data[..npairs * 2 * n],
             &mut out_d.data[..npairs * 2 * n],
             npairs,

@@ -11,7 +11,10 @@
 //! axis.
 //!
 //! The hot path is allocation-free after warm-up: every transform borrows
-//! an [`NfftWorkspace`] from a per-plan [`parallel::ObjectPool`], the
+//! an [`NfftWorkspace`] — first from the current thread's workspace cache
+//! (the pool workers of [`parallel::Runtime`] are persistent, so their
+//! thread-locals stay warm across applies), falling back to a per-plan
+//! [`parallel::ObjectPool`] only when the cache is cold or full. The
 //! deconvolution weights and grid embeddings are table-driven
 //! (`pad_idx`/`pad_neg_idx`/`deconv_tab`, built once in [`NfftPlan::new`]),
 //! and pairs of *real* coefficient vectors can ride one complex transform
@@ -20,6 +23,9 @@
 use super::window::{Window, WindowKind};
 use crate::fft::{Complex, FftNdPlan};
 use crate::util::parallel;
+use crate::util::parallel::lock_unpoisoned;
+use std::cell::RefCell;
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug)]
 pub struct NfftParams {
@@ -121,6 +127,26 @@ pub struct NfftPlan {
     pool: parallel::ObjectPool<NfftWorkspace>,
 }
 
+/// Workspace geometry key: `(grid_len, num_coeffs, n, fft_scratch_len)`.
+/// Workspaces are interchangeable between plans with equal keys.
+type WsKey = (usize, usize, usize, usize);
+
+/// Per-thread cache bound. The parallel spread holds up to
+/// `min(threads, 16)` workspaces on the dispatching thread at once (one
+/// per chunk), so 16 keeps a full spread's scratch thread-resident.
+const WS_CACHE_CAP: usize = 16;
+
+thread_local! {
+    /// Thread-local workspace cache fronting every plan's shared pool.
+    /// The pool workers of [`parallel::Runtime`] are persistent, so a
+    /// workspace parked here survives between applies and the steady
+    /// state acquires scratch without touching the pool mutex. Bounded by
+    /// [`WS_CACHE_CAP`]; mismatched-geometry entries simply stay parked
+    /// until a matching plan reclaims them or the thread exits.
+    static WS_CACHE: RefCell<Vec<(WsKey, NfftWorkspace)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
 impl NfftPlan {
     /// Build a plan for `n` points `pts` (row-major n×d) in [-1/4, 1/4)^d.
     /// (Any points in [-1/2, 1/2) work for the pure transforms; the
@@ -136,7 +162,7 @@ impl NfftPlan {
 
         let mut weights = vec![0.0f64; n * d * two_s];
         let mf = big_m as f64;
-        parallel::parallel_rows(&mut weights, n, d * two_s, |i, wrow| {
+        parallel::runtime().rows(&mut weights, n, d * two_s, |i, wrow| {
             for ax in 0..d {
                 let x = pts[i * d + ax];
                 debug_assert!((-0.5..0.5).contains(&x), "point outside torus: {x}");
@@ -229,15 +255,45 @@ impl NfftPlan {
         self.grid_len() * std::mem::size_of::<Complex>()
     }
 
-    /// Borrow a workspace from the plan's pool (allocating only when the
-    /// pool is dry, i.e. during warm-up).
-    pub fn acquire_workspace(&self) -> NfftWorkspace {
-        self.pool.take_or_else(|| NfftWorkspace::new_for(self))
+    /// Geometry key identifying which cached workspaces fit this plan.
+    #[inline]
+    fn ws_key(&self) -> WsKey {
+        (self.grid_len(), self.num_coeffs(), self.n, self.fft.scratch_len())
     }
 
-    /// Return a workspace for reuse by later transforms.
+    /// Borrow a workspace: first from the current thread's cache (no lock
+    /// — the persistent pool workers keep these warm across applies), then
+    /// from the plan's shared pool, allocating only when both are dry
+    /// (i.e. during warm-up).
+    pub fn acquire_workspace(&self) -> NfftWorkspace {
+        let key = self.ws_key();
+        let cached = WS_CACHE.with(|c| {
+            let mut cache = c.borrow_mut();
+            cache
+                .iter()
+                .rposition(|(k, _)| *k == key)
+                .map(|i| cache.swap_remove(i).1)
+        });
+        cached.unwrap_or_else(|| self.pool.take_or_else(|| NfftWorkspace::new_for(self)))
+    }
+
+    /// Return a workspace for reuse by later transforms: parked in the
+    /// current thread's cache while it has room, overflowing to the
+    /// shared pool.
     pub fn release_workspace(&self, ws: NfftWorkspace) {
-        self.pool.put(ws);
+        let key = self.ws_key();
+        let overflow = WS_CACHE.with(move |c| {
+            let mut cache = c.borrow_mut();
+            if cache.len() < WS_CACHE_CAP {
+                cache.push((key, ws));
+                None
+            } else {
+                Some(ws)
+            }
+        });
+        if let Some(ws) = overflow {
+            self.pool.put(ws);
+        }
     }
 
     #[inline]
@@ -306,11 +362,13 @@ impl NfftPlan {
 
     /// Parallel spread with a *deterministic* reduction: chunk c always
     /// covers points [c·per, (c+1)·per) and the per-chunk grids are summed
-    /// in chunk order, so repeated calls are bitwise identical (the old
-    /// implementation pushed chunk grids into a Mutex in thread-completion
-    /// order, making the floating-point summation order run-dependent).
-    /// Chunk 0 spreads directly into `grid`; the extra chunks borrow pooled
-    /// workspaces, so this path too is allocation-free after warm-up.
+    /// in chunk order, so repeated calls are bitwise identical regardless
+    /// of how the runtime schedules chunks onto lanes (chunk geometry is a
+    /// pure function of `num_threads()`, never of timing; the inline
+    /// nested-dispatch mode keeps the same chunk decomposition). Chunk 0
+    /// spreads directly into `grid` on the dispatching thread; the extra
+    /// chunks borrow cached workspaces, so this path too is allocation-free
+    /// after warm-up.
     pub(crate) fn spread_parallel_into(&self, v: &[Complex], grid: &mut [Complex]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(grid.len(), self.grid_len());
@@ -319,33 +377,86 @@ impl NfftPlan {
             "NFFT spread input contains non-finite coefficients"
         );
         let n = self.n;
-        let nchunks_max = parallel::num_threads().clamp(1, 16).min(n.max(1));
-        let per = n.div_ceil(nchunks_max.max(1)).max(1);
-        let nchunks = n.div_ceil(per).max(1);
+        let (per, nchunks) = self.spread_chunk_geometry();
         if nchunks <= 1 {
             self.spread_serial_into(v, grid);
             return;
         }
         let mut extra: Vec<NfftWorkspace> =
             (1..nchunks).map(|_| self.acquire_workspace()).collect();
-        std::thread::scope(|s| {
-            for (ci, ws) in extra.iter_mut().enumerate() {
-                let c = ci + 1;
+        {
+            // Chunk c spreads into slot c: slot 0 is the output grid
+            // (band 0 always runs on the dispatching thread, exactly the
+            // scoped-era schedule), slots 1.. are the extra workspaces.
+            // Each slot is locked once, by the lane owning that band.
+            let mut slots: Vec<Mutex<&mut [Complex]>> = Vec::with_capacity(nchunks);
+            slots.push(Mutex::new(&mut *grid));
+            for ws in extra.iter_mut() {
+                slots.push(Mutex::new(ws.grid.as_mut_slice()));
+            }
+            let slots_ref = &slots;
+            parallel::runtime().banded(nchunks, move |c| {
+                let mut guard = lock_unpoisoned(&slots_ref[c]);
+                let g: &mut [Complex] = &mut **guard;
+                g.fill(Complex::ZERO);
                 let lo = c * per;
                 let hi = ((c + 1) * per).min(n);
-                s.spawn(move || {
-                    ws.grid.fill(Complex::ZERO);
-                    for j in lo..hi {
-                        self.spread_point(j, v[j], &mut ws.grid);
-                    }
-                });
+                for j in lo..hi {
+                    self.spread_point(j, v[j], g);
+                }
+            });
+        }
+        for ws in extra {
+            for (a, b) in grid.iter_mut().zip(&ws.grid) {
+                *a += *b;
             }
-            // Chunk 0 on the calling thread, straight into the output.
-            grid.fill(Complex::ZERO);
-            for j in 0..per.min(n) {
-                self.spread_point(j, v[j], grid);
+            self.release_workspace(ws);
+        }
+    }
+
+    /// Chunk decomposition shared by the pooled spread and its retained
+    /// scoped reference: `(points_per_chunk, nchunks)`.
+    fn spread_chunk_geometry(&self) -> (usize, usize) {
+        let n = self.n;
+        let nchunks_max = parallel::num_threads().clamp(1, 16).min(n.max(1));
+        let per = n.div_ceil(nchunks_max.max(1)).max(1);
+        let nchunks = n.div_ceil(per).max(1);
+        (per, nchunks)
+    }
+
+    /// Retained scoped-spawn spread reference (identical chunk geometry
+    /// and reduction order to [`NfftPlan::spread_parallel_into`]); used by
+    /// `benches/bench_parallel.rs` to measure pool dispatch against
+    /// per-call thread spawning.
+    pub(crate) fn spread_scoped_ref_into(&self, v: &[Complex], grid: &mut [Complex]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(grid.len(), self.grid_len());
+        let n = self.n;
+        let (per, nchunks) = self.spread_chunk_geometry();
+        if nchunks <= 1 {
+            self.spread_serial_into(v, grid);
+            return;
+        }
+        let mut extra: Vec<NfftWorkspace> =
+            (1..nchunks).map(|_| self.acquire_workspace()).collect();
+        {
+            let mut slots: Vec<Mutex<&mut [Complex]>> = Vec::with_capacity(nchunks);
+            slots.push(Mutex::new(&mut *grid));
+            for ws in extra.iter_mut() {
+                slots.push(Mutex::new(ws.grid.as_mut_slice()));
             }
-        });
+            let slots_ref = &slots;
+            parallel::scoped::banded(nchunks, &move |c| {
+                let mut guard = lock_unpoisoned(&slots_ref[c]);
+                let g: &mut [Complex] = &mut **guard;
+                g.fill(Complex::ZERO);
+                let lo = c * per;
+                let hi = ((c + 1) * per).min(n);
+                for j in lo..hi {
+                    self.spread_point(j, v[j], g);
+                }
+            });
+        }
         for ws in extra {
             for (a, b) in grid.iter_mut().zip(&ws.grid) {
                 *a += *b;
@@ -412,7 +523,17 @@ impl NfftPlan {
     // lint: no_alloc
     pub(crate) fn gather_re_parallel_into(&self, grid: &[Complex], out: &mut [f64]) {
         assert_eq!(out.len(), self.n);
-        parallel::parallel_rows(out, self.n, 1, |j, slot| {
+        parallel::runtime().rows(out, self.n, 1, |j, slot| {
+            slot[0] = self.gather_point(j, grid).re;
+        });
+        crate::util::debug_assert_all_finite(out, "NFFT gather output");
+    }
+
+    /// Retained scoped-spawn gather reference (same banding as
+    /// [`NfftPlan::gather_re_parallel_into`]); bench baseline only.
+    pub(crate) fn gather_re_scoped_ref_into(&self, grid: &[Complex], out: &mut [f64]) {
+        assert_eq!(out.len(), self.n);
+        parallel::scoped::rows(parallel::num_threads(), out, self.n, 1, |j, slot| {
             slot[0] = self.gather_point(j, grid).re;
         });
         crate::util::debug_assert_all_finite(out, "NFFT gather output");
@@ -576,7 +697,7 @@ impl NfftPlan {
         // Σ_u g_u e^{-2πiku/M} = ĥ_k.)
         self.fft.inverse_with(&mut ws.grid, &mut ws.fft_scratch);
         let grid = &ws.grid;
-        let out = parallel::parallel_map(self.n, |j| self.gather_point(j, grid));
+        let out = parallel::runtime().map(self.n, |j| self.gather_point(j, grid));
         self.release_workspace(ws);
         out
     }

@@ -152,7 +152,7 @@ impl AafnPrecond {
         let mut e = Matrix::zeros(n2, k);
         {
             let e_data = &mut e.data;
-            crate::util::parallel::parallel_rows(e_data, n2, k, |i, row| {
+            crate::util::parallel::runtime().rows(e_data, n2, k, |i, row| {
                 let sol = l11.solve_lower(a21.row(i));
                 row.copy_from_slice(&sol);
             });

@@ -65,7 +65,7 @@ impl NystromPrecond {
         let mut u = Matrix::zeros(n, k);
         {
             let udata = &mut u.data;
-            crate::util::parallel::parallel_rows(udata, n, k, |i, row| {
+            crate::util::parallel::runtime().rows(udata, n, k, |i, row| {
                 row.copy_from_slice(&lmm.solve_lower(knm.row(i)));
             });
         }

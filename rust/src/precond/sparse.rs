@@ -244,7 +244,7 @@ pub fn knn_pattern(pts: &crate::kernels::additive::WindowedPoints, fill: usize) 
     if fill == 0 || n <= 1 {
         return pattern;
     }
-    let neighbors: Vec<Vec<usize>> = crate::util::parallel::parallel_map(n, |i| {
+    let neighbors: Vec<Vec<usize>> = crate::util::parallel::runtime().map(n, |i| {
         // Partial selection of `fill` nearest neighbours of i.
         let mut best: Vec<(f64, usize)> = Vec::with_capacity(fill + 1);
         for j in 0..n {

@@ -6,13 +6,30 @@
 //! coefficients are zero (contribute nothing) and padded outputs are
 //! discarded, so results are exact w.r.t. the artifact's own math.
 
+//! A PJRT execute fault mid-apply (device lost, artifact corrupt) is NOT a
+//! panic: the `SubKernelMvm` apply signatures are infallible by trait
+//! contract, so the engines latch the first error, return zeros, and
+//! surface it through `SubKernelMvm::take_fault` /
+//! `KernelOperator::check_fault` as a recoverable [`FgpError`].
+
 use super::{ArtifactMeta, PjrtRuntime};
 use crate::coordinator::mvm::SubKernelMvm;
 use crate::kernels::additive::WindowedPoints;
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
+use crate::util::parallel::lock_unpoisoned;
 use crate::util::{FgpError, FgpResult};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Latch `e` as the engine's deferred fault unless one is already pending
+/// (the FIRST failure is the diagnostic one; repeats on later tiles or
+/// columns add nothing).
+fn latch_fault(slot: &Mutex<Option<FgpError>>, e: FgpError) {
+    let mut f = lock_unpoisoned(slot);
+    if f.is_none() {
+        *f = Some(e);
+    }
+}
 
 fn kernel_name(k: KernelFn) -> FgpResult<&'static str> {
     match k {
@@ -32,6 +49,8 @@ pub struct ExactPjrtMvm {
     meta_der: ArtifactMeta,
     wp: WindowedPoints,
     ell: f64,
+    /// First deferred execute error; see module docs.
+    fault: Mutex<Option<FgpError>>,
 }
 
 impl ExactPjrtMvm {
@@ -59,7 +78,7 @@ impl ExactPjrtMvm {
                 FgpError::PjrtUnavailable(format!("no exact-deriv artifact for {kn}"))
             })?
             .clone();
-        Ok(ExactPjrtMvm { rt, meta_k, meta_der, wp, ell })
+        Ok(ExactPjrtMvm { rt, meta_k, meta_der, wp, ell, fault: Mutex::new(None) })
     }
 
     fn tile(&self) -> usize {
@@ -97,21 +116,21 @@ impl SubKernelMvm for ExactPjrtMvm {
                 xc[..jlen * d].copy_from_slice(&self.wp.pts[j0 * d..(j0 + jlen) * d]);
                 vv.fill(0.0);
                 vv[..jlen].copy_from_slice(&v[j0..j0 + jlen]);
-                let part = self
-                    .rt
-                    .execute(
-                        &meta.name,
-                        &[
-                            (&xr, &[t as i64, d as i64]),
-                            (&xc, &[t as i64, d as i64]),
-                            (&vv, &[t as i64]),
-                            (&ell, &[1]),
-                        ],
-                    )
-                    // lint: allow(panic) — SubKernelMvm::apply is infallible by
-                    // trait contract; a PJRT fault mid-solve is unrecoverable,
-                    // and stub builds cannot reach here (construction fails).
-                    .expect("PJRT exact MVM");
+                let part = match self.rt.execute(
+                    &meta.name,
+                    &[
+                        (&xr, &[t as i64, d as i64]),
+                        (&xc, &[t as i64, d as i64]),
+                        (&vv, &[t as i64]),
+                        (&ell, &[1]),
+                    ],
+                ) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        latch_fault(&self.fault, e);
+                        return vec![0.0; n];
+                    }
+                };
                 for (a, p) in acc.iter_mut().zip(&part) {
                     *a += p;
                 }
@@ -155,19 +174,21 @@ impl SubKernelMvm for ExactPjrtMvm {
                 for r in 0..nb {
                     vv.fill(0.0);
                     vv[..jlen].copy_from_slice(&v.row(r)[j0..j0 + jlen]);
-                    let part = self
-                        .rt
-                        .execute(
-                            &meta.name,
-                            &[
-                                (&xr, &[t as i64, d as i64]),
-                                (&xc, &[t as i64, d as i64]),
-                                (&vv, &[t as i64]),
-                                (&ell, &[1]),
-                            ],
-                        )
-                        // lint: allow(panic) — infallible trait method; see apply.
-                        .expect("PJRT exact MVM");
+                    let part = match self.rt.execute(
+                        &meta.name,
+                        &[
+                            (&xr, &[t as i64, d as i64]),
+                            (&xc, &[t as i64, d as i64]),
+                            (&vv, &[t as i64]),
+                            (&ell, &[1]),
+                        ],
+                    ) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            latch_fault(&self.fault, e);
+                            return Matrix::zeros(nb, n);
+                        }
+                    };
                     for (a, p) in acc.row_mut(r).iter_mut().zip(&part) {
                         *a += p;
                     }
@@ -178,6 +199,10 @@ impl SubKernelMvm for ExactPjrtMvm {
             }
         }
         out
+    }
+
+    fn take_fault(&self) -> Option<FgpError> {
+        lock_unpoisoned(&self.fault).take()
     }
 }
 
@@ -192,6 +217,8 @@ pub struct NfftPjrtMvm {
     d: usize,
     scale: f64,
     ell: f64,
+    /// First deferred execute error; see module docs.
+    fault: Mutex<Option<FgpError>>,
 }
 
 impl NfftPjrtMvm {
@@ -233,6 +260,7 @@ impl NfftPjrtMvm {
             d: wp.d,
             scale,
             ell,
+            fault: Mutex::new(None),
         })
     }
 }
@@ -248,18 +276,20 @@ impl SubKernelMvm for NfftPjrtMvm {
         let mut vv = vec![0.0; cap];
         vv[..self.n].copy_from_slice(v);
         let ell = [self.ell * self.scale];
-        let out = self
-            .rt
-            .execute(
-                &meta.name,
-                &[
-                    (&self.pts_padded, &[cap as i64, self.d as i64]),
-                    (&vv, &[cap as i64]),
-                    (&ell, &[1]),
-                ],
-            )
-            // lint: allow(panic) — infallible trait method; see ExactPjrtMvm::apply.
-            .expect("PJRT nfft MVM");
+        let out = match self.rt.execute(
+            &meta.name,
+            &[
+                (&self.pts_padded, &[cap as i64, self.d as i64]),
+                (&vv, &[cap as i64]),
+                (&ell, &[1]),
+            ],
+        ) {
+            Ok(o) => o,
+            Err(e) => {
+                latch_fault(&self.fault, e);
+                return vec![0.0; self.n];
+            }
+        };
         let mut res = out[..self.n].to_vec();
         if deriv {
             for r in &mut res {
@@ -271,6 +301,10 @@ impl SubKernelMvm for NfftPjrtMvm {
 
     fn set_ell(&mut self, ell: f64) {
         self.ell = ell;
+    }
+
+    fn take_fault(&self) -> Option<FgpError> {
+        lock_unpoisoned(&self.fault).take()
     }
 }
 

@@ -1,19 +1,36 @@
-//! Minimal data-parallel primitives over `std::thread::scope`.
+//! Persistent banded worker-pool runtime for the data-parallel primitives.
 //!
 //! The offline build has no `rayon`; the coordinator's hot loops (per-window
-//! kernel MVMs, dense Gram tiles, spreading) only need chunked
-//! parallel-for / parallel-map over index ranges, which scoped threads
-//! provide with no unsafe code and no persistent pool.
+//! kernel MVMs, dense Gram tiles, NFFT spreading) only need chunked
+//! parallel-for / parallel-map over index ranges. Those used to spawn fresh
+//! OS threads per call via `std::thread::scope`; every PCG iteration paid
+//! that spawn/join cost and the NFFT scratch had to live in a lock-guarded
+//! [`ObjectPool`] because scoped threads cannot keep thread-locals warm.
+//! [`Runtime`] replaces that substrate: workers are spawned once (count from
+//! the validated `FGP_THREADS` resolution), parked on a condvar between
+//! calls, and handed **fixed, deterministic band assignments** — band `b` of
+//! a dispatch always executes on lane `b % lanes`, with lane 0 being the
+//! dispatching thread itself. Band geometry is identical to the scoped-spawn
+//! era (see [`scoped`], the retained reference implementation), so every
+//! band-ordered reduction in the codebase stays bitwise reproducible.
+//!
+//! Nested dispatch (a band closure that itself calls a parallel primitive)
+//! runs inline on the current lane with the **same band geometry**, serially
+//! in band order — the arithmetic is unchanged, only the execution schedule
+//! degrades. This makes the primitives safely re-entrant without a
+//! work-stealing scheduler.
 
 use crate::util::{FgpError, FgpResult};
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 /// Poison-recovering lock: a panic on another thread (only possible from
 /// user closures in tests/benches) must not cascade into a second panic
 /// here — the pooled scratch / partial-sum slots are plain data and stay
 /// valid regardless of where the holder unwound.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
@@ -22,6 +39,10 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// out, use it, and return it, so steady-state iterations perform no
 /// heap allocation: the pool grows to the worker count during warm-up and
 /// then recycles. Checkout order is LIFO, which keeps buffers cache-warm.
+///
+/// With the persistent [`Runtime`], the NFFT hot path fronts this pool
+/// with per-thread caches (workers live forever, so thread-locals are
+/// sound there); the pool remains the shared fallback and overflow store.
 pub struct ObjectPool<T> {
     slots: Mutex<Vec<T>>,
 }
@@ -125,162 +146,385 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// Run `f(i)` for every `i` in `0..n`, work-stealing over blocks.
-///
-/// `f` must be `Sync` (called concurrently from many threads).
-pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
-    let nt = num_threads().min(n.max(1));
-    if nt <= 1 || n <= 1 {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    // Dynamic block scheduling: threads grab blocks of indices.
-    let block = (n / (nt * 8)).max(1);
-    let counter = AtomicUsize::new(0);
-    let fr = &f;
-    let cr = &counter;
-    std::thread::scope(|s| {
-        for _ in 0..nt {
-            s.spawn(move || loop {
-                let start = cr.fetch_add(block, Ordering::Relaxed);
-                if start >= n {
+/// The band closure as a type-erased trait object (lifetime-erased to
+/// `'static` for the trip through the job slot; see [`JobPtr`]).
+type JobFn = dyn Fn(usize) + Sync;
+
+/// Raw pointer to the currently dispatched band closure.
+#[derive(Clone, Copy)]
+struct JobPtr(*const JobFn);
+
+// SAFETY: the pointee is `Sync` (concurrent `&`-calls are its contract)
+// and `Runtime::banded_dyn` blocks until every counted lane decremented
+// `remaining` — no worker can touch the pointer after that — before the
+// borrow the pointer was created from ends, so sending it to parked
+// workers never lets it outlive the closure.
+unsafe impl Send for JobPtr {}
+
+/// Lifetime-erase a band closure reference for the job slot.
+fn erase_job<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> JobPtr {
+    let ptr: *const (dyn Fn(usize) + Sync + 'a) = f;
+    // SAFETY: only the (unexpressible) lifetime bound of the trait object
+    // changes; layout is identical, and the `JobPtr` contract above keeps
+    // every use inside the source lifetime.
+    JobPtr(unsafe { std::mem::transmute(ptr) })
+}
+
+/// Shared state between a [`Runtime`] and its parked workers.
+struct PoolShared {
+    slot: Mutex<JobSlot>,
+    /// Workers park here between dispatches.
+    work_cv: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done_cv: Condvar,
+    /// Spawn-counting hook: incremented once per worker OS thread at
+    /// startup. Tests assert this never grows across dispatches (the pool
+    /// must reuse its workers, not churn threads).
+    started: AtomicUsize,
+}
+
+struct JobSlot {
+    /// Bumped once per dispatch; workers detect new work by epoch change.
+    epoch: u64,
+    job: Option<JobPtr>,
+    nbands: usize,
+    /// Worker lanes still running the current job (lane 0 not counted).
+    remaining: usize,
+    shutdown: bool,
+    /// First panic payload from any lane, re-raised by the dispatcher.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+thread_local! {
+    /// True on pool worker threads always, and on a dispatching thread
+    /// while it runs its own lane-0 bands: any parallel call made from
+    /// such a context executes inline (same band geometry, serial band
+    /// order) instead of re-entering the dispatcher.
+    static IN_PARALLEL_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_loop(shared: Arc<PoolShared>, lane: usize, lanes: usize) {
+    shared.started.fetch_add(1, Ordering::SeqCst);
+    IN_PARALLEL_REGION.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let (job, nbands) = {
+            let mut slot = lock_unpoisoned(&shared.slot);
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
                     break;
                 }
-                let end = (start + block).min(n);
-                for i in start..end {
-                    fr(i);
-                }
-            });
+                slot = shared
+                    .work_cv
+                    .wait(slot)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            seen = slot.epoch;
+            (slot.job, slot.nbands)
+        };
+        // A lane with no band for this job was not counted in `remaining`
+        // (it may even observe the epoch only after the job completed and
+        // the slot was cleared — hence the `None` arm).
+        let Some(job) = job else { continue };
+        if lane >= nbands {
+            continue;
         }
-    });
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the dispatcher keeps the closure alive until this
+            // lane decrements `remaining`, which happens strictly after
+            // the last call through the pointer (see `JobPtr`).
+            let f: &JobFn = unsafe { &*job.0 };
+            let mut b = lane;
+            while b < nbands {
+                f(b);
+                b += lanes;
+            }
+        }));
+        let mut slot = lock_unpoisoned(&shared.slot);
+        if let Err(payload) = res {
+            if slot.panic.is_none() {
+                slot.panic = Some(payload);
+            }
+        }
+        slot.remaining -= 1;
+        if slot.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
 }
 
-/// Run `f(chunk_index, start, end)` over `nchunks` contiguous chunks of `0..n`.
-pub fn parallel_chunks<F: Fn(usize, usize, usize) + Sync>(n: usize, nchunks: usize, f: F) {
-    let nchunks = nchunks.max(1).min(n.max(1));
-    let fr = &f;
-    if nchunks == 1 {
-        fr(0, 0, n);
-        return;
+/// Persistent work-banded thread pool.
+///
+/// Workers are spawned once at construction, parked between calls, and
+/// joined on drop. Each dispatch hands out **fixed** band assignments —
+/// band `b` runs on lane `b % lanes`, lane 0 being the dispatching thread
+/// — so the mapping from bands to OS threads is a pure function of
+/// `(nbands, lanes)`, never of timing. All higher-level primitives
+/// ([`Runtime::rows`], [`Runtime::map`], [`Runtime::sum`], …) keep the
+/// exact band geometry of the scoped-spawn implementations they replaced
+/// (retained in [`scoped`]), which is what the bitwise-determinism tests
+/// pin down.
+pub struct Runtime {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    lanes: usize,
+    /// Serializes dispatches from independent caller threads (e.g. the
+    /// test harness); a dispatch owns every lane for its duration.
+    dispatch: Mutex<()>,
+}
+
+impl Runtime {
+    /// Pool with `threads` lanes total: the caller's thread plus
+    /// `threads - 1` parked workers. `threads == 0` is treated as 1.
+    pub fn new(threads: usize) -> Runtime {
+        let target = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            slot: Mutex::new(JobSlot {
+                epoch: 0,
+                job: None,
+                nbands: 0,
+                remaining: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            started: AtomicUsize::new(0),
+        });
+        let mut workers = Vec::with_capacity(target.saturating_sub(1));
+        let mut complete = true;
+        for lane in 1..target {
+            let sh = Arc::clone(&shared);
+            let builder = std::thread::Builder::new().name(format!("fgp-worker-{lane}"));
+            match builder.spawn(move || worker_loop(sh, lane, target)) {
+                Ok(h) => workers.push(h),
+                Err(_) => {
+                    complete = false;
+                    break;
+                }
+            }
+        }
+        if !complete {
+            // Lane striding (`b % lanes`) is baked into every spawned
+            // worker, so a partial pool would mis-stripe bands: degrade
+            // to a serial 1-lane runtime instead.
+            {
+                let mut slot = lock_unpoisoned(&shared.slot);
+                slot.shutdown = true;
+            }
+            shared.work_cv.notify_all();
+            for h in workers.drain(..) {
+                let _ = h.join();
+            }
+            return Runtime { shared, workers, lanes: 1, dispatch: Mutex::new(()) };
+        }
+        Runtime { shared, workers, lanes: target, dispatch: Mutex::new(()) }
     }
-    let per = n.div_ceil(nchunks);
-    std::thread::scope(|s| {
-        for c in 0..nchunks {
-            let start = c * per;
-            let end = ((c + 1) * per).min(n);
-            if start >= end {
+
+    /// The process-wide default runtime, lazily initialized with the
+    /// validated [`num_threads`] count. Its workers live for the process.
+    pub fn global() -> &'static Runtime {
+        static GLOBAL: OnceLock<Runtime> = OnceLock::new();
+        GLOBAL.get_or_init(|| Runtime::new(num_threads()))
+    }
+
+    /// Total lanes (dispatching thread + parked workers).
+    pub fn threads(&self) -> usize {
+        self.lanes
+    }
+
+    /// Spawn-counting hook: OS threads this pool has ever started. After
+    /// construction this must never grow — pool reuse, not thread churn.
+    pub fn threads_spawned(&self) -> usize {
+        self.shared.started.load(Ordering::SeqCst)
+    }
+
+    /// Low-level dispatch: run `f(b)` for every band `b` in `0..nbands`,
+    /// band `b` on lane `b % lanes`. Blocks until all bands finish; a
+    /// panic in any band is re-raised here (first payload wins) after
+    /// every lane has stopped touching the closure.
+    pub fn banded<F: Fn(usize) + Sync>(&self, nbands: usize, f: F) {
+        self.banded_dyn(nbands, &f);
+    }
+
+    fn banded_dyn(&self, nbands: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nbands == 0 {
+            return;
+        }
+        let lanes = self.lanes;
+        if nbands == 1 || lanes == 1 || IN_PARALLEL_REGION.with(Cell::get) {
+            // Inline execution with IDENTICAL band geometry: the 1-lane
+            // pool and nested dispatch run every band serially in band
+            // order, so band-ordered reductions are bitwise identical to
+            // the pooled schedule.
+            for b in 0..nbands {
+                f(b);
+            }
+            return;
+        }
+        let serial = lock_unpoisoned(&self.dispatch);
+        {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            slot.job = Some(erase_job(f));
+            slot.nbands = nbands;
+            slot.remaining = nbands.min(lanes) - 1;
+            slot.epoch = slot.epoch.wrapping_add(1);
+        }
+        self.shared.work_cv.notify_all();
+        // Lane 0 runs on the dispatching thread (band 0 always executes
+        // here, as it did on the spawning thread in the scoped era).
+        IN_PARALLEL_REGION.with(|c| c.set(true));
+        let mine = catch_unwind(AssertUnwindSafe(|| {
+            let mut b = 0;
+            while b < nbands {
+                f(b);
+                b += lanes;
+            }
+        }))
+        .err();
+        IN_PARALLEL_REGION.with(|c| c.set(false));
+        let theirs = {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            while slot.remaining > 0 {
+                slot = self
+                    .shared
+                    .done_cv
+                    .wait(slot)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            slot.job = None;
+            slot.panic.take()
+        };
+        drop(serial);
+        if let Some(payload) = mine.or(theirs) {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Run `f(i)` for every `i` in `0..n`, work-stealing over blocks
+    /// within the dispatched lanes. No ordering contract (callers use
+    /// atomics or disjoint writes), hence no determinism constraint.
+    pub fn for_each<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        let nt = self.lanes.min(n.max(1));
+        if nt <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Dynamic block scheduling: lanes grab blocks of indices.
+        let block = (n / (nt * 8)).max(1);
+        let counter = AtomicUsize::new(0);
+        let fr = &f;
+        let cr = &counter;
+        self.banded(nt, move |_| loop {
+            let start = cr.fetch_add(block, Ordering::Relaxed);
+            if start >= n {
                 break;
             }
-            s.spawn(move || fr(c, start, end));
-        }
-    });
-}
-
-/// Parallel map over `0..n` producing a `Vec<T>`.
-pub fn parallel_map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
-    n: usize,
-    f: F,
-) -> Vec<T> {
-    let mut out = vec![T::default(); n];
-    let nt = num_threads().min(n.max(1));
-    let fr = &f;
-    if nt <= 1 {
-        for (i, slot) in out.iter_mut().enumerate() {
-            *slot = fr(i);
-        }
-        return out;
+            let end = (start + block).min(n);
+            for i in start..end {
+                fr(i);
+            }
+        });
     }
-    let per = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        let mut rest = out.as_mut_slice();
-        let mut base = 0usize;
-        while !rest.is_empty() {
-            let take = per.min(rest.len());
-            let (band, tail) = rest.split_at_mut(take);
-            rest = tail;
-            let b = base;
-            s.spawn(move || {
-                for (k, slot) in band.iter_mut().enumerate() {
-                    *slot = fr(b + k);
-                }
-            });
-            base += take;
-        }
-    });
-    out
-}
 
-/// Mutate disjoint row-slices of a flat buffer in parallel:
-/// `f(row_index, row_slice)` over `rows` rows of width `width`.
-pub fn parallel_rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
-    buf: &mut [T],
-    rows: usize,
-    width: usize,
-    f: F,
-) {
-    assert_eq!(buf.len(), rows * width);
-    let nt = num_threads().min(rows.max(1));
-    if nt <= 1 {
-        for (r, row) in buf.chunks_mut(width).enumerate() {
-            f(r, row);
+    /// Run `f(chunk_index, start, end)` over `nchunks` contiguous chunks
+    /// of `0..n` (same chunk boundaries as the scoped-spawn era).
+    pub fn chunks<F: Fn(usize, usize, usize) + Sync>(&self, n: usize, nchunks: usize, f: F) {
+        let nchunks = nchunks.max(1).min(n.max(1));
+        if nchunks == 1 {
+            f(0, 0, n);
+            return;
         }
-        return;
+        let per = n.div_ceil(nchunks);
+        let nbands = n.div_ceil(per);
+        let fr = &f;
+        self.banded(nbands, move |c| {
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            fr(c, start, end);
+        });
     }
-    let fr = &f;
-    std::thread::scope(|s| {
-        // Split the buffer into `nt` contiguous row-bands.
+
+    /// Mutate disjoint row-slices of a flat buffer in parallel:
+    /// `f(row_index, row_slice)` over `rows` rows of width `width`. Band
+    /// geometry: `per = rows.div_ceil(nt)` contiguous rows per band.
+    pub fn rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        buf: &mut [T],
+        rows: usize,
+        width: usize,
+        f: F,
+    ) {
+        assert_eq!(buf.len(), rows * width);
+        let nt = self.lanes.min(rows.max(1));
+        if nt <= 1 {
+            for (r, row) in buf.chunks_mut(width).enumerate() {
+                f(r, row);
+            }
+            return;
+        }
         let per = rows.div_ceil(nt);
+        // Pre-split into bands behind per-band locks; each band is locked
+        // exactly once by the lane that owns it (uncontended), which keeps
+        // this safe code without handing `&mut` across threads directly.
+        let mut bands: Vec<Mutex<(usize, &mut [T])>> = Vec::with_capacity(nt);
         let mut rest = buf;
         let mut row0 = 0usize;
-        for _ in 0..nt {
+        loop {
             let take = per.min(rest.len() / width);
             if take == 0 {
                 break;
             }
             let (band, tail) = rest.split_at_mut(take * width);
             rest = tail;
-            let base = row0;
-            s.spawn(move || {
-                for (k, row) in band.chunks_mut(width).enumerate() {
-                    fr(base + k, row);
-                }
-            });
+            bands.push(Mutex::new((row0, band)));
             row0 += take;
         }
-    });
-}
-
-/// Mutate matching row-slices of TWO flat buffers in parallel:
-/// `f(row_index, row_a, row_b)` over `rows` rows of width `width` in each.
-/// Both buffers are banded identically, so each call sees the same row of
-/// both — the shape needed by paired outputs (kernel + derivative MVMs).
-pub fn parallel_zip_rows<T: Send, F: Fn(usize, &mut [T], &mut [T]) + Sync>(
-    a: &mut [T],
-    b: &mut [T],
-    rows: usize,
-    width: usize,
-    f: F,
-) {
-    assert_eq!(a.len(), rows * width);
-    assert_eq!(b.len(), rows * width);
-    let nt = num_threads().min(rows.max(1));
-    if nt <= 1 {
-        for (r, (ra, rb)) in
-            a.chunks_mut(width).zip(b.chunks_mut(width)).enumerate()
-        {
-            f(r, ra, rb);
-        }
-        return;
+        let bands_ref = &bands;
+        let fr = &f;
+        self.banded(bands.len(), move |bi| {
+            let mut guard = lock_unpoisoned(&bands_ref[bi]);
+            let (base, band) = &mut *guard;
+            for (k, row) in band.chunks_mut(width).enumerate() {
+                fr(*base + k, row);
+            }
+        });
     }
-    let fr = &f;
-    std::thread::scope(|s| {
+
+    /// Mutate matching row-slices of TWO flat buffers in parallel:
+    /// `f(row_index, row_a, row_b)` over `rows` rows of width `width` in
+    /// each. Both buffers are banded identically, so each call sees the
+    /// same row of both — the shape needed by paired outputs (kernel +
+    /// derivative MVMs).
+    pub fn zip_rows<T: Send, F: Fn(usize, &mut [T], &mut [T]) + Sync>(
+        &self,
+        a: &mut [T],
+        b: &mut [T],
+        rows: usize,
+        width: usize,
+        f: F,
+    ) {
+        assert_eq!(a.len(), rows * width);
+        assert_eq!(b.len(), rows * width);
+        let nt = self.lanes.min(rows.max(1));
+        if nt <= 1 {
+            for (r, (ra, rb)) in a.chunks_mut(width).zip(b.chunks_mut(width)).enumerate() {
+                f(r, ra, rb);
+            }
+            return;
+        }
         let per = rows.div_ceil(nt);
+        #[allow(clippy::type_complexity)]
+        let mut bands: Vec<Mutex<(usize, &mut [T], &mut [T])>> = Vec::with_capacity(nt);
         let mut rest_a = a;
         let mut rest_b = b;
         let mut row0 = 0usize;
-        for _ in 0..nt {
+        loop {
             let take = per.min(rest_a.len() / width);
             if take == 0 {
                 break;
@@ -289,50 +533,296 @@ pub fn parallel_zip_rows<T: Send, F: Fn(usize, &mut [T], &mut [T]) + Sync>(
             let (band_b, tail_b) = rest_b.split_at_mut(take * width);
             rest_a = tail_a;
             rest_b = tail_b;
-            let base = row0;
-            s.spawn(move || {
-                let rows_a = band_a.chunks_mut(width);
-                let rows_b = band_b.chunks_mut(width);
-                for (k, (ra, rb)) in rows_a.zip(rows_b).enumerate() {
-                    fr(base + k, ra, rb);
-                }
-            });
+            bands.push(Mutex::new((row0, band_a, band_b)));
             row0 += take;
         }
-    });
+        let bands_ref = &bands;
+        let fr = &f;
+        self.banded(bands.len(), move |bi| {
+            let mut guard = lock_unpoisoned(&bands_ref[bi]);
+            let (base, band_a, band_b) = &mut *guard;
+            let rows_a = band_a.chunks_mut(width);
+            let rows_b = band_b.chunks_mut(width);
+            for (k, (ra, rb)) in rows_a.zip(rows_b).enumerate() {
+                fr(*base + k, ra, rb);
+            }
+        });
+    }
+
+    /// Parallel map over `0..n` producing a `Vec<T>`.
+    pub fn map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
+        &self,
+        n: usize,
+        f: F,
+    ) -> Vec<T> {
+        let mut out = vec![T::default(); n];
+        let fr = &f;
+        self.rows(&mut out, n, 1, move |i, slot| slot[0] = fr(i));
+        out
+    }
+
+    /// Parallel sum-reduction of `f(i)` over `0..n`. Partial sums are
+    /// accumulated per band and reduced in band order — the same
+    /// summation tree as the scoped-spawn reference, bitwise.
+    pub fn sum<F: Fn(usize) -> f64 + Sync>(&self, n: usize, f: F) -> f64 {
+        let nt = self.lanes.min(n.max(1));
+        if nt <= 1 {
+            return (0..n).map(f).sum();
+        }
+        let per = n.div_ceil(nt);
+        let fr = &f;
+        let mut partials = vec![0.0f64; nt];
+        self.rows(&mut partials, nt, 1, move |c, slot| {
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            let mut acc = 0.0;
+            for i in start..end {
+                acc += fr(i);
+            }
+            slot[0] = acc;
+        });
+        partials.iter().sum()
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            slot.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Runtime(lanes={})", self.lanes)
+    }
+}
+
+/// The process-wide default [`Runtime`] handle. Layers thread this handle
+/// through their hot paths explicitly (`runtime().rows(..)`, …); the free
+/// functions below keep the historical call-site names working.
+pub fn runtime() -> &'static Runtime {
+    Runtime::global()
+}
+
+/// Run `f(i)` for every `i` in `0..n` on the default runtime.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    runtime().for_each(n, f);
+}
+
+/// Run `f(chunk_index, start, end)` over `nchunks` contiguous chunks of `0..n`.
+pub fn parallel_chunks<F: Fn(usize, usize, usize) + Sync>(n: usize, nchunks: usize, f: F) {
+    runtime().chunks(n, nchunks, f);
+}
+
+/// Parallel map over `0..n` producing a `Vec<T>`.
+pub fn parallel_map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    f: F,
+) -> Vec<T> {
+    runtime().map(n, f)
+}
+
+/// Mutate disjoint row-slices of a flat buffer in parallel.
+pub fn parallel_rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    buf: &mut [T],
+    rows: usize,
+    width: usize,
+    f: F,
+) {
+    runtime().rows(buf, rows, width, f);
+}
+
+/// Mutate matching row-slices of TWO flat buffers in parallel.
+pub fn parallel_zip_rows<T: Send, F: Fn(usize, &mut [T], &mut [T]) + Sync>(
+    a: &mut [T],
+    b: &mut [T],
+    rows: usize,
+    width: usize,
+    f: F,
+) {
+    runtime().zip_rows(a, b, rows, width, f);
 }
 
 /// Parallel sum-reduction of `f(i)` over `0..n`.
 pub fn parallel_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
-    let nt = num_threads().min(n.max(1));
-    if nt <= 1 {
-        return (0..n).map(f).sum();
-    }
-    let fr = &f;
-    let mut partials = vec![0.0f64; nt];
-    {
-        let slots: Vec<std::sync::Mutex<&mut f64>> =
-            partials.iter_mut().map(std::sync::Mutex::new).collect();
-        let slots_ref = &slots;
-        let per = n.div_ceil(nt);
+    runtime().sum(n, f)
+}
+
+/// Retained scoped-spawn reference implementations.
+///
+/// These are the pre-pool primitives, parameterized by an explicit thread
+/// count instead of the cached `num_threads()`. They exist for two
+/// reasons: the bitwise-determinism tests pin the pooled [`Runtime`]
+/// against them band-for-band, and `benches/bench_parallel.rs` measures
+/// pool dispatch against their per-call spawn/join cost. This module is
+/// the only place outside the pool itself allowed to touch
+/// `std::thread::{spawn, scope}` (enforced by the xtask `no_raw_spawn`
+/// lint rule).
+pub mod scoped {
+    use super::lock_unpoisoned;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    /// Run `f(b)` over `0..nbands`, band 0 on the calling thread and each
+    /// other band on a freshly spawned scoped thread.
+    pub fn banded(nbands: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nbands == 0 {
+            return;
+        }
+        if nbands == 1 {
+            f(0);
+            return;
+        }
         std::thread::scope(|s| {
-            for c in 0..nt {
-                let start = c * per;
-                let end = ((c + 1) * per).min(n);
-                if start >= end {
-                    break;
-                }
-                s.spawn(move || {
-                    let mut acc = 0.0;
-                    for i in start..end {
-                        acc += fr(i);
+            for b in 1..nbands {
+                s.spawn(move || f(b));
+            }
+            f(0);
+        });
+    }
+
+    /// Scoped-spawn `parallel_for` with an explicit thread count.
+    pub fn for_each<F: Fn(usize) + Sync>(nt: usize, n: usize, f: F) {
+        let nt = nt.max(1).min(n.max(1));
+        if nt <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let block = (n / (nt * 8)).max(1);
+        let counter = AtomicUsize::new(0);
+        let fr = &f;
+        let cr = &counter;
+        std::thread::scope(|s| {
+            for _ in 0..nt {
+                s.spawn(move || loop {
+                    let start = cr.fetch_add(block, Ordering::Relaxed);
+                    if start >= n {
+                        break;
                     }
-                    **lock_unpoisoned(&slots_ref[c]) = acc;
+                    let end = (start + block).min(n);
+                    for i in start..end {
+                        fr(i);
+                    }
                 });
             }
         });
     }
-    partials.iter().sum()
+
+    /// Scoped-spawn `parallel_rows` with an explicit thread count.
+    pub fn rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        nt: usize,
+        buf: &mut [T],
+        rows: usize,
+        width: usize,
+        f: F,
+    ) {
+        assert_eq!(buf.len(), rows * width);
+        let nt = nt.max(1).min(rows.max(1));
+        if nt <= 1 {
+            for (r, row) in buf.chunks_mut(width).enumerate() {
+                f(r, row);
+            }
+            return;
+        }
+        let fr = &f;
+        std::thread::scope(|s| {
+            let per = rows.div_ceil(nt);
+            let mut rest = buf;
+            let mut row0 = 0usize;
+            for _ in 0..nt {
+                let take = per.min(rest.len() / width);
+                if take == 0 {
+                    break;
+                }
+                let (band, tail) = rest.split_at_mut(take * width);
+                rest = tail;
+                let base = row0;
+                s.spawn(move || {
+                    for (k, row) in band.chunks_mut(width).enumerate() {
+                        fr(base + k, row);
+                    }
+                });
+                row0 += take;
+            }
+        });
+    }
+
+    /// Scoped-spawn `parallel_map` with an explicit thread count.
+    pub fn map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
+        nt: usize,
+        n: usize,
+        f: F,
+    ) -> Vec<T> {
+        let mut out = vec![T::default(); n];
+        let nt = nt.max(1).min(n.max(1));
+        let fr = &f;
+        if nt <= 1 {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = fr(i);
+            }
+            return out;
+        }
+        let per = n.div_ceil(nt);
+        std::thread::scope(|s| {
+            let mut rest = out.as_mut_slice();
+            let mut base = 0usize;
+            while !rest.is_empty() {
+                let take = per.min(rest.len());
+                let (band, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let b = base;
+                s.spawn(move || {
+                    for (k, slot) in band.iter_mut().enumerate() {
+                        *slot = fr(b + k);
+                    }
+                });
+                base += take;
+            }
+        });
+        out
+    }
+
+    /// Scoped-spawn `parallel_sum` with an explicit thread count.
+    pub fn sum<F: Fn(usize) -> f64 + Sync>(nt: usize, n: usize, f: F) -> f64 {
+        let nt = nt.max(1).min(n.max(1));
+        if nt <= 1 {
+            return (0..n).map(f).sum();
+        }
+        let fr = &f;
+        let mut partials = vec![0.0f64; nt];
+        {
+            let slots: Vec<Mutex<&mut f64>> =
+                partials.iter_mut().map(Mutex::new).collect();
+            let slots_ref = &slots;
+            let per = n.div_ceil(nt);
+            std::thread::scope(|s| {
+                for c in 0..nt {
+                    let start = c * per;
+                    let end = ((c + 1) * per).min(n);
+                    if start >= end {
+                        break;
+                    }
+                    s.spawn(move || {
+                        let mut acc = 0.0;
+                        for i in start..end {
+                            acc += fr(i);
+                        }
+                        **lock_unpoisoned(&slots_ref[c]) = acc;
+                    });
+                }
+            });
+        }
+        partials.iter().sum()
+    }
 }
 
 #[cfg(test)]
@@ -473,6 +963,115 @@ mod tests {
         assert!(pool.len() >= 1);
     }
 
+    #[test]
+    fn runtime_reuses_workers_across_dispatches() {
+        // The spawn-counting hook: a pool with L lanes starts exactly
+        // L - 1 OS threads, once, and repeated dispatches never add more.
+        let rt = Runtime::new(3);
+        for round in 0..100 {
+            let mut buf = vec![0.0f64; 64];
+            rt.rows(&mut buf, 64, 1, |i, s| s[0] = (i + round) as f64);
+            assert_eq!(buf[63], (63 + round) as f64);
+        }
+        assert_eq!(rt.threads(), 3);
+        assert_eq!(
+            rt.threads_spawned(),
+            2,
+            "worker pool must reuse threads, not churn them"
+        );
+    }
+
+    #[test]
+    fn runtime_matches_scoped_baseline_bitwise() {
+        // FGP_THREADS itself is resolved once per process, so the lane
+        // counts {1, 2, odd} are exercised through explicit Runtime::new
+        // pools against the scoped references at the same count.
+        for nt in [1usize, 2, 3, 5] {
+            let rt = Runtime::new(nt);
+            let rows = 37;
+            let width = 5;
+            let fill = |r: usize, row: &mut [f64]| {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = ((r * 31 + c) as f64 * 0.1).sin();
+                }
+            };
+            let mut a = vec![0.0f64; rows * width];
+            let mut b = vec![0.0f64; rows * width];
+            rt.rows(&mut a, rows, width, fill);
+            scoped::rows(nt, &mut b, rows, width, fill);
+            assert_eq!(a, b, "rows diverged at nt={nt}");
+
+            let term = |i: usize| (i as f64 * 0.01).cos();
+            let s_pool = rt.sum(1001, term);
+            let s_ref = scoped::sum(nt, 1001, term);
+            assert_eq!(s_pool, s_ref, "sum reduction diverged at nt={nt}");
+            // And repeated pooled dispatches are self-consistent.
+            assert_eq!(s_pool, rt.sum(1001, term));
+
+            let m_pool = rt.map(257, |i| (i as f64 + 0.5).sqrt());
+            let m_ref = scoped::map(nt, 257, |i| (i as f64 + 0.5).sqrt());
+            assert_eq!(m_pool, m_ref, "map diverged at nt={nt}");
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_with_identical_banding() {
+        // A parallel primitive called from inside a band closure must not
+        // deadlock, and must produce the same bitwise result as the same
+        // call made outside (the inline path keeps the band geometry).
+        let outer = parallel_map(8, |w| parallel_sum(500 + w, |i| (i as f64 * 0.3).sin()));
+        let expect: Vec<f64> = (0..8)
+            .map(|w| parallel_sum(500 + w, |i| (i as f64 * 0.3).sin()))
+            .collect();
+        assert_eq!(outer, expect);
+    }
+
+    #[test]
+    fn runtime_drop_joins_workers_gracefully() {
+        // Shutdown must wake parked workers and join them; a broken
+        // handoff would hang the test harness here.
+        for _ in 0..8 {
+            let rt = Runtime::new(3);
+            let hits: Vec<AtomicU64> = (0..128).map(|_| AtomicU64::new(0)).collect();
+            rt.for_each(128, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 1);
+            }
+            drop(rt);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "deliberate band panic")]
+    fn worker_panic_propagates_to_dispatcher() {
+        let rt = Runtime::new(2);
+        rt.for_each(64, |i| {
+            if i == 63 {
+                panic!("deliberate band panic");
+            }
+        });
+    }
+
+    #[test]
+    fn runtime_survives_user_panic() {
+        // A panicking band must not poison the pool: the payload is
+        // re-raised at the dispatch site and later dispatches still work.
+        let rt = Runtime::new(3);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            rt.for_each(64, |i| {
+                if i % 2 == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        let s = rt.sum(100, |i| i as f64);
+        assert_eq!(s, 4950.0);
+        assert_eq!(rt.threads_spawned(), 2);
+    }
+
     /// Iteration count for the stress lane; `FGP_STRESS_ITERS` scales it
     /// up for `make stress` / the TSan lane.
     fn stress_iters() -> usize {
@@ -541,6 +1140,30 @@ mod tests {
             let via_sum = parallel_sum(rows * width, |i| buf[i]);
             assert_eq!(direct, via_sum);
         }
+    }
+
+    #[test]
+    #[ignore = "stress lane: run via `make stress` or `make tsan`"]
+    fn stress_runtime_concurrent_dispatchers() {
+        // TSan-targeted: several caller threads hammer ONE pool; the
+        // dispatch mutex must serialize jobs and the epoch/remaining
+        // handoff must never tear. Integer sums are exact, so any data
+        // race that corrupts a band shows up as a wrong value.
+        let rt = Runtime::new(4);
+        let rt_ref = &rt;
+        for _ in 0..stress_iters() {
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    s.spawn(move || {
+                        let n = 2000 + t;
+                        let got = rt_ref.sum(n, |i| i as f64);
+                        let nf = n as f64;
+                        assert_eq!(got, nf * (nf - 1.0) / 2.0);
+                    });
+                }
+            });
+        }
+        assert_eq!(rt.threads_spawned(), 3);
     }
 
     #[test]

@@ -1,0 +1,31 @@
+//! Fixture for the `no_raw_spawn` rule: raw thread primitives in library
+//! code outside `util/parallel.rs`. Two violations (scope + spawn), one
+//! waived site, and an exempt `#[cfg(test)]` usage.
+
+pub fn scoped_fanout(n: usize) -> usize {
+    let mut total = 0;
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+    });
+    total += n;
+    total
+}
+
+pub fn detached(n: usize) -> usize {
+    let h = std::thread::spawn(move || n + 1);
+    h.join().unwrap_or(0)
+}
+
+pub fn waived(n: usize) -> usize {
+    // lint: allow(no_raw_spawn) — fixture demo of a waived spawn site
+    let h = std::thread::spawn(move || n);
+    h.join().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_use_raw_threads() {
+        std::thread::scope(|_s| {});
+    }
+}

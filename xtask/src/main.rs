@@ -13,6 +13,11 @@
 //!   `Vec`s).
 //! - `unsafe_send_sync`: every `unsafe impl Send`/`Sync` needs a
 //!   `// SAFETY:` comment directly above it.
+//! - `no_raw_spawn`: no `std::thread::spawn` / `std::thread::scope` in
+//!   library code outside `util/parallel.rs` — all parallelism goes
+//!   through the persistent `parallel::Runtime` so per-call thread churn
+//!   (and nondeterministic band geometry) cannot sneak back in. Code under
+//!   `#[cfg(test)]` is exempt.
 //!
 //! A violation is waived by `// lint: allow(<rule>) — <reason>` on the
 //! offending line or within the four lines above it; waivers are counted
@@ -53,6 +58,10 @@ const ALLOC_TOKENS: &[(&str, bool)] = &[
 
 /// Unordered-collection tokens forbidden by the `determinism` rule.
 const DETERMINISM_TOKENS: &[(&str, bool)] = &[("HashMap", true), ("HashSet", true)];
+
+/// Raw thread primitives forbidden outside `util/parallel.rs` by the
+/// `no_raw_spawn` rule.
+const SPAWN_TOKENS: &[(&str, bool)] = &[("thread::spawn", true), ("thread::scope", true)];
 
 struct Violation {
     file: String,
@@ -303,10 +312,22 @@ fn marked_fn_range(code: &[String], m: usize) -> Option<(usize, usize)> {
 fn lint_source(file: &str, src: &str, report: &mut Report) {
     let (code, comments) = split_channels(src);
     let mask = test_mask(&code);
+    // The runtime module itself is the one place allowed to own OS threads.
+    let spawn_exempt = file.replace('\\', "/").ends_with("util/parallel.rs");
 
     for (i, line) in code.iter().enumerate() {
         if mask[i] {
             continue;
+        }
+        if !spawn_exempt {
+            for &(tok, boundary) in SPAWN_TOKENS {
+                if has_token(line, tok, boundary) {
+                    let msg = format!(
+                        "`{tok}` outside util/parallel.rs; dispatch through parallel::Runtime"
+                    );
+                    report.emit(&comments, file, i, "no_raw_spawn", msg);
+                }
+            }
         }
         for &(tok, boundary) in PANIC_TOKENS {
             if has_token(line, tok, boundary) {
@@ -497,6 +518,28 @@ mod tests {
     }
 
     #[test]
+    fn catches_raw_thread_spawns() {
+        let r = lint_fixture("raw_spawn.rs");
+        assert_eq!(rules(&r), ["no_raw_spawn", "no_raw_spawn"], "{:?}", describe(&r));
+        // `.unwrap_or` in the fixture must not trip the panic rule, the
+        // test-module scope is exempt, and the waived site is counted.
+        assert_eq!(r.waivers.len(), 1, "{:?}", r.waivers);
+        assert_eq!(r.waivers[0].2, "no_raw_spawn");
+    }
+
+    #[test]
+    fn parallel_runtime_module_is_exempt_from_spawn_rule() {
+        // The same source linted under the runtime module's path raises
+        // nothing — not even waivers.
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join("raw_spawn.rs");
+        let src = std::fs::read_to_string(&p).unwrap();
+        let mut r = Report::default();
+        lint_source("rust/src/util/parallel.rs", &src, &mut r);
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+        assert!(r.waivers.is_empty(), "{:?}", r.waivers);
+    }
+
+    #[test]
     fn waiver_suppresses_violation_and_is_counted() {
         let r = lint_fixture("waived_unwrap.rs");
         assert!(r.violations.is_empty(), "{:?}", describe(&r));
@@ -531,6 +574,10 @@ mod tests {
             lint_source(&f.display().to_string(), &src, &mut r);
         }
         assert!(r.violations.is_empty(), "{:?}", describe(&r));
+        // The library carries ZERO waivers: the last three (PJRT panic
+        // sites in runtime/engine.rs) were burned down when the engines
+        // grew the latched-fault path. New waivers need a strong reason.
+        assert!(r.waivers.is_empty(), "waivers crept back in: {:?}", r.waivers);
     }
 
     fn describe(r: &Report) -> Vec<String> {
