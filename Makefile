@@ -1,14 +1,15 @@
 # fourier-gp developer targets. `make test` is the tier-1 gate
 # (see ROADMAP.md); `make ci` is the full local gate (format, lints,
 # invariant lint, tests); `make bench-mvm` / `make bench-nfft` /
-# `make bench-parallel` track the perf trajectory in BENCH_mvm.json /
-# BENCH_nfft.json / BENCH_parallel.json from PR 1 / PR 6 / PR 8 onward.
+# `make bench-parallel` / `make bench-precond` track the perf trajectory
+# in BENCH_mvm.json / BENCH_nfft.json / BENCH_parallel.json /
+# BENCH_precond.json from PR 1 / PR 6 / PR 8 / PR 9 onward.
 # `make miri` / `make tsan` are nightly-gated sanitizer lanes and skip
 # gracefully when the toolchain is missing.
 
 CARGO ?= cargo
 
-.PHONY: all ci fmt clippy lint test miri tsan stress bench-mvm bench-nfft bench-parallel python-test
+.PHONY: all ci fmt clippy lint test miri tsan stress bench-mvm bench-nfft bench-parallel bench-precond python-test
 
 all: test
 
@@ -80,6 +81,14 @@ bench-nfft:
 # apply throughput pool-vs-scoped; writes BENCH_parallel.json.
 bench-parallel:
 	$(CARGO) bench --bench bench_parallel
+
+# Preconditioner lifecycle sweep: per-step cost of full rebuild vs
+# ℓ-skeleton rebuild vs σ-refresh over an (n, rank) grid, amortized cost
+# over a drifting hyperparameter trajectory, and end-to-end fit wall time
+# under both refresh policies; writes BENCH_precond.json.
+# FGP_FULL=1 extends the grid to paper scale.
+bench-precond:
+	$(CARGO) bench --bench bench_precond
 
 python-test:
 	cd python && python -m pytest -q tests

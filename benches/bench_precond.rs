@@ -1,53 +1,233 @@
-//! AAFN preconditioner micro-bench: geometry build (FPS + KNN pattern,
-//! once per dataset) vs numeric refresh (per Adam step) vs apply, and the
-//! Nyström ablation. Also reports the iteration savings it buys.
+//! Preconditioner lifecycle bench: what one optimizer step costs under
+//! each tier of the amortization ladder, and what the cache buys
+//! end-to-end.
+//!
+//! Three sections, written to `BENCH_precond.json`:
+//!  1. Per-step cost grid over (n, rank): full rebuild (geometry +
+//!     skeleton + factor, the pre-lifecycle per-step cost) vs skeleton
+//!     rebuild (ℓ moved, geometry cached) vs σ-refresh (ℓ cached — the
+//!     steady-state step). Acceptance: σ-refresh ≥ 3× cheaper than the
+//!     per-step rebuild it replaces.
+//!  2. Amortized trajectory: a synthetic Adam-like drift (ℓ creeps, σ
+//!     moves every step) driven through `PrecondCache` under the default
+//!     policy vs `rebuild_every_step` — total prepare() wall time and
+//!     per-step average.
+//!  3. End-to-end `GpModel::fit` wall time under both policies, plus the
+//!     PCG iteration/residual trajectories showing staleness does not
+//!     degrade convergence.
 
+use fourier_gp::gp::{GpConfig, GpModel, NllOptions, PrecondKind};
 use fourier_gp::kernels::additive::AdditiveKernel;
 use fourier_gp::kernels::{KernelFn, Windows};
-use fourier_gp::precond::{AafnGeometry, AafnPrecond, AfnOptions, NystromPrecond};
-use fourier_gp::solvers::cg::{cg, pcg, CgOptions};
-use fourier_gp::solvers::Precond;
-use fourier_gp::util::bench::{black_box, BenchConfig, Bencher};
+use fourier_gp::precond::{
+    AafnGeometry, AafnPrecond, AafnSkeleton, AfnOptions, PrecondCache, RefreshPolicy,
+};
+use fourier_gp::util::bench::black_box;
+use fourier_gp::util::json::Json;
+use fourier_gp::util::parallel;
 use fourier_gp::util::rng::Rng;
+use std::sync::Arc;
+
+/// Median wall clock of `samples` runs of `f` (seconds).
+fn median_of(samples: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..samples)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn windows() -> Windows {
+    Windows(vec![vec![0, 1, 2], vec![3, 4, 5]])
+}
+
+/// Section 1: the three per-step cost tiers at one (n, rank) point.
+fn grid_point(x: &fourier_gp::linalg::Matrix, rank: usize, samples: usize) -> Json {
+    let n = x.rows;
+    let ak = AdditiveKernel::new(KernelFn::Gaussian, windows());
+    let (ell, sf2, se2) = (2.0, 0.5, 0.01);
+    let opts = AfnOptions { k_per_window: rank / 2, max_rank: rank, fill: 20 };
+
+    let geo = AafnGeometry::new(x, &ak, &opts).expect("geometry");
+    let skel = Arc::new(AafnSkeleton::build(&ak, ell, &geo));
+
+    // Tier 0: what every step paid before the lifecycle layer existed.
+    let t_full = median_of(samples, || {
+        black_box(AafnPrecond::build(x, &ak, ell, sf2, se2, &opts).expect("build"));
+    });
+    // Tier 1: ℓ moved past tolerance — rebuild numerics on cached geometry.
+    let t_skel = median_of(samples, || {
+        let s = Arc::new(AafnSkeleton::build(&ak, ell, &geo));
+        black_box(AafnPrecond::refresh(&s, &geo, sf2, se2).expect("refresh"));
+    });
+    // Tier 2: σ-only move — the steady-state cost (no kernel evaluations).
+    let t_sigma = median_of(samples, || {
+        black_box(AafnPrecond::refresh(&skel, &geo, sf2, se2).expect("refresh"));
+    });
+
+    let speedup_sigma = t_full / t_sigma;
+    let speedup_skel = t_full / t_skel;
+    println!(
+        "  n={n:6} rank={rank:4}  full={:9.2}ms skel={:9.2}ms σ-refresh={:9.2}ms  (full/σ = {speedup_sigma:5.1}x)",
+        t_full * 1e3,
+        t_skel * 1e3,
+        t_sigma * 1e3
+    );
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("rank", Json::Num(rank as f64)),
+        ("seconds_full_rebuild", Json::Num(t_full)),
+        ("seconds_skeleton_rebuild", Json::Num(t_skel)),
+        ("seconds_sigma_refresh", Json::Num(t_sigma)),
+        ("speedup_full_vs_sigma_refresh", Json::Num(speedup_sigma)),
+        ("speedup_full_vs_skeleton", Json::Num(speedup_skel)),
+    ])
+}
+
+/// Section 2: total prepare() cost over a drifting trajectory under one
+/// policy. Returns (seconds_total, skeleton_builds, sigma_refreshes).
+fn run_trajectory(
+    x: &fourier_gp::linalg::Matrix,
+    opts: &AfnOptions,
+    policy: RefreshPolicy,
+    steps: usize,
+) -> (f64, usize, usize) {
+    let ak = AdditiveKernel::new(KernelFn::Gaussian, windows());
+    let mut cache = PrecondCache::aafn(x, &ak, opts, policy).expect("cache");
+    let t0 = std::time::Instant::now();
+    for t in 0..steps {
+        // Adam-like drift: ℓ creeps ~0.4% per step, σ moves every step.
+        let ell = 2.0 * (1.0 + 0.004 * t as f64);
+        let sf2 = 0.5 + 0.002 * t as f64;
+        let se2 = 0.01 + 1e-5 * t as f64;
+        cache.prepare(&ak, ell, sf2, se2).expect("prepare");
+        black_box(cache.precond().is_some());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let s = cache.stats();
+    (secs, s.skeleton_builds, s.sigma_refreshes)
+}
+
+/// Section 3: end-to-end fit under one refresh policy.
+fn run_fit(
+    x: &fourier_gp::linalg::Matrix,
+    y: &[f64],
+    policy: RefreshPolicy,
+    label: &str,
+) -> (Json, f64) {
+    let mut cfg = GpConfig::new(KernelFn::Gaussian, windows());
+    cfg.engine = fourier_gp::coordinator::mvm::EngineKind::ExactRust;
+    cfg.max_iters = 40;
+    cfg.adam_lr = 0.05;
+    cfg.nll = NllOptions { train_cg_iters: 15, num_probes: 5, slq_steps: 8, cg_tol: 1e-10, seed: 0 };
+    cfg.precond = PrecondKind::Aafn(AfnOptions { k_per_window: 60, max_rank: 120, fill: 15 });
+    cfg.refresh = policy;
+    cfg.loss_every = 0;
+    let trained = GpModel::new(cfg).fit(x, y).expect("fit");
+    let s = trained.precond_stats;
+    println!(
+        "  fit[{label}]: {:7.3}s  skel={} σ={} reuse={}  final CG={}@{:.2e}",
+        trained.train_seconds,
+        s.skeleton_builds,
+        s.sigma_refreshes,
+        s.reuses,
+        trained.cg_trace.last().map(|t| t.1).unwrap_or(0),
+        trained.cg_trace.last().map(|t| t.2).unwrap_or(0.0),
+    );
+    let iters: Vec<Json> =
+        trained.cg_trace.iter().map(|&(_, it, _)| Json::Num(it as f64)).collect();
+    let resids: Vec<Json> =
+        trained.cg_trace.iter().map(|&(_, _, r)| Json::Num(r)).collect();
+    let secs = trained.train_seconds;
+    let rec = Json::obj(vec![
+        ("policy", Json::Str(label.into())),
+        ("train_seconds", Json::Num(secs)),
+        ("skeleton_builds", Json::Num(s.skeleton_builds as f64)),
+        ("sigma_refreshes", Json::Num(s.sigma_refreshes as f64)),
+        ("reuses", Json::Num(s.reuses as f64)),
+        ("forced_by_cg", Json::Num(s.forced_by_cg as f64)),
+        ("pcg_iterations", Json::Arr(iters)),
+        ("pcg_final_residuals", Json::Arr(resids)),
+    ]);
+    (rec, secs)
+}
 
 fn main() {
     let full = fourier_gp::coordinator::experiments::full_scale();
+    let rt = parallel::runtime();
+    println!(
+        "=== Preconditioner lifecycle ({} lanes): rebuild vs skeleton vs σ-refresh ===",
+        rt.threads()
+    );
+
+    let grid: Vec<(usize, usize)> = if full {
+        vec![(1500, 100), (1500, 200), (3000, 200), (6000, 300)]
+    } else {
+        vec![(1000, 100), (2000, 200)]
+    };
+    let mut grid_records = Vec::new();
+    for &(n, rank) in &grid {
+        let x = fourier_gp::data::synthetic::fig5_dataset(n, 5);
+        let samples = if n <= 2000 { 7 } else { 5 };
+        grid_records.push(grid_point(&x, rank, samples));
+    }
+
+    println!("=== Amortized trajectory: cached policy vs rebuild-every-step ===");
     let n = if full { 3000 } else { 1500 };
     let x = fourier_gp::data::synthetic::fig5_dataset(n, 5);
-    let ak = AdditiveKernel::new(
-        KernelFn::Gaussian,
-        Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]),
-    );
-    let (ell, sf2, se2) = (2.0, 0.5, 0.01);
     let opts = AfnOptions { k_per_window: 100, max_rank: 200, fill: 20 };
-    let mut b = Bencher::new(BenchConfig::quick());
-    b.bench(&format!("AAFN geometry build (n={n})"), || {
-        black_box(AafnGeometry::new(&x, &ak, &opts));
-    });
-    let geo = AafnGeometry::new(&x, &ak, &opts);
-    b.bench(&format!("AAFN numeric refresh (n={n}, rank≤200)"), || {
-        black_box(AafnPrecond::build_with(&ak, ell, sf2, se2, &geo));
-    });
-    let p = AafnPrecond::build_with(&ak, ell, sf2, se2, &geo);
-    let mut rng = Rng::new(9);
-    let v = rng.normal_vec(n);
-    b.bench("AAFN apply (solve)", || {
-        black_box(p.solve(&v));
-    });
-    b.bench(&format!("Nyström build (n={n}, rank=200)"), || {
-        black_box(NystromPrecond::build(&x, &ak, ell, sf2, se2, 200));
-    });
-    // Iteration savings on the paper's hard middle-ℓ regime.
-    let k = ak.gram_full(&x, ell, sf2, se2);
-    let bvec: Vec<f64> = (0..n).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
-    let cgo = CgOptions { tol: 1e-4, max_iter: 400, relative: true };
-    let plain = cg(&k, &bvec, &cgo);
-    let pre = pcg(&k, &p, &bvec, &cgo);
-    let ny = NystromPrecond::build(&x, &ak, ell, sf2, se2, 200);
-    let pre_ny = pcg(&k, &ny, &bvec, &cgo);
+    let steps = 50;
+    let (t_ref, sk_ref, _) =
+        run_trajectory(&x, &opts, RefreshPolicy::rebuild_every_step(), steps);
+    let (t_cached, sk_cached, sr_cached) =
+        run_trajectory(&x, &opts, RefreshPolicy::default(), steps);
+    let amortized_speedup = t_ref / t_cached;
     println!(
-        "    iterations: CG={} AAFN-PCG={} Nyström-PCG={} (ablation)",
-        plain.iterations, pre.iterations, pre_ny.iterations
+        "  {steps} drifting steps: rebuild-every-step={t_ref:7.3}s ({sk_ref} skels)  cached={t_cached:7.3}s ({sk_cached} skels, {sr_cached} σ)  {amortized_speedup:5.1}x",
     );
-    b.save_csv(std::path::Path::new("results/bench_precond.csv")).ok();
+    let trajectory = Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("seconds_rebuild_every_step", Json::Num(t_ref)),
+        ("seconds_cached_policy", Json::Num(t_cached)),
+        ("skeleton_builds_reference", Json::Num(sk_ref as f64)),
+        ("skeleton_builds_cached", Json::Num(sk_cached as f64)),
+        ("sigma_refreshes_cached", Json::Num(sr_cached as f64)),
+        ("amortized_speedup", Json::Num(amortized_speedup)),
+    ]);
+
+    println!("=== End-to-end fit wall time + PCG trajectories ===");
+    let nfit = if full { 1000 } else { 500 };
+    let xf = fourier_gp::data::synthetic::fig5_dataset(nfit, 7);
+    let mut rng = Rng::new(11);
+    let y: Vec<f64> = (0..nfit)
+        .map(|i| {
+            let r = xf.row(i);
+            (r[0]).sin() + 0.5 * r[3] + 0.1 * rng.normal()
+        })
+        .collect();
+    let (rec_ref, fit_ref) = run_fit(&xf, &y, RefreshPolicy::rebuild_every_step(), "rebuild_every_step");
+    let (rec_cached, fit_cached) = run_fit(&xf, &y, RefreshPolicy::default(), "cached_default");
+    let fit_records = vec![rec_ref, rec_cached];
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("precond".into())),
+        (
+            "baseline",
+            Json::Str("full AAFN rebuild per optimizer step (pre-lifecycle behavior)".into()),
+        ),
+        ("threads", Json::Num(rt.threads() as f64)),
+        ("grid_records", Json::Arr(grid_records)),
+        ("trajectory", trajectory),
+        ("fit_n", Json::Num(nfit as f64)),
+        ("fit_speedup_cached", Json::Num(fit_ref / fit_cached)),
+        ("fit_records", Json::Arr(fit_records)),
+    ]);
+    std::fs::write("BENCH_precond.json", doc.to_string_pretty())
+        .expect("write BENCH_precond.json");
+    println!("wrote BENCH_precond.json");
 }

@@ -11,10 +11,10 @@ use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
 use crate::nfft::NfftParams;
-use crate::precond::{AafnGeometry, AafnPrecond, AfnOptions};
+use crate::precond::{AfnOptions, LifecycleStats, PrecondCache, RefreshPolicy};
 use crate::solvers::cg::{cg_batch, pcg, CgOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
-use crate::util::{FgpError, FgpResult};
+use crate::util::FgpResult;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum PrecondKind {
@@ -30,6 +30,11 @@ pub struct GpConfig {
     pub engine: EngineKind,
     pub nfft: Option<NfftParams>,
     pub precond: PrecondKind,
+    /// When the cached preconditioner may go stale vs. when it rebuilds
+    /// (see [`crate::precond::lifecycle`]). The default absorbs small ℓ
+    /// moves; [`RefreshPolicy::rebuild_every_step`] recovers the old
+    /// build-per-iteration behavior exactly.
+    pub refresh: RefreshPolicy,
     pub nll: NllOptions,
     pub adam_lr: f64,
     pub max_iters: usize,
@@ -48,6 +53,7 @@ impl GpConfig {
             engine: EngineKind::NfftRust,
             nfft: None,
             precond: PrecondKind::Aafn(AfnOptions::default()),
+            refresh: RefreshPolicy::default(),
             nll: NllOptions::default(),
             adam_lr: 0.01,
             max_iters: 500,
@@ -71,6 +77,11 @@ pub struct TrainedGp {
     pub x: Matrix,
     pub mvms: usize,
     pub train_seconds: f64,
+    /// What the preconditioner cache actually did over training
+    /// (skeleton rebuilds vs. σ-refreshes vs. straight reuses).
+    pub precond_stats: LifecycleStats,
+    /// Per-step α-solve convergence: (iteration, CG iterations, final ‖r‖).
+    pub cg_trace: Vec<(usize, usize, f64)>,
 }
 
 pub struct GpModel {
@@ -100,38 +111,14 @@ impl GpModel {
         Ok(KernelOperator::new(subs, hyper.sigma_f2(), hyper.sigma_eps2()))
     }
 
-    fn build_precond(
-        &self,
-        ak: &AdditiveKernel,
-        x: &Matrix,
-        hyper: &Hyper,
-        geo: Option<&AafnGeometry>,
-    ) -> FgpResult<Option<Box<dyn Precond>>> {
+    fn build_cache(&self, ak: &AdditiveKernel, x: &Matrix) -> FgpResult<PrecondCache> {
         match &self.config.precond {
-            PrecondKind::None => Ok(None),
-            PrecondKind::Aafn(_opts) => {
-                let geo = geo.ok_or_else(|| {
-                    FgpError::InvalidArg(
-                        "AAFN geometry must be prepared before build_precond".to_string(),
-                    )
-                })?;
-                Ok(Some(Box::new(AafnPrecond::build_with(
-                    ak,
-                    hyper.ell,
-                    hyper.sigma_f2(),
-                    hyper.sigma_eps2(),
-                    geo,
-                )?)))
+            PrecondKind::None => Ok(PrecondCache::none()),
+            PrecondKind::Aafn(opts) => {
+                PrecondCache::aafn(x, ak, opts, self.config.refresh)
             }
             PrecondKind::Nystrom { rank } => {
-                Ok(Some(Box::new(crate::precond::NystromPrecond::build(
-                    x,
-                    ak,
-                    hyper.ell,
-                    hyper.sigma_f2(),
-                    hyper.sigma_eps2(),
-                    *rank,
-                )?)))
+                PrecondCache::nystrom(x, ak, *rank, self.config.refresh)
             }
         }
     }
@@ -142,38 +129,46 @@ impl GpModel {
         let cfg = &self.config;
         self.config.windows.validate(x.cols)?;
         let ak = AdditiveKernel::new(cfg.kernel, cfg.windows.clone());
-        let geo = match &cfg.precond {
-            PrecondKind::Aafn(opts) => Some(AafnGeometry::new(x, &ak, opts)),
-            _ => None,
-        };
+        // Geometry (landmarks, permutation, sparsity pattern) is built once
+        // here; per-step work is delegated to the lifecycle cache.
+        let mut cache = self.build_cache(&ak, x)?;
         let mut raw = cfg.init;
         let mut op = self.build_operator(x, &raw.transform())?;
         let mut adam = Adam::new(3, cfg.adam_lr);
         let mut loss_trace = Vec::new();
         let mut hyper_trace = Vec::new();
+        let mut cg_trace = Vec::with_capacity(cfg.max_iters);
         let mut mvms = 0usize;
 
         for it in 0..cfg.max_iters {
             let hyper = raw.transform();
             op.set_hyper(hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2());
-            let precond = self.build_precond(&ak, x, &hyper, geo.as_ref())?;
-            let pref: Option<&dyn Precond> = precond.as_deref();
+            cache.prepare(&ak, hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2())?;
+            let pref = cache.precond();
             let mut nll_opts = cfg.nll.clone();
             nll_opts.seed = cfg.nll.seed.wrapping_add(it as u64);
             // One block solve serves α and every gradient trace probe.
             let (nll, g) = estimate_nll_grad(&op, pref, y, &nll_opts);
+            cache.observe(nll.cg_stats);
+            cg_trace.push((it, nll.cg_stats.iterations, nll.cg_stats.final_residual));
             // Chain rule through softplus.
             let jac = raw.jacobian();
             let grad_raw = [g.grad[0] * jac[0], g.grad[1] * jac[1], g.grad[2] * jac[2]];
             if cfg.loss_every > 0 && (it % cfg.loss_every == 0 || it + 1 == cfg.max_iters) {
                 loss_trace.push((it, nll.value));
                 hyper_trace.push((it, hyper.sigma_f, hyper.ell, hyper.sigma_eps));
+                let ps = cache.stats();
                 crate::debuglog!(
-                    "iter {it}: Z̃={:.4} σf={:.3} ℓ={:.3} σε={:.3}",
+                    "iter {it}: Z̃={:.4} σf={:.3} ℓ={:.3} σε={:.3} cg={}@{:.2e} precond[skel={} σ={} reuse={}]",
                     nll.value,
                     hyper.sigma_f,
                     hyper.ell,
-                    hyper.sigma_eps
+                    hyper.sigma_eps,
+                    nll.cg_stats.iterations,
+                    nll.cg_stats.final_residual,
+                    ps.skeleton_builds,
+                    ps.sigma_refreshes,
+                    ps.reuses
                 );
             }
             adam.step(&mut raw.0, &grad_raw);
@@ -184,8 +179,8 @@ impl GpModel {
         // accuracy (50 CG iterations by default).
         let hyper = raw.transform();
         op.set_hyper(hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2());
-        let precond = self.build_precond(&ak, x, &hyper, geo.as_ref())?;
-        let pref: Option<&dyn Precond> = precond.as_deref();
+        cache.prepare(&ak, hyper.ell, hyper.sigma_f2(), hyper.sigma_eps2())?;
+        let pref = cache.precond();
         let identity = IdentityPrecond(op.dim());
         let m: &dyn Precond = pref.unwrap_or(&identity);
         let cg_opts = CgOptions { tol: 1e-10, max_iter: cfg.predict_cg_iters, relative: true };
@@ -204,6 +199,8 @@ impl GpModel {
             x: x.clone(),
             mvms: op.mvms_performed().max(mvms),
             train_seconds: t0.elapsed().as_secs_f64(),
+            precond_stats: cache.stats(),
+            cg_trace,
         })
     }
 }
@@ -392,6 +389,52 @@ mod tests {
         let scale = crate::util::variance(&y).sqrt();
         let rmse_between = crate::util::rmse(&pe, &pn);
         assert!(rmse_between < 0.25 * scale, "prediction gap {rmse_between}");
+    }
+
+    #[test]
+    fn cached_preconditioner_amortizes_without_changing_the_fit() {
+        let (x, y) = toy_data(150, 4);
+        let mut cached_cfg = quick_config(EngineKind::ExactRust);
+        cached_cfg.refresh = RefreshPolicy::default();
+        let mut ref_cfg = quick_config(EngineKind::ExactRust);
+        ref_cfg.refresh = RefreshPolicy::rebuild_every_step();
+
+        let cached = GpModel::new(cached_cfg).fit(&x, &y).unwrap();
+        let reference = GpModel::new(ref_cfg).fit(&x, &y).unwrap();
+
+        // The cache must actually amortize: far fewer skeleton rebuilds
+        // than optimizer steps (Adam moves ℓ every step, so the reference
+        // policy rebuilds every step).
+        let cs = cached.precond_stats;
+        let rs = reference.precond_stats;
+        assert!(
+            cs.skeleton_builds < cached.config.max_iters,
+            "cache never amortized: {} builds over {} iters",
+            cs.skeleton_builds,
+            cached.config.max_iters
+        );
+        assert!(cs.skeleton_builds < rs.skeleton_builds);
+        assert_eq!(cached.cg_trace.len(), cached.config.max_iters);
+
+        // Staleness only affects CG convergence speed, never what it
+        // converges to — the two fits must land in the same place.
+        let nll_c = cached.loss_trace.last().unwrap().1;
+        let nll_r = reference.loss_trace.last().unwrap().1;
+        assert!(
+            (nll_c - nll_r).abs() < 0.15 * nll_r.abs().max(1.0),
+            "final NLL diverged: cached={nll_c} reference={nll_r}"
+        );
+        assert!(
+            (cached.hyper.ell - reference.hyper.ell).abs()
+                < 0.25 * reference.hyper.ell + 0.1,
+            "ell diverged: {} vs {}",
+            cached.hyper.ell,
+            reference.hyper.ell
+        );
+        let pc = cached.predict_mean(&x);
+        let pr = reference.predict_mean(&x);
+        let scale = crate::util::variance(&y).sqrt();
+        assert!(crate::util::rmse(&pc, &pr) < 0.25 * scale);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 
 use crate::coordinator::operator::KernelOperator;
 use crate::linalg::{dot, Matrix};
-use crate::solvers::cg::{pcg, pcg_batch, CgOptions, CgResult};
+use crate::solvers::cg::{pcg, pcg_batch, CgOptions, CgResult, CgStats};
 use crate::solvers::slq::{slq_logdet, slq_logdet_precond, SlqOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
 
@@ -51,7 +51,9 @@ pub struct NllEstimate {
     pub logdet: f64,
     pub logdet_variance: f64,
     pub alpha: Vec<f64>,
-    pub cg_iterations: usize,
+    /// Convergence of the α solve (iterations + final residual) — column 0
+    /// of the block solve; feeds the preconditioner refresh controller.
+    pub cg_stats: CgStats,
 }
 
 /// Estimate Z̃(θ) for the current operator state. `precond = None` gives
@@ -91,8 +93,8 @@ pub fn estimate_nll(
         value,
         logdet: est.mean,
         logdet_variance: est.variance,
+        cg_stats: sol.stats(),
         alpha: sol.x,
-        cg_iterations: sol.iterations,
     }
 }
 
@@ -241,7 +243,7 @@ pub fn estimate_nll_grad(
         logdet: est.mean,
         logdet_variance: est.variance,
         alpha,
-        cg_iterations: sol.iterations[0],
+        cg_stats: sol.column_stats(0),
     };
     (nll, grad)
 }

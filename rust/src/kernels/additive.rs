@@ -255,6 +255,68 @@ pub fn gram_cross(
     m
 }
 
+/// Windows-summed cross Gram block `Σ_s K_s(X_I, X_J)` assembled in ONE
+/// parallel row sweep: each row accumulates every window's kernel entry
+/// in window order, which is entry-wise the same addition order as
+/// serially `add_assign`-ing per-window [`gram_cross`] blocks — so the
+/// result is bitwise identical to that loop while touching each output
+/// row exactly once. All pairs must share the same (rows, cols) shape.
+pub fn gram_cross_sum(
+    kernel: KernelFn,
+    pairs: &[(&WindowedPoints, &WindowedPoints)],
+    ell: f64,
+) -> Matrix {
+    let (na, nb) = (pairs[0].0.n, pairs[0].1.n);
+    for (wa, wb) in pairs {
+        assert_eq!(wa.d, wb.d);
+        assert_eq!((wa.n, wb.n), (na, nb), "gram_cross_sum: ragged pair shapes");
+    }
+    let mut m = Matrix::zeros(na, nb);
+    parallel::runtime().rows(&mut m.data, na, nb, |i, row| {
+        gram_cross_sum_row(kernel, pairs, ell, i, row);
+    });
+    m
+}
+
+/// Scoped-spawn reference for [`gram_cross_sum`] (same band geometry,
+/// per-call threads) — retained for the bitwise pool-vs-scoped tests.
+pub fn gram_cross_sum_scoped_ref(
+    kernel: KernelFn,
+    pairs: &[(&WindowedPoints, &WindowedPoints)],
+    ell: f64,
+) -> Matrix {
+    let (na, nb) = (pairs[0].0.n, pairs[0].1.n);
+    for (wa, wb) in pairs {
+        assert_eq!(wa.d, wb.d);
+        assert_eq!((wa.n, wb.n), (na, nb), "gram_cross_sum: ragged pair shapes");
+    }
+    let mut m = Matrix::zeros(na, nb);
+    parallel::scoped::rows(parallel::num_threads(), &mut m.data, na, nb, |i, row| {
+        gram_cross_sum_row(kernel, pairs, ell, i, row);
+    });
+    m
+}
+
+/// One output row of the windows-summed cross gram (shared by the pooled
+/// and scoped assemblies so both accumulate in the identical order).
+// lint: no_alloc
+fn gram_cross_sum_row(
+    kernel: KernelFn,
+    pairs: &[(&WindowedPoints, &WindowedPoints)],
+    ell: f64,
+    i: usize,
+    row: &mut [f64],
+) {
+    for (wa, wb) in pairs {
+        let d = wa.d;
+        let pi = &wa.pts[i * d..(i + 1) * d];
+        for (j, out) in row.iter_mut().enumerate() {
+            let pj = &wb.pts[j * d..(j + 1) * d];
+            *out += kernel.eval_r2(crate::linalg::dist2(pi, pj), ell);
+        }
+    }
+}
+
 /// Exact tiled MVM `out = K_s · v` for one windowed sub-kernel, computed
 /// on the fly (never materializes K_s). `deriv` selects ∂K_s/∂ℓ.
 pub fn dense_mvm(
@@ -521,5 +583,41 @@ mod tests {
                 assert!((cross[(i, j)] - full[(gi, gj)]).abs() < 1e-14);
             }
         }
+    }
+
+    #[test]
+    fn gram_cross_sum_matches_serial_add_assign_bitwise() {
+        // Three windows of a 6-feature problem, cross block of two
+        // disjoint index sets; the fused one-sweep assembly must equal the
+        // historical per-window gram_cross + add_assign loop bitwise, and
+        // so must its scoped-spawn reference.
+        let x = random_points(24, 6, 99);
+        let windows = [vec![0usize, 1], vec![2, 3], vec![4, 5]];
+        let idx_a: Vec<usize> = (0..9).collect();
+        let idx_b: Vec<usize> = (9..24).collect();
+        let subset = |w: &[usize], idx: &[usize]| {
+            let wp = WindowedPoints::extract(&x, w);
+            WindowedPoints {
+                n: idx.len(),
+                d: wp.d,
+                pts: idx.iter().flat_map(|&i| wp.point(i).to_vec()).collect(),
+            }
+        };
+        let wps: Vec<(WindowedPoints, WindowedPoints)> = windows
+            .iter()
+            .map(|w| (subset(w, &idx_a), subset(w, &idx_b)))
+            .collect();
+        let ell = 0.7;
+
+        let mut serial = Matrix::zeros(idx_a.len(), idx_b.len());
+        for (wa, wb) in &wps {
+            serial.add_assign(&gram_cross(KernelFn::Gaussian, wa, wb, ell));
+        }
+        let pairs: Vec<(&WindowedPoints, &WindowedPoints)> =
+            wps.iter().map(|(a, b)| (a, b)).collect();
+        let fused = gram_cross_sum(KernelFn::Gaussian, &pairs, ell);
+        assert_eq!(serial.data, fused.data, "fused sweep diverged from add_assign loop");
+        let scoped = gram_cross_sum_scoped_ref(KernelFn::Gaussian, &pairs, ell);
+        assert_eq!(fused.data, scoped.data, "pooled vs scoped gram_cross_sum diverged");
     }
 }

@@ -8,13 +8,38 @@
 //!   M = W Wᵀ,  W = [[L₁₁, 0], [E, G]],
 //! with E = A₂₁ L₁₁⁻ᵀ and Ŝ ≈ A₂₂ − E Eᵀ ≈ G Gᵀ, so that
 //!   M = [[A₁₁, A₁₂], [A₂₁, A₂₁A₁₁⁻¹A₁₂ + Ŝ]].
+//!
+//! The build is split into three hyperparameter tiers so the optimizer
+//! trajectory can amortize it (see `precond::lifecycle`):
+//!
+//! * [`AafnGeometry`] — hyperparameter-independent: landmarks, the
+//!   permutation, the KNN Schur pattern (kept in CSR form). Once per fit.
+//! * [`AafnSkeleton`] — ℓ-dependent numerics at *unit* σ: the landmark
+//!   gram `G₁₁`, the cross gram `G₂₁`, the unit kernel sums on the Schur
+//!   pattern, plus the eigendecomposition `G₁₁ = QΛQᵀ` and the projected
+//!   cross block `H = G₂₁Q`. Rebuilt only when ℓ drifts.
+//! * [`AafnPrecond::refresh`] — the σ-path: `A₁₁ = σ_f²G₁₁ + σ_ε²I` is
+//!   refactored (O(k³)) and the Schur values are rescaled through the
+//!   cached eigenbasis, `Ŝᵢⱼ = σ_f²·s̄ᵢⱼ + δᵢⱼσ_ε² − Σ_c Hᵢ_c w_c Hⱼ_c`
+//!   with `w_c = σ_f⁴/(σ_f²λ_c + σ_ε²)` (O(nnz·k)), then IC(0). No
+//!   kernel evaluation and no O(n·k²) triangular solve: the classic
+//!   `E = A₂₁L₁₁⁻ᵀ` is never materialized — the applies route through
+//!   `G₂₁` and `L₁₁` instead (`E y₁ = σ_f²G₂₁L₁₁⁻ᵀy₁`, …).
+//!
+//! [`AafnPrecond::build_with`] is exactly skeleton + refresh, so a
+//! cached-σ refresh is *bitwise identical* to a fresh build at the same
+//! ℓ; the legacy E-materializing algorithm survives in the test module as
+//! the independent numerical reference.
 
 use super::fps::merged_landmarks;
 use super::sparse::{knn_pattern, IcFactor, SparseLower};
-use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
+use crate::kernels::additive::{gram_cross_sum, gram_cross_sum_scoped_ref, WindowedPoints};
+use crate::kernels::{AdditiveKernel, KernelFn};
+use crate::linalg::eig::jacobi_eig;
 use crate::linalg::{Cholesky, Matrix};
 use crate::solvers::Precond;
-use crate::util::{FgpError, FgpResult};
+use crate::util::{parallel, FgpError, FgpResult};
+use std::sync::Arc;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AfnOptions {
@@ -32,21 +57,47 @@ impl Default for AfnOptions {
     }
 }
 
+impl AfnOptions {
+    /// Reject degenerate configurations up front instead of producing
+    /// empty landmark sets / zero-fill patterns downstream.
+    pub fn validate(&self) -> FgpResult<()> {
+        if self.k_per_window < 1 {
+            return Err(FgpError::InvalidArg(
+                "AAFN k_per_window must be >= 1".into(),
+            ));
+        }
+        if self.max_rank < 1 {
+            return Err(FgpError::InvalidArg("AAFN max_rank must be >= 1".into()));
+        }
+        if self.fill < 1 {
+            return Err(FgpError::InvalidArg("AAFN fill must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Hyperparameter-independent part of AAFN: landmark selection, the
-/// permutation, the KNN Schur pattern, and the per-window point subsets.
-/// Built once per dataset; reused across every Adam step.
+/// permutation, the KNN Schur pattern (both as per-row lists and as the
+/// CSR index arrays the refresh path reuses verbatim), and the per-window
+/// point subsets. Built once per dataset; reused across every Adam step.
 pub struct AafnGeometry {
     pub landmarks: Vec<usize>,
     pub rest: Vec<usize>,
     pub perm: Vec<usize>,
     pub iperm: Vec<usize>,
     pub pattern: Vec<Vec<usize>>,
+    /// CSR offsets of the lower-triangular Schur pattern (what
+    /// `SparseLower::from_pattern` would produce from `pattern`).
+    pub schur_row_ptr: Vec<usize>,
+    /// CSR column indices, ascending per row with the diagonal last.
+    pub schur_col_idx: Vec<usize>,
     /// Per window: (landmark subset, rest subset) of the windowed points.
     pub wps: Vec<(WindowedPoints, WindowedPoints)>,
 }
 
 impl AafnGeometry {
-    pub fn new(x: &Matrix, ak: &AdditiveKernel, opts: &AfnOptions) -> AafnGeometry {
+    pub fn new(x: &Matrix, ak: &AdditiveKernel, opts: &AfnOptions) -> FgpResult<AafnGeometry> {
+        opts.validate()?;
         let n = x.rows;
         let mut landmarks = merged_landmarks(x, &ak.windows, opts.k_per_window);
         landmarks.truncate(opts.max_rank.min(n.saturating_sub(1)).max(1));
@@ -70,6 +121,20 @@ impl AafnGeometry {
         let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
         let wp_rest_full = subset(&WindowedPoints::extract(x, &concat), &rest);
         let pattern = knn_pattern(&wp_rest_full, opts.fill.min(n2.saturating_sub(1)));
+        // Freeze the CSR view of the lower triangle once (same filtering
+        // and ordering as `SparseLower::from_pattern`) so every numeric
+        // refresh can fill values straight into a flat buffer.
+        let mut schur_row_ptr = Vec::with_capacity(n2 + 1);
+        let mut schur_col_idx = Vec::new();
+        schur_row_ptr.push(0);
+        for (i, cols) in pattern.iter().enumerate() {
+            let mut cs: Vec<usize> = cols.iter().copied().filter(|&j| j <= i).collect();
+            cs.sort_unstable();
+            cs.dedup();
+            assert_eq!(cs.last().copied(), Some(i), "row must include diagonal");
+            schur_col_idx.extend_from_slice(&cs);
+            schur_row_ptr.push(schur_col_idx.len());
+        }
         let wps = ak
             .windows
             .0
@@ -79,7 +144,164 @@ impl AafnGeometry {
                 (subset(&wp_all, &landmarks), subset(&wp_all, &rest))
             })
             .collect();
-        AafnGeometry { landmarks, rest, perm, iperm, pattern, wps }
+        Ok(AafnGeometry {
+            landmarks,
+            rest,
+            perm,
+            iperm,
+            pattern,
+            schur_row_ptr,
+            schur_col_idx,
+            wps,
+        })
+    }
+}
+
+/// ℓ-dependent numeric skeleton at unit σ: every kernel evaluation AAFN
+/// will ever need for this ℓ, plus the eigendecomposition of the unit
+/// landmark gram that turns σ-moves into O(k³ + nnz·k) refreshes.
+pub struct AafnSkeleton {
+    /// Lengthscale this skeleton was evaluated at.
+    pub ell: f64,
+    k: usize,
+    n2: usize,
+    /// Unit landmark gram `G₁₁ = Σ_s K_s(X₁, X₁)`, k×k.
+    g11: Matrix,
+    /// Unit cross gram `G₂₁ = Σ_s K_s(X₂, X₁)`, (n−k)×k.
+    g21: Matrix,
+    /// Unit kernel sums `Σ_s k_s(xᵢ, xⱼ)` on the CSR Schur pattern.
+    s22_unit: Vec<f64>,
+    /// Eigenvalues of `G₁₁` (ascending Jacobi order).
+    lam: Vec<f64>,
+    /// Projected cross block `H = G₂₁ Q` where `G₁₁ = QΛQᵀ`.
+    h: Matrix,
+}
+
+impl AafnSkeleton {
+    /// Parallel build through the persistent worker pool.
+    pub fn build(ak: &AdditiveKernel, ell: f64, geo: &AafnGeometry) -> AafnSkeleton {
+        Self::build_inner(ak, ell, geo, false)
+    }
+
+    /// Scoped-spawn reference build (identical band geometry, per-call
+    /// threads) — retained for the bitwise pool-vs-scoped tests per the
+    /// PR 8 convention.
+    pub fn build_scoped_ref(ak: &AdditiveKernel, ell: f64, geo: &AafnGeometry) -> AafnSkeleton {
+        Self::build_inner(ak, ell, geo, true)
+    }
+
+    fn build_inner(ak: &AdditiveKernel, ell: f64, geo: &AafnGeometry, scoped: bool) -> AafnSkeleton {
+        let k = geo.landmarks.len();
+        let n2 = geo.rest.len();
+        let nt = parallel::num_threads();
+        // Per-window gram fan-out, fused: one parallel sweep assembles the
+        // window-summed blocks (same entry-wise accumulation order as the
+        // historical per-window add_assign loop).
+        let lm_pairs: Vec<(&WindowedPoints, &WindowedPoints)> =
+            geo.wps.iter().map(|(lm, _)| (lm, lm)).collect();
+        let cross_pairs: Vec<(&WindowedPoints, &WindowedPoints)> =
+            geo.wps.iter().map(|(lm, rest)| (rest, lm)).collect();
+        let (g11, g21) = if scoped {
+            (
+                gram_cross_sum_scoped_ref(ak.kernel, &lm_pairs, ell),
+                gram_cross_sum_scoped_ref(ak.kernel, &cross_pairs, ell),
+            )
+        } else {
+            (
+                gram_cross_sum(ak.kernel, &lm_pairs, ell),
+                gram_cross_sum(ak.kernel, &cross_pairs, ell),
+            )
+        };
+
+        // Unit kernel sums on the ragged CSR Schur rows.
+        let rests: Vec<&WindowedPoints> = geo.wps.iter().map(|(_, rest)| rest).collect();
+        let mut s22_unit = vec![0.0f64; geo.schur_col_idx.len()];
+        let row_ptr = &geo.schur_row_ptr;
+        let col_idx = &geo.schur_col_idx;
+        let unit_body = |i: usize, out: &mut [f64]| {
+            let cols = &col_idx[row_ptr[i]..row_ptr[i + 1]];
+            schur_unit_row(ak.kernel, &rests, ell, i, cols, out);
+        };
+        if scoped {
+            parallel::scoped::ragged_rows(nt, &mut s22_unit, row_ptr, unit_body);
+        } else {
+            parallel::runtime().ragged_rows(&mut s22_unit, row_ptr, unit_body);
+        }
+
+        // Unit-gram eigendecomposition + projected cross block: the σ-path
+        // turns the Schur correction E Eᵀ into a weighted product of H
+        // rows, so no triangular solve ever touches n-sized data again.
+        let (lam, q) = jacobi_eig(&g11);
+        let mut h = Matrix::zeros(n2, k);
+        let h_body = |i: usize, row: &mut [f64]| {
+            let gi = g21.row(i);
+            for (c, out) in row.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for (m, &gim) in gi.iter().enumerate() {
+                    s += gim * q[(m, c)];
+                }
+                *out = s;
+            }
+        };
+        if scoped {
+            parallel::scoped::rows(nt, &mut h.data, n2, k, h_body);
+        } else {
+            parallel::runtime().rows(&mut h.data, n2, k, h_body);
+        }
+        AafnSkeleton { ell, k, n2, g11, g21, s22_unit, lam, h }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.k
+    }
+}
+
+/// One CSR row of the unit Schur kernel sums (shared by the pooled and
+/// scoped skeleton builds so both accumulate in the identical order).
+// lint: no_alloc
+fn schur_unit_row(
+    kernel: KernelFn,
+    rests: &[&WindowedPoints],
+    ell: f64,
+    i: usize,
+    cols: &[usize],
+    out: &mut [f64],
+) {
+    for (&j, out_t) in cols.iter().zip(out.iter_mut()) {
+        let mut s = 0.0;
+        for wp in rests {
+            s += kernel.eval_r2(crate::linalg::dist2(wp.point(i), wp.point(j)), ell);
+        }
+        *out_t = s;
+    }
+}
+
+/// One CSR row of the σ-rescaled Schur values:
+/// `σ_f²·s̄ᵢⱼ + δᵢⱼσ_ε² − Σ_c Hᵢ_c w_c Hⱼ_c` — the refresh hot path.
+// lint: no_alloc
+#[allow(clippy::too_many_arguments)]
+fn schur_refresh_row(
+    h: &Matrix,
+    wts: &[f64],
+    sigma_f2: f64,
+    sigma_eps2: f64,
+    i: usize,
+    cols: &[usize],
+    unit: &[f64],
+    out: &mut [f64],
+) {
+    let hi = h.row(i);
+    for ((&j, &u), out_t) in cols.iter().zip(unit).zip(out.iter_mut()) {
+        let hj = h.row(j);
+        let mut v = sigma_f2 * u;
+        if j == i {
+            v += sigma_eps2;
+        }
+        let mut low = 0.0;
+        for (c, &w) in wts.iter().enumerate() {
+            low += hi[c] * w * hj[c];
+        }
+        *out_t = v - low;
     }
 }
 
@@ -88,9 +310,11 @@ pub struct AafnPrecond {
     /// Permutation: landmark indices then the rest; perm[p] = original idx.
     perm: Vec<usize>,
     k: usize,
+    /// σ_f² of the current refresh — scales every implicit-E product.
+    sigma_f2: f64,
     l11: Cholesky,
-    /// E = A₂₁L₁₁⁻ᵀ, (n−k) × k row-major.
-    e: Matrix,
+    /// Shared ℓ-skeleton; the applies read `G₂₁` through it.
+    skel: Arc<AafnSkeleton>,
     schur: IcFactor,
 }
 
@@ -105,12 +329,13 @@ impl AafnPrecond {
         sigma_eps2: f64,
         opts: &AfnOptions,
     ) -> FgpResult<AafnPrecond> {
-        let geo = AafnGeometry::new(x, ak, opts);
+        let geo = AafnGeometry::new(x, ak, opts)?;
         Self::build_with(ak, ell, sigma_f2, sigma_eps2, &geo)
     }
 
     /// Rebuild the numeric factors for new hyperparameters over a cached
-    /// geometry — the per-Adam-step path.
+    /// geometry. Exactly skeleton + σ-refresh, so a lifecycle-cached
+    /// refresh at the same ℓ is bitwise identical to this fresh build.
     pub fn build_with(
         ak: &AdditiveKernel,
         ell: f64,
@@ -118,66 +343,81 @@ impl AafnPrecond {
         sigma_eps2: f64,
         geo: &AafnGeometry,
     ) -> FgpResult<AafnPrecond> {
-        let k = geo.landmarks.len();
-        let n2 = geo.rest.len();
-        let n = k + n2;
-        // Assemble A11 (k×k) and A21 (n2×k) from the additive kernel.
-        let mut a11 = Matrix::zeros(k, k);
-        let mut a21 = Matrix::zeros(n2, k);
-        for (wp_lm, wp_rest) in &geo.wps {
-            a11.add_assign(&gram_cross(ak.kernel, wp_lm, wp_lm, ell));
-            a21.add_assign(&gram_cross(ak.kernel, wp_rest, wp_lm, ell));
-        }
-        a11.scale(sigma_f2);
-        a21.scale(sigma_f2);
-        a11.add_diag(sigma_eps2);
+        let skel = Arc::new(AafnSkeleton::build(ak, ell, geo));
+        Self::refresh(&skel, geo, sigma_f2, sigma_eps2)
+    }
 
-        let l11 = match Cholesky::factor(&a11) {
-            Ok(l) => l,
+    /// The σ-path: refactor `A₁₁ = σ_f²G₁₁ + σ_ε²I` (O(k³)), rescale the
+    /// Schur values through the cached eigenbasis (O(nnz·k)), redo IC(0).
+    /// No kernel evaluations, no n×k triangular solve.
+    pub fn refresh(
+        skel: &Arc<AafnSkeleton>,
+        geo: &AafnGeometry,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+    ) -> FgpResult<AafnPrecond> {
+        let (k, n2) = (skel.k, skel.n2);
+        let n = k + n2;
+        let mut a11 = skel.g11.clone();
+        a11.scale(sigma_f2);
+        a11.add_diag(sigma_eps2);
+        // Total diagonal shift on top of σ_f²G₁₁ — feeds the Schur weights
+        // so the implicit E stays consistent with the factorized A₁₁.
+        let (l11, shift) = match Cholesky::factor(&a11) {
+            Ok(l) => (l, sigma_eps2),
             Err(_) => {
                 // Kernel blocks are PSD; σ_ε² keeps this PD except under
                 // extreme duplication — add jitter then.
-                let mut a = a11.clone();
-                a.add_diag(1e-10 + 1e-8 * sigma_f2);
-                Cholesky::factor(&a).map_err(|_| {
+                let jitter = 1e-10 + 1e-8 * sigma_f2;
+                a11.add_diag(jitter);
+                let l = Cholesky::factor(&a11).map_err(|_| {
                     FgpError::NotSpd(format!(
                         "AAFN landmark block A₁₁ (k = {k}) is not SPD even with jitter"
                     ))
-                })?
+                })?;
+                (l, sigma_eps2 + jitter)
             }
         };
 
-        // E = A21 · L11^{-T} ⇒ each row of E is the forward-solve of the
-        // corresponding row of A21 (Eᵀ = L11^{-1} A12).
-        let mut e = Matrix::zeros(n2, k);
-        {
-            let e_data = &mut e.data;
-            crate::util::parallel::runtime().rows(e_data, n2, k, |i, row| {
-                let sol = l11.solve_lower(a21.row(i));
-                row.copy_from_slice(&sol);
-            });
+        // Schur correction weights: E Eᵀ = H diag(σ_f⁴/(σ_f²λ_c + shift)) Hᵀ.
+        let mut wts = vec![0.0f64; k];
+        for (w, &l) in wts.iter_mut().zip(&skel.lam) {
+            *w = sigma_f2 * sigma_f2 / (sigma_f2 * l + shift);
         }
-
-        // Sparse Schur complement values on the cached pattern.
-        let kernel = ak.kernel;
-        let a22 = |i: usize, j: usize| -> f64 {
-            let mut s = 0.0;
-            for (_, wp_rest) in &geo.wps {
-                s += kernel
-                    .eval_r2(crate::linalg::dist2(wp_rest.point(i), wp_rest.point(j)), ell);
-            }
-            let mut v = sigma_f2 * s;
-            if i == j {
-                v += sigma_eps2;
-            }
-            v
-        };
-        let sp = SparseLower::from_pattern(n2, &geo.pattern, |i, j| {
-            a22(i, j) - crate::linalg::dot(e.row(i), e.row(j))
+        let row_ptr = &geo.schur_row_ptr;
+        let col_idx = &geo.schur_col_idx;
+        let mut vals = vec![0.0f64; skel.s22_unit.len()];
+        let sk = &**skel;
+        parallel::runtime().ragged_rows(&mut vals, row_ptr, |i, out| {
+            let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
+            schur_refresh_row(
+                &sk.h,
+                &wts,
+                sigma_f2,
+                sigma_eps2,
+                i,
+                &col_idx[lo..hi],
+                &sk.s22_unit[lo..hi],
+                out,
+            );
         });
+        let sp = SparseLower {
+            n: n2,
+            row_ptr: row_ptr.clone(),
+            col_idx: col_idx.clone(),
+            vals,
+        };
         let schur = sp.ic0()?;
 
-        Ok(AafnPrecond { n, perm: geo.perm.clone(), k, l11, e, schur })
+        Ok(AafnPrecond {
+            n,
+            perm: geo.perm.clone(),
+            k,
+            sigma_f2,
+            l11,
+            skel: Arc::clone(skel),
+            schur,
+        })
     }
 
     pub fn rank(&self) -> usize {
@@ -200,15 +440,20 @@ impl AafnPrecond {
         out
     }
 
-    /// y2 -= E y1 helper; returns (y1, y2) stacked result of W⁻¹ x (permuted).
+    /// Stacked result of W⁻¹x (permuted). The implicit-E product is
+    /// `E y₁ = σ_f² G₂₁ (L₁₁⁻ᵀ y₁)` — two k-sized solves plus one pass
+    /// over the cached cross gram, never a materialized E.
     fn w_solve_lower(&self, xp: &[f64]) -> Vec<f64> {
         let (x1, x2) = xp.split_at(self.k);
         let y1 = self.l11.solve_lower(x1);
+        let u = self.l11.solve_upper(&y1);
+        let g21 = &self.skel.g21;
+        let sf2 = self.sigma_f2;
         // t = x2 - E y1
         let mut t = x2.to_vec();
-        for i in 0..t.len() {
-            t[i] -= crate::linalg::dot(self.e.row(i), &y1);
-        }
+        parallel::runtime().rows(&mut t, x2.len(), 1, |i, out| {
+            out[0] -= sf2 * crate::linalg::dot(g21.row(i), &u);
+        });
         let y2 = self.schur.solve_lower(&t);
         let mut out = y1;
         out.extend(y2);
@@ -218,15 +463,12 @@ impl AafnPrecond {
     fn w_solve_upper(&self, xp: &[f64]) -> Vec<f64> {
         let (x1, x2) = xp.split_at(self.k);
         let y2 = self.schur.solve_upper(x2);
-        // t = x1 - Eᵀ y2
+        // t = x1 - Eᵀ y2, with Eᵀ y2 = σ_f² L₁₁⁻¹ (G₂₁ᵀ y2).
+        let v = self.skel.g21.matvec_t(&y2);
+        let w = self.l11.solve_lower(&v);
         let mut t = x1.to_vec();
-        for (i, &y2i) in y2.iter().enumerate() {
-            if y2i != 0.0 {
-                let row = self.e.row(i);
-                for (c, tc) in t.iter_mut().enumerate() {
-                    *tc -= row[c] * y2i;
-                }
-            }
+        for (tc, wc) in t.iter_mut().zip(&w) {
+            *tc -= self.sigma_f2 * wc;
         }
         let y1 = self.l11.solve_upper(&t);
         let mut out = y1;
@@ -243,13 +485,10 @@ impl AafnPrecond {
                 y1[i] += self.l11.l[(kk, i)] * x1[kk];
             }
         }
-        for (i, &x2i) in x2.iter().enumerate() {
-            if x2i != 0.0 {
-                let row = self.e.row(i);
-                for (c, yc) in y1.iter_mut().enumerate() {
-                    *yc += row[c] * x2i;
-                }
-            }
+        let v = self.skel.g21.matvec_t(x2);
+        let w = self.l11.solve_lower(&v);
+        for (yc, wc) in y1.iter_mut().zip(&w) {
+            *yc += self.sigma_f2 * wc;
         }
         let y2 = self.schur.mul_upper(x2);
         y1.extend(y2);
@@ -296,6 +535,7 @@ impl Precond for AafnPrecond {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::additive::gram_cross;
     use crate::kernels::{KernelFn, Windows};
     use crate::solvers::cg::{cg, pcg, CgOptions};
     use crate::util::rng::Rng;
@@ -312,6 +552,59 @@ mod tests {
             Windows(vec![vec![0, 1, 2], vec![3, 4, 5]]),
         );
         (x, ak)
+    }
+
+    /// The pre-skeleton algorithm, kept verbatim as the numerical
+    /// reference: assemble A₁₁/A₂₁ per window, materialize E = A₂₁L₁₁⁻ᵀ
+    /// row by row, evaluate the Schur values as A₂₂ − EEᵀ on the pattern.
+    /// Returns (L₁₁, schur values on the CSR pattern, total A₁₁ shift).
+    fn reference_factors(
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+        geo: &AafnGeometry,
+    ) -> (Cholesky, Vec<f64>) {
+        let k = geo.landmarks.len();
+        let n2 = geo.rest.len();
+        let mut a11 = Matrix::zeros(k, k);
+        let mut a21 = Matrix::zeros(n2, k);
+        for (wp_lm, wp_rest) in &geo.wps {
+            a11.add_assign(&gram_cross(ak.kernel, wp_lm, wp_lm, ell));
+            a21.add_assign(&gram_cross(ak.kernel, wp_rest, wp_lm, ell));
+        }
+        a11.scale(sigma_f2);
+        a21.scale(sigma_f2);
+        a11.add_diag(sigma_eps2);
+        let l11 = match Cholesky::factor(&a11) {
+            Ok(l) => l,
+            Err(_) => {
+                let mut a = a11.clone();
+                a.add_diag(1e-10 + 1e-8 * sigma_f2);
+                Cholesky::factor(&a).unwrap()
+            }
+        };
+        let mut e = Matrix::zeros(n2, k);
+        for i in 0..n2 {
+            e.row_mut(i).copy_from_slice(&l11.solve_lower(a21.row(i)));
+        }
+        let kernel = ak.kernel;
+        let a22 = |i: usize, j: usize| -> f64 {
+            let mut s = 0.0;
+            for (_, wp_rest) in &geo.wps {
+                s += kernel
+                    .eval_r2(crate::linalg::dist2(wp_rest.point(i), wp_rest.point(j)), ell);
+            }
+            let mut v = sigma_f2 * s;
+            if i == j {
+                v += sigma_eps2;
+            }
+            v
+        };
+        let sp = SparseLower::from_pattern(n2, &geo.pattern, |i, j| {
+            a22(i, j) - crate::linalg::dot(e.row(i), e.row(j))
+        });
+        (l11, sp.vals)
     }
 
     #[test]
@@ -422,5 +715,114 @@ mod tests {
             (got - exact).abs() < 0.15 * exact.abs().max(10.0),
             "logdet {got} vs exact {exact}"
         );
+    }
+
+    #[test]
+    fn afn_options_validation_rejects_degenerate_configs() {
+        let (x, ak) = setup(40, 11);
+        for bad in [
+            AfnOptions { k_per_window: 0, max_rank: 40, fill: 8 },
+            AfnOptions { k_per_window: 10, max_rank: 0, fill: 8 },
+            AfnOptions { k_per_window: 10, max_rank: 40, fill: 0 },
+        ] {
+            assert!(matches!(bad.validate(), Err(FgpError::InvalidArg(_))));
+            // And the error propagates through the build entry points.
+            assert!(matches!(
+                AafnGeometry::new(&x, &ak, &bad),
+                Err(FgpError::InvalidArg(_))
+            ));
+            assert!(matches!(
+                AafnPrecond::build(&x, &ak, 1.0, 0.5, 0.01, &bad),
+                Err(FgpError::InvalidArg(_))
+            ));
+        }
+        assert!(AfnOptions::default().validate().is_ok());
+    }
+
+    #[test]
+    fn sigma_refresh_is_bitwise_identical_to_fresh_build() {
+        // One skeleton, many σ-moves: the refresh must equal a from-scratch
+        // build_with at the same ℓ *bitwise* (they share the code path by
+        // construction — this pins that invariant).
+        let (x, ak) = setup(150, 13);
+        let opts = AfnOptions { k_per_window: 15, max_rank: 40, fill: 8 };
+        let geo = AafnGeometry::new(&x, &ak, &opts).unwrap();
+        let ell = 1.3;
+        let skel = Arc::new(AafnSkeleton::build(&ak, ell, &geo));
+        let mut rng = Rng::new(14);
+        let v = rng.normal_vec(150);
+        for (sf2, se2) in [(0.5, 0.01), (1.7, 0.01), (0.5, 0.2), (3.0, 1e-4)] {
+            let cached = AafnPrecond::refresh(&skel, &geo, sf2, se2).unwrap();
+            let fresh = AafnPrecond::build_with(&ak, ell, sf2, se2, &geo).unwrap();
+            assert_eq!(cached.l11.l.data, fresh.l11.l.data, "L11 diverged at σ=({sf2},{se2})");
+            assert_eq!(cached.schur.l.vals, fresh.schur.l.vals, "Ŝ diverged");
+            assert_eq!(cached.solve(&v), fresh.solve(&v), "solve diverged");
+            assert_eq!(cached.mul_upper(&v), fresh.mul_upper(&v), "mul_upper diverged");
+            assert_eq!(cached.logdet(), fresh.logdet(), "logdet diverged");
+        }
+    }
+
+    #[test]
+    fn skeleton_refresh_matches_legacy_reference() {
+        // The eig-weighted σ-path must reproduce the legacy materialized-E
+        // algorithm. The two differ only by the Jacobi eigendecomposition
+        // of the k×k unit gram (off-norm tol ~1e-14·‖G₁₁‖_F), so the Schur
+        // values agree to ~κ(A₁₁)·ε — far below IC(0)'s own approximation.
+        let (x, ak) = setup(150, 17);
+        let opts = AfnOptions { k_per_window: 15, max_rank: 40, fill: 8 };
+        let geo = AafnGeometry::new(&x, &ak, &opts).unwrap();
+        for (ell, sf2, se2) in [(1.0, 0.5, 0.01), (2.2, 1.3, 0.1)] {
+            let skel = Arc::new(AafnSkeleton::build(&ak, ell, &geo));
+            let fast = AafnPrecond::refresh(&skel, &geo, sf2, se2).unwrap();
+            let (l11_ref, vals_ref) = reference_factors(&ak, ell, sf2, se2, &geo);
+            assert_eq!(fast.l11.l.data, l11_ref.l.data, "L11 must match exactly");
+            // Pre-IC(0) Schur values — rebuild them the fast way to compare.
+            let shift = se2;
+            let mut wts = vec![0.0f64; skel.k];
+            for (w, &l) in wts.iter_mut().zip(&skel.lam) {
+                *w = sf2 * sf2 / (sf2 * l + shift);
+            }
+            for i in 0..geo.rest.len() {
+                let (lo, hi) = (geo.schur_row_ptr[i], geo.schur_row_ptr[i + 1]);
+                let mut out = vec![0.0; hi - lo];
+                schur_refresh_row(
+                    &skel.h,
+                    &wts,
+                    sf2,
+                    se2,
+                    i,
+                    &geo.schur_col_idx[lo..hi],
+                    &skel.s22_unit[lo..hi],
+                    &mut out,
+                );
+                for (t, &got) in out.iter().enumerate() {
+                    assert!(
+                        (got - vals_ref[lo + t]).abs() < 1e-8,
+                        "schur val ({i},{t}): {got} vs {}",
+                        vals_ref[lo + t]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skeleton_pooled_build_matches_scoped_reference_bitwise() {
+        let (x, ak) = setup(150, 19);
+        let opts = AfnOptions { k_per_window: 15, max_rank: 40, fill: 8 };
+        let geo = AafnGeometry::new(&x, &ak, &opts).unwrap();
+        let pooled = AafnSkeleton::build(&ak, 1.4, &geo);
+        let scoped = AafnSkeleton::build_scoped_ref(&ak, 1.4, &geo);
+        assert_eq!(pooled.g11.data, scoped.g11.data, "G11 diverged");
+        assert_eq!(pooled.g21.data, scoped.g21.data, "G21 diverged");
+        assert_eq!(pooled.s22_unit, scoped.s22_unit, "unit Schur sums diverged");
+        assert_eq!(pooled.lam, scoped.lam, "eigenvalues diverged");
+        assert_eq!(pooled.h.data, scoped.h.data, "projected cross block diverged");
+        // And downstream: refreshed preconditioners act identically.
+        let mut rng = Rng::new(20);
+        let v = rng.normal_vec(150);
+        let a = AafnPrecond::refresh(&Arc::new(pooled), &geo, 0.7, 0.02).unwrap();
+        let b = AafnPrecond::refresh(&Arc::new(scoped), &geo, 0.7, 0.02).unwrap();
+        assert_eq!(a.solve(&v), b.solve(&v));
     }
 }

@@ -1,0 +1,466 @@
+//! Preconditioner lifecycle: amortizes the AAFN / Nyström build across
+//! the optimizer trajectory (the paper's "preconditioning accelerates
+//! hyperparameter tuning" claim, made real for the fit loop).
+//!
+//! Three tiers of work, from once-per-fit to once-per-step:
+//!
+//! 1. **geometry** — landmarks, permutation, KNN pattern (built once);
+//! 2. **skeleton** — unit-σ kernel numerics at the current ℓ (rebuilt
+//!    when ℓ drifts past [`RefreshPolicy::ell_drift_tol`], or when the
+//!    observed PCG convergence regresses past
+//!    [`RefreshPolicy::cg_regression_ratio`] against the post-rebuild
+//!    baseline);
+//! 3. **σ-refresh** — rescale + refactor for (σ_f², σ_ε²) moves, which is
+//!    exact (bitwise identical to a fresh build at the skeleton's ℓ).
+//!
+//! The controller is deliberately conservative-correct: a refresh at the
+//! skeleton's ℓ is *exact*, so the only approximation introduced by the
+//! cache is evaluating the preconditioner at a *stale ℓ* — which never
+//! changes what PCG converges to, only how fast. The CG feedback loop
+//! ([`PrecondCache::observe`]) bounds that slowdown: if the α-solve
+//! residual (or iteration count) degrades past the configured ratio, the
+//! next [`PrecondCache::prepare`] forces a skeleton rebuild and resets
+//! the baseline.
+
+use super::afn::{AafnGeometry, AafnPrecond, AafnSkeleton, AfnOptions};
+use super::nystrom::{NystromGeometry, NystromPrecond, NystromSkeleton};
+use crate::kernels::AdditiveKernel;
+use crate::linalg::Matrix;
+use crate::solvers::cg::CgStats;
+use crate::solvers::Precond;
+use crate::util::FgpResult;
+use std::sync::Arc;
+
+/// When to tolerate a stale ℓ-skeleton and when to force a rebuild.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RefreshPolicy {
+    /// Rebuild the skeleton when `|ℓ − ℓ_skel| / ℓ_skel` exceeds this.
+    /// `0.0` rebuilds on every ℓ change (the exact reference policy).
+    pub ell_drift_tol: f64,
+    /// Rebuild when the observed α-solve convergence regresses past this
+    /// ratio against the post-rebuild baseline: iterations strictly above
+    /// `ratio × baseline`, or (when both runs hit the iteration cap) a
+    /// final residual above `ratio × baseline`. `f64::INFINITY` disables
+    /// the feedback trigger.
+    pub cg_regression_ratio: f64,
+}
+
+impl Default for RefreshPolicy {
+    fn default() -> Self {
+        Self { ell_drift_tol: 0.1, cg_regression_ratio: 1.5 }
+    }
+}
+
+impl RefreshPolicy {
+    /// The exact reference policy: any ℓ move rebuilds the skeleton, so
+    /// every step's preconditioner is bitwise identical to a from-scratch
+    /// build — what the fit loop did before the lifecycle layer existed.
+    pub fn rebuild_every_step() -> Self {
+        Self { ell_drift_tol: 0.0, cg_regression_ratio: f64::INFINITY }
+    }
+}
+
+/// Counters of what the cache actually did over a fit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LifecycleStats {
+    /// ℓ-skeleton (re)builds — the expensive tier (kernel evaluations).
+    pub skeleton_builds: usize,
+    /// Skeleton rebuilds forced by the CG feedback trigger (subset of
+    /// `skeleton_builds`).
+    pub forced_by_cg: usize,
+    /// σ-refreshes (O(k³ + nnz·k), no kernel evaluations).
+    pub sigma_refreshes: usize,
+    /// Steps served by the existing factorization unchanged.
+    pub reuses: usize,
+}
+
+enum CacheInner {
+    None,
+    Aafn {
+        geo: AafnGeometry,
+        skel: Option<Arc<AafnSkeleton>>,
+        current: Option<AafnPrecond>,
+    },
+    Nystrom {
+        geo: NystromGeometry,
+        skel: Option<NystromSkeleton>,
+        current: Option<NystromPrecond>,
+    },
+}
+
+/// Hyperparameter-aware preconditioner cache driven by [`RefreshPolicy`].
+/// One instance lives across a `GpModel::fit` call; each Adam step calls
+/// [`prepare`](Self::prepare) with the current hyperparameters, reads the
+/// factorization via [`precond`](Self::precond), and feeds the observed
+/// α-solve convergence back through [`observe`](Self::observe).
+pub struct PrecondCache {
+    inner: CacheInner,
+    policy: RefreshPolicy,
+    stats: LifecycleStats,
+    /// (σ_f², σ_ε²) of the current factorization.
+    cur_sigma: Option<(f64, f64)>,
+    /// First CG observation after the latest skeleton build.
+    baseline: Option<CgStats>,
+    /// Most recent CG observation.
+    last: Option<CgStats>,
+}
+
+impl PrecondCache {
+    /// No preconditioning (identity); every call is a no-op.
+    pub fn none() -> PrecondCache {
+        Self::from_inner(CacheInner::None, RefreshPolicy::default())
+    }
+
+    /// AAFN cache: builds the geometry tier up front.
+    pub fn aafn(
+        x: &Matrix,
+        ak: &AdditiveKernel,
+        opts: &AfnOptions,
+        policy: RefreshPolicy,
+    ) -> FgpResult<PrecondCache> {
+        let geo = AafnGeometry::new(x, ak, opts)?;
+        Ok(Self::from_inner(
+            CacheInner::Aafn { geo, skel: None, current: None },
+            policy,
+        ))
+    }
+
+    /// Nyström cache: hoists the FPS landmark selection up front.
+    pub fn nystrom(
+        x: &Matrix,
+        ak: &AdditiveKernel,
+        rank: usize,
+        policy: RefreshPolicy,
+    ) -> FgpResult<PrecondCache> {
+        let geo = NystromGeometry::new(x, ak, rank)?;
+        Ok(Self::from_inner(
+            CacheInner::Nystrom { geo, skel: None, current: None },
+            policy,
+        ))
+    }
+
+    fn from_inner(inner: CacheInner, policy: RefreshPolicy) -> PrecondCache {
+        PrecondCache {
+            inner,
+            policy,
+            stats: LifecycleStats::default(),
+            cur_sigma: None,
+            baseline: None,
+            last: None,
+        }
+    }
+
+    /// Should the skeleton at `skel_ell` be rebuilt for the requested ℓ,
+    /// given the CG feedback collected since the last rebuild?
+    /// Returns (rebuild, forced_by_cg). Associated fn over copied fields
+    /// so it can be consulted while `self.inner` is mutably borrowed.
+    fn skeleton_stale(
+        policy: RefreshPolicy,
+        baseline: Option<CgStats>,
+        last: Option<CgStats>,
+        skel_ell: f64,
+        ell: f64,
+    ) -> (bool, bool) {
+        let drift = (ell - skel_ell).abs() / skel_ell.abs().max(f64::MIN_POSITIVE);
+        if drift > policy.ell_drift_tol {
+            return (true, false);
+        }
+        let (Some(base), Some(last)) = (baseline, last) else {
+            return (false, false);
+        };
+        let ratio = policy.cg_regression_ratio;
+        let iter_regressed = (last.iterations as f64) > ratio * base.iterations as f64;
+        // Residual comparison only means anything when both solves spent
+        // the same iteration budget (training CG typically saturates its
+        // cap, so the residual is the live signal there).
+        let resid_regressed = last.iterations == base.iterations
+            && last.final_residual > ratio * base.final_residual;
+        if iter_regressed || resid_regressed {
+            return (true, true);
+        }
+        (false, false)
+    }
+
+    /// Make the cached factorization current for (ℓ, σ_f², σ_ε²),
+    /// spending as little as the policy allows: reuse → σ-refresh →
+    /// skeleton rebuild.
+    pub fn prepare(
+        &mut self,
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+    ) -> FgpResult<()> {
+        match &mut self.inner {
+            CacheInner::None => Ok(()),
+            CacheInner::Aafn { geo, skel, current } => {
+                let (rebuild, forced) = match skel.as_ref() {
+                    None => (true, false),
+                    Some(s) => Self::skeleton_stale(
+                        self.policy,
+                        self.baseline,
+                        self.last,
+                        s.ell,
+                        ell,
+                    ),
+                };
+                if rebuild {
+                    *skel = Some(Arc::new(AafnSkeleton::build(ak, ell, geo)));
+                    *current = None;
+                    self.cur_sigma = None;
+                    self.baseline = None;
+                    self.last = None;
+                    self.stats.skeleton_builds += 1;
+                    if forced {
+                        self.stats.forced_by_cg += 1;
+                    }
+                }
+                let sk = skel.as_ref().ok_or_else(|| {
+                    crate::util::FgpError::Numeric("AAFN skeleton missing after rebuild".into())
+                })?;
+                if current.is_some() && self.cur_sigma == Some((sigma_f2, sigma_eps2)) {
+                    self.stats.reuses += 1;
+                    return Ok(());
+                }
+                *current = Some(AafnPrecond::refresh(sk, geo, sigma_f2, sigma_eps2)?);
+                self.cur_sigma = Some((sigma_f2, sigma_eps2));
+                self.stats.sigma_refreshes += 1;
+                Ok(())
+            }
+            CacheInner::Nystrom { geo, skel, current } => {
+                let (rebuild, forced) = match skel.as_ref() {
+                    None => (true, false),
+                    Some(s) => Self::skeleton_stale(
+                        self.policy,
+                        self.baseline,
+                        self.last,
+                        s.ell,
+                        ell,
+                    ),
+                };
+                if rebuild {
+                    *skel = Some(NystromSkeleton::build(ak, ell, geo));
+                    *current = None;
+                    self.cur_sigma = None;
+                    self.baseline = None;
+                    self.last = None;
+                    self.stats.skeleton_builds += 1;
+                    if forced {
+                        self.stats.forced_by_cg += 1;
+                    }
+                }
+                let sk = skel.as_ref().ok_or_else(|| {
+                    crate::util::FgpError::Numeric("Nyström skeleton missing after rebuild".into())
+                })?;
+                if current.is_some() && self.cur_sigma == Some((sigma_f2, sigma_eps2)) {
+                    self.stats.reuses += 1;
+                    return Ok(());
+                }
+                *current = Some(NystromPrecond::refresh(sk, sigma_f2, sigma_eps2)?);
+                self.cur_sigma = Some((sigma_f2, sigma_eps2));
+                self.stats.sigma_refreshes += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// The current factorization (None for the identity / no-precond kind).
+    pub fn precond(&self) -> Option<&dyn Precond> {
+        match &self.inner {
+            CacheInner::None => None,
+            CacheInner::Aafn { current, .. } => {
+                current.as_ref().map(|p| p as &dyn Precond)
+            }
+            CacheInner::Nystrom { current, .. } => {
+                current.as_ref().map(|p| p as &dyn Precond)
+            }
+        }
+    }
+
+    /// Feed back the observed α-solve convergence under the prepared
+    /// preconditioner. The first observation after a skeleton build
+    /// becomes the regression baseline.
+    pub fn observe(&mut self, stats: CgStats) {
+        if self.baseline.is_none() {
+            self.baseline = Some(stats);
+        }
+        self.last = Some(stats);
+    }
+
+    pub fn stats(&self) -> LifecycleStats {
+        self.stats
+    }
+
+    pub fn policy(&self) -> RefreshPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, Windows};
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, AdditiveKernel) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 4);
+        for v in &mut x.data {
+            *v = rng.uniform_in(0.0, 3.0);
+        }
+        let ak = AdditiveKernel::new(
+            KernelFn::Gaussian,
+            Windows(vec![vec![0, 1], vec![2, 3]]),
+        );
+        (x, ak)
+    }
+
+    fn opts() -> AfnOptions {
+        AfnOptions { k_per_window: 12, max_rank: 30, fill: 6 }
+    }
+
+    fn solve_probe(cache: &PrecondCache, v: &[f64]) -> Vec<f64> {
+        cache.precond().unwrap().solve(v)
+    }
+
+    #[test]
+    fn sigma_moves_refresh_and_equal_fresh_builds_bitwise() {
+        let (x, ak) = setup(90, 31);
+        let mut cache =
+            PrecondCache::aafn(&x, &ak, &opts(), RefreshPolicy::default()).unwrap();
+        let geo = AafnGeometry::new(&x, &ak, &opts()).unwrap();
+        let mut rng = Rng::new(32);
+        let v = rng.normal_vec(90);
+        let ell = 1.1;
+        for (i, (sf2, se2)) in [(0.5, 0.02), (0.9, 0.02), (0.9, 0.1)].into_iter().enumerate()
+        {
+            cache.prepare(&ak, ell, sf2, se2).unwrap();
+            let fresh = AafnPrecond::build_with(&ak, ell, sf2, se2, &geo).unwrap();
+            assert_eq!(
+                solve_probe(&cache, &v),
+                fresh.solve(&v),
+                "σ-move {i} diverged from fresh build"
+            );
+        }
+        let s = cache.stats();
+        assert_eq!(s.skeleton_builds, 1, "σ-only moves must not rebuild the skeleton");
+        assert_eq!(s.sigma_refreshes, 3);
+    }
+
+    #[test]
+    fn repeated_hypers_reuse_without_refactorization() {
+        let (x, ak) = setup(90, 33);
+        let mut cache =
+            PrecondCache::aafn(&x, &ak, &opts(), RefreshPolicy::default()).unwrap();
+        for _ in 0..4 {
+            cache.prepare(&ak, 1.0, 0.5, 0.05).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.skeleton_builds, 1);
+        assert_eq!(s.sigma_refreshes, 1);
+        assert_eq!(s.reuses, 3);
+    }
+
+    #[test]
+    fn ell_moves_force_rebuild_and_match_fresh_builds() {
+        // With zero drift tolerance every ℓ change rebuilds, and each
+        // prepared state is bitwise a fresh build at those hypers.
+        let (x, ak) = setup(90, 35);
+        let mut cache =
+            PrecondCache::aafn(&x, &ak, &opts(), RefreshPolicy::rebuild_every_step())
+                .unwrap();
+        let geo = AafnGeometry::new(&x, &ak, &opts()).unwrap();
+        let mut rng = Rng::new(36);
+        let v = rng.normal_vec(90);
+        let trajectory = [
+            (1.0, 0.5, 0.05),
+            (1.05, 0.5, 0.05), // ℓ move
+            (1.05, 0.7, 0.05), // σ move
+            (1.2, 0.7, 0.02),  // mixed move
+            (1.2, 0.7, 0.02),  // no move
+        ];
+        for &(ell, sf2, se2) in &trajectory {
+            cache.prepare(&ak, ell, sf2, se2).unwrap();
+            let fresh = AafnPrecond::build_with(&ak, ell, sf2, se2, &geo).unwrap();
+            assert_eq!(solve_probe(&cache, &v), fresh.solve(&v));
+        }
+        let s = cache.stats();
+        assert_eq!(s.skeleton_builds, 3, "one initial + two ℓ moves");
+        assert_eq!(s.sigma_refreshes, 4, "rebuilds re-refresh; plus the σ-only move");
+        assert_eq!(s.reuses, 1);
+    }
+
+    #[test]
+    fn mixed_trajectory_under_tolerance_stays_exact_at_skeleton_ell() {
+        // Default policy: small ℓ drift is absorbed (factorization stays at
+        // the skeleton's ℓ — stale but exact for its own hypers), while a
+        // big jump rebuilds at the new ℓ.
+        let (x, ak) = setup(90, 37);
+        let mut cache =
+            PrecondCache::aafn(&x, &ak, &opts(), RefreshPolicy::default()).unwrap();
+        let geo = AafnGeometry::new(&x, &ak, &opts()).unwrap();
+        let mut rng = Rng::new(38);
+        let v = rng.normal_vec(90);
+
+        cache.prepare(&ak, 1.0, 0.5, 0.05).unwrap();
+        // 5% drift < 10% tolerance: reuse the ℓ=1.0 skeleton.
+        cache.prepare(&ak, 1.05, 0.6, 0.05).unwrap();
+        let stale = AafnPrecond::build_with(&ak, 1.0, 0.6, 0.05, &geo).unwrap();
+        assert_eq!(solve_probe(&cache, &v), stale.solve(&v));
+        assert_eq!(cache.stats().skeleton_builds, 1);
+        // 50% drift: rebuild at the new ℓ.
+        cache.prepare(&ak, 1.5, 0.6, 0.05).unwrap();
+        let fresh = AafnPrecond::build_with(&ak, 1.5, 0.6, 0.05, &geo).unwrap();
+        assert_eq!(solve_probe(&cache, &v), fresh.solve(&v));
+        assert_eq!(cache.stats().skeleton_builds, 2);
+    }
+
+    #[test]
+    fn cg_regression_feedback_forces_rebuild() {
+        let (x, ak) = setup(90, 39);
+        let policy = RefreshPolicy { ell_drift_tol: 10.0, cg_regression_ratio: 1.5 };
+        let mut cache = PrecondCache::aafn(&x, &ak, &opts(), policy).unwrap();
+        cache.prepare(&ak, 1.0, 0.5, 0.05).unwrap();
+        // Healthy baseline, then a collapse in convergence quality.
+        cache.observe(CgStats { iterations: 10, final_residual: 1e-6 });
+        cache.observe(CgStats { iterations: 10, final_residual: 1e-3 });
+        // Huge drift tolerance would absorb the ℓ move; the CG feedback
+        // must force the rebuild anyway.
+        cache.prepare(&ak, 3.0, 0.5, 0.05).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.skeleton_builds, 2);
+        assert_eq!(s.forced_by_cg, 1);
+        // Baseline resets: the next observation becomes the new baseline.
+        cache.observe(CgStats { iterations: 10, final_residual: 2e-3 });
+        cache.prepare(&ak, 3.0, 0.5, 0.05).unwrap();
+        assert_eq!(cache.stats().skeleton_builds, 2, "fresh baseline, no trigger");
+    }
+
+    #[test]
+    fn nystrom_cache_matches_fresh_builds_bitwise() {
+        let (x, ak) = setup(80, 41);
+        let mut cache =
+            PrecondCache::nystrom(&x, &ak, 20, RefreshPolicy::rebuild_every_step()).unwrap();
+        let mut rng = Rng::new(42);
+        let v = rng.normal_vec(80);
+        for &(ell, sf2, se2) in
+            &[(0.8, 0.5, 0.05), (0.8, 0.9, 0.05), (1.4, 0.9, 0.02)]
+        {
+            cache.prepare(&ak, ell, sf2, se2).unwrap();
+            let fresh = NystromPrecond::build(&x, &ak, ell, sf2, se2, 20).unwrap();
+            assert_eq!(solve_probe(&cache, &v), fresh.solve(&v));
+        }
+        let s = cache.stats();
+        assert_eq!(s.skeleton_builds, 2, "initial + one ℓ move");
+        assert_eq!(s.sigma_refreshes, 3);
+    }
+
+    #[test]
+    fn none_cache_is_inert() {
+        let (_, ak) = setup(10, 43);
+        let mut cache = PrecondCache::none();
+        cache.prepare(&ak, 1.0, 0.5, 0.05).unwrap();
+        assert!(cache.precond().is_none());
+        assert_eq!(cache.stats(), LifecycleStats::default());
+    }
+}

@@ -1,13 +1,16 @@
 //! Preconditioners for the regularized additive kernel matrix
 //! K̂ = σ_f²ΣK_s + σ_ε²I (paper §2.3): the additive AFN (AAFN) and a plain
 //! Nyström baseline, plus the FPS landmark selector and the sparse IC(0)
-//! machinery for the bounded-fill Schur complement.
+//! machinery for the bounded-fill Schur complement. The [`lifecycle`]
+//! layer amortizes these builds across an optimizer trajectory.
 
 pub mod afn;
 pub mod fps;
+pub mod lifecycle;
 pub mod nystrom;
 pub mod sparse;
 
-pub use afn::{AafnGeometry, AafnPrecond, AfnOptions};
+pub use afn::{AafnGeometry, AafnPrecond, AafnSkeleton, AfnOptions};
 pub use fps::farthest_point_sampling;
-pub use nystrom::NystromPrecond;
+pub use lifecycle::{LifecycleStats, PrecondCache, RefreshPolicy};
+pub use nystrom::{NystromGeometry, NystromPrecond, NystromSkeleton};

@@ -5,10 +5,70 @@
 //! same preconditioned-SLQ machinery as AAFN applies.
 
 use super::fps::farthest_point_sampling;
-use crate::kernels::additive::{gram_cross, AdditiveKernel, WindowedPoints};
+use crate::kernels::additive::{gram_cross_sum, AdditiveKernel, WindowedPoints};
 use crate::linalg::{eig::jacobi_eig, Cholesky, Matrix};
 use crate::solvers::Precond;
 use crate::util::{FgpError, FgpResult};
+
+/// Hyperparameter-independent part of the Nyström baseline, mirroring
+/// [`super::AafnGeometry`]: the FPS landmark selection and the per-window
+/// point subsets. Built once per fit instead of on every Adam step.
+pub struct NystromGeometry {
+    pub landmarks: Vec<usize>,
+    /// Per window: (all points, landmark subset) of the windowed points.
+    wps: Vec<(WindowedPoints, WindowedPoints)>,
+}
+
+impl NystromGeometry {
+    pub fn new(x: &Matrix, ak: &AdditiveKernel, rank: usize) -> FgpResult<NystromGeometry> {
+        if rank < 1 {
+            return Err(FgpError::InvalidArg("Nyström rank must be >= 1".into()));
+        }
+        let n = x.rows;
+        let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
+        let wp_full = WindowedPoints::extract(x, &concat);
+        let landmarks = farthest_point_sampling(&wp_full, rank.min(n));
+        let k = landmarks.len();
+        let wps = ak
+            .windows
+            .0
+            .iter()
+            .map(|w| {
+                let wp = WindowedPoints::extract(x, w);
+                let mut pts = Vec::with_capacity(k * wp.d);
+                for &i in &landmarks {
+                    pts.extend_from_slice(wp.point(i));
+                }
+                let wp_lm = WindowedPoints { n: k, d: wp.d, pts };
+                (wp, wp_lm)
+            })
+            .collect();
+        Ok(NystromGeometry { landmarks, wps })
+    }
+}
+
+/// ℓ-dependent numerics at unit σ: the window-summed cross and landmark
+/// grams. A σ-refresh only rescales these — no kernel evaluations.
+pub struct NystromSkeleton {
+    /// Lengthscale this skeleton was evaluated at.
+    pub ell: f64,
+    knm_unit: Matrix,
+    kmm_unit: Matrix,
+}
+
+impl NystromSkeleton {
+    pub fn build(ak: &AdditiveKernel, ell: f64, geo: &NystromGeometry) -> NystromSkeleton {
+        let cross_pairs: Vec<(&WindowedPoints, &WindowedPoints)> =
+            geo.wps.iter().map(|(wp, lm)| (wp, lm)).collect();
+        let lm_pairs: Vec<(&WindowedPoints, &WindowedPoints)> =
+            geo.wps.iter().map(|(_, lm)| (lm, lm)).collect();
+        NystromSkeleton {
+            ell,
+            knm_unit: gram_cross_sum(ak.kernel, &cross_pairs, ell),
+            kmm_unit: gram_cross_sum(ak.kernel, &lm_pairs, ell),
+        }
+    }
+}
 
 pub struct NystromPrecond {
     n: usize,
@@ -23,6 +83,9 @@ pub struct NystromPrecond {
 }
 
 impl NystromPrecond {
+    /// Build from raw data: geometry (FPS) + skeleton (unit grams) +
+    /// σ-refresh, so a lifecycle-cached refresh at the same ℓ is bitwise
+    /// identical to this fresh build.
     pub fn build(
         x: &Matrix,
         ak: &AdditiveKernel,
@@ -31,27 +94,37 @@ impl NystromPrecond {
         sigma_eps2: f64,
         rank: usize,
     ) -> FgpResult<NystromPrecond> {
-        let n = x.rows;
-        let concat: Vec<usize> = ak.windows.0.iter().flatten().copied().collect();
-        let wp_full = WindowedPoints::extract(x, &concat);
-        let landmarks = farthest_point_sampling(&wp_full, rank.min(n));
-        let k = landmarks.len();
+        let geo = NystromGeometry::new(x, ak, rank)?;
+        Self::build_with(ak, ell, sigma_f2, sigma_eps2, &geo)
+    }
+
+    /// Rebuild the numeric factors over a cached geometry.
+    pub fn build_with(
+        ak: &AdditiveKernel,
+        ell: f64,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+        geo: &NystromGeometry,
+    ) -> FgpResult<NystromPrecond> {
+        let skel = NystromSkeleton::build(ak, ell, geo);
+        Self::refresh(&skel, sigma_f2, sigma_eps2)
+    }
+
+    /// The σ-path over a cached ℓ-skeleton: rescale the unit grams by
+    /// σ_f², then rerun the (kernel-evaluation-free) factor pipeline.
+    /// Still O(n·k²) for the U solve + eigendecomposition, but skips the
+    /// FPS pass and every kernel evaluation.
+    pub fn refresh(
+        skel: &NystromSkeleton,
+        sigma_f2: f64,
+        sigma_eps2: f64,
+    ) -> FgpResult<NystromPrecond> {
+        let n = skel.knm_unit.rows;
+        let k = skel.knm_unit.cols;
 
         // K̃_nm and K̃_mm over all windows (σ_f² applied once).
-        let mut knm = Matrix::zeros(n, k);
-        let mut kmm = Matrix::zeros(k, k);
-        for w in &ak.windows.0 {
-            let wp = WindowedPoints::extract(x, w);
-            let wp_lm = {
-                let mut pts = Vec::with_capacity(k * wp.d);
-                for &i in &landmarks {
-                    pts.extend_from_slice(wp.point(i));
-                }
-                WindowedPoints { n: k, d: wp.d, pts }
-            };
-            knm.add_assign(&gram_cross(ak.kernel, &wp, &wp_lm, ell));
-            kmm.add_assign(&gram_cross(ak.kernel, &wp_lm, &wp_lm, ell));
-        }
+        let mut knm = skel.knm_unit.clone();
+        let mut kmm = skel.kmm_unit.clone();
         knm.scale(sigma_f2);
         kmm.scale(sigma_f2);
         kmm.add_diag(1e-10 + 1e-8 * sigma_f2); // jitter
@@ -231,6 +304,40 @@ mod tests {
         m.add_diag(0.1);
         let want = Cholesky::factor(&m).unwrap().logdet();
         assert!((p.logdet() - want).abs() < 1e-6, "{} vs {want}", p.logdet());
+    }
+
+    #[test]
+    fn refresh_is_bitwise_identical_to_fresh_build() {
+        // Geometry + skeleton once, σ-moves refreshed: every factor must
+        // equal the historical from-scratch build bitwise (scaling the
+        // cached unit gram sums commutes with the old scale-after-sum).
+        let (x, ak) = setup(70, 9);
+        let geo = NystromGeometry::new(&x, &ak, 20).unwrap();
+        let ell = 0.9;
+        let skel = NystromSkeleton::build(&ak, ell, &geo);
+        let mut rng = Rng::new(10);
+        let v = rng.normal_vec(70);
+        for (sf2, se2) in [(0.5, 0.05), (2.0, 0.05), (0.5, 0.3)] {
+            let cached = NystromPrecond::refresh(&skel, sf2, se2).unwrap();
+            let fresh = NystromPrecond::build(&x, &ak, ell, sf2, se2, 20).unwrap();
+            assert_eq!(cached.u.data, fresh.u.data, "U diverged at σ=({sf2},{se2})");
+            assert_eq!(cached.logdet(), fresh.logdet(), "logdet diverged");
+            assert_eq!(cached.solve(&v), fresh.solve(&v), "solve diverged");
+            assert_eq!(cached.mul_upper(&v), fresh.mul_upper(&v), "mul_upper diverged");
+        }
+    }
+
+    #[test]
+    fn zero_rank_is_rejected() {
+        let (x, ak) = setup(30, 11);
+        assert!(matches!(
+            NystromGeometry::new(&x, &ak, 0),
+            Err(FgpError::InvalidArg(_))
+        ));
+        assert!(matches!(
+            NystromPrecond::build(&x, &ak, 1.0, 0.5, 0.05, 0),
+            Err(FgpError::InvalidArg(_))
+        ));
     }
 
     #[test]

@@ -20,6 +20,17 @@ impl Default for CgOptions {
     }
 }
 
+/// Compact convergence statistics of one (P)CG solve — the observability
+/// hook the preconditioner refresh controller feeds on (see
+/// `precond::lifecycle`): iteration count plus the last residual norm,
+/// which keeps carrying signal after the count saturates at `max_iter`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CgStats {
+    pub iterations: usize,
+    /// Absolute ‖r‖ at exit (last entry of the residual history).
+    pub final_residual: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct CgResult {
     pub x: Vec<f64>,
@@ -27,6 +38,15 @@ pub struct CgResult {
     pub converged: bool,
     /// ‖r_k‖ history (index 0 = initial residual).
     pub residuals: Vec<f64>,
+}
+
+impl CgResult {
+    pub fn stats(&self) -> CgStats {
+        CgStats {
+            iterations: self.iterations,
+            final_residual: self.residuals.last().copied().unwrap_or(0.0),
+        }
+    }
 }
 
 /// Plain CG with zero initial guess.
@@ -97,6 +117,30 @@ pub struct BatchCgResult {
     pub converged: Vec<bool>,
     /// Per-column ‖r_k‖ history (index 0 = initial residual).
     pub residuals: Vec<Vec<f64>>,
+}
+
+impl BatchCgResult {
+    /// Stats of one column of the block solve (column 0 is the α solve in
+    /// the NLL pipeline — a deterministic RHS, so its trajectory is the
+    /// controller's cleanest staleness signal).
+    pub fn column_stats(&self, c: usize) -> CgStats {
+        CgStats {
+            iterations: self.iterations[c],
+            final_residual: self.residuals[c].last().copied().unwrap_or(0.0),
+        }
+    }
+
+    /// Worst-column aggregate: max iteration count and max final residual
+    /// across the block.
+    pub fn stats(&self) -> CgStats {
+        let mut agg = CgStats { iterations: 0, final_residual: 0.0 };
+        for c in 0..self.iterations.len() {
+            let s = self.column_stats(c);
+            agg.iterations = agg.iterations.max(s.iterations);
+            agg.final_residual = agg.final_residual.max(s.final_residual);
+        }
+        agg
+    }
 }
 
 /// Plain block CG with zero initial guess.
@@ -358,5 +402,31 @@ mod tests {
         let res = cg(&a, &b, &CgOptions { tol: 1e-14, max_iter: 3, relative: true });
         assert!(!res.converged);
         assert_eq!(res.iterations, 3);
+    }
+
+    #[test]
+    fn cg_stats_report_last_residual_and_worst_column() {
+        let n = 24;
+        let a = spd(n, 21, 1.0);
+        let mut rng = Rng::new(22);
+        let opts = CgOptions { tol: 1e-10, max_iter: 5, relative: true };
+        let single = cg(&a, &rng.normal_vec(n), &opts);
+        let s = single.stats();
+        assert_eq!(s.iterations, single.iterations);
+        assert_eq!(s.final_residual, *single.residuals.last().unwrap());
+
+        // Batch: a hard column (capped at max_iter) next to a zero column
+        // (0 iterations); the aggregate must report the worst of both.
+        let mut b = Matrix::zeros(2, n);
+        b.row_mut(0).copy_from_slice(&rng.normal_vec(n));
+        let res = cg_batch(&a, &b, &opts);
+        let c0 = res.column_stats(0);
+        assert_eq!(c0.iterations, res.iterations[0]);
+        assert_eq!(c0.final_residual, *res.residuals[0].last().unwrap());
+        let c1 = res.column_stats(1);
+        assert_eq!(c1.iterations, 0);
+        let agg = res.stats();
+        assert_eq!(agg.iterations, c0.iterations.max(c1.iterations));
+        assert_eq!(agg.final_residual, c0.final_residual.max(c1.final_residual));
     }
 }

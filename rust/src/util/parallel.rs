@@ -549,6 +549,55 @@ impl Runtime {
         });
     }
 
+    /// Mutate disjoint *variable-width* row-slices of a flat buffer in
+    /// parallel: row `r` is `buf[offsets[r]..offsets[r + 1]]` (CSR-style
+    /// `row_ptr` offsets, `offsets.len() == rows + 1`). Band geometry
+    /// mirrors [`Runtime::rows`]: `per = rows.div_ceil(nt)` contiguous
+    /// rows per band, so [`scoped::ragged_rows`] is bitwise-comparable.
+    pub fn ragged_rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        &self,
+        buf: &mut [T],
+        offsets: &[usize],
+        f: F,
+    ) {
+        assert!(!offsets.is_empty(), "ragged_rows: offsets must have len rows + 1");
+        let rows = offsets.len() - 1;
+        assert_eq!(offsets[0], 0);
+        assert_eq!(offsets[rows], buf.len());
+        if rows == 0 {
+            return;
+        }
+        let nt = self.lanes.min(rows);
+        if nt <= 1 {
+            for r in 0..rows {
+                f(r, &mut buf[offsets[r]..offsets[r + 1]]);
+            }
+            return;
+        }
+        let per = rows.div_ceil(nt);
+        let mut bands: Vec<Mutex<(usize, &mut [T])>> = Vec::with_capacity(nt);
+        let mut rest = buf;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let hi = (row0 + per).min(rows);
+            let (band, tail) = rest.split_at_mut(offsets[hi] - offsets[row0]);
+            rest = tail;
+            bands.push(Mutex::new((row0, band)));
+            row0 = hi;
+        }
+        let bands_ref = &bands;
+        let fr = &f;
+        self.banded(bands.len(), move |bi| {
+            let mut guard = lock_unpoisoned(&bands_ref[bi]);
+            let (base, band) = &mut *guard;
+            let lo = offsets[*base];
+            let hi = (*base + per).min(rows);
+            for r in *base..hi {
+                fr(r, &mut band[offsets[r] - lo..offsets[r + 1] - lo]);
+            }
+        });
+    }
+
     /// Parallel map over `0..n` producing a `Vec<T>`.
     pub fn map<T: Send + Clone + Default, F: Fn(usize) -> T + Sync>(
         &self,
@@ -752,6 +801,50 @@ pub mod scoped {
                     }
                 });
                 row0 += take;
+            }
+        });
+    }
+
+    /// Scoped-spawn [`super::Runtime::ragged_rows`] reference with an
+    /// explicit thread count: identical band geometry
+    /// (`per = rows.div_ceil(nt)` contiguous rows), per-call threads.
+    pub fn ragged_rows<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+        nt: usize,
+        buf: &mut [T],
+        offsets: &[usize],
+        f: F,
+    ) {
+        assert!(!offsets.is_empty(), "ragged_rows: offsets must have len rows + 1");
+        let rows = offsets.len() - 1;
+        assert_eq!(offsets[0], 0);
+        assert_eq!(offsets[rows], buf.len());
+        if rows == 0 {
+            return;
+        }
+        let nt = nt.max(1).min(rows);
+        if nt <= 1 {
+            for r in 0..rows {
+                f(r, &mut buf[offsets[r]..offsets[r + 1]]);
+            }
+            return;
+        }
+        let per = rows.div_ceil(nt);
+        let fr = &f;
+        std::thread::scope(|s| {
+            let mut rest = buf;
+            let mut row0 = 0usize;
+            while row0 < rows {
+                let hi = (row0 + per).min(rows);
+                let (band, tail) = rest.split_at_mut(offsets[hi] - offsets[row0]);
+                rest = tail;
+                let base = row0;
+                s.spawn(move || {
+                    let lo = offsets[base];
+                    for r in base..hi {
+                        fr(r, &mut band[offsets[r] - lo..offsets[r + 1] - lo]);
+                    }
+                });
+                row0 = hi;
             }
         });
     }
@@ -1011,6 +1104,57 @@ mod tests {
             let m_pool = rt.map(257, |i| (i as f64 + 0.5).sqrt());
             let m_ref = scoped::map(nt, 257, |i| (i as f64 + 0.5).sqrt());
             assert_eq!(m_pool, m_ref, "map diverged at nt={nt}");
+        }
+    }
+
+    #[test]
+    fn ragged_rows_covers_every_slice_with_correct_extent() {
+        // CSR-style offsets with growing widths, including an empty row.
+        let widths = [3usize, 0, 1, 7, 2, 5, 4, 6, 1, 3, 2, 8];
+        let mut offsets = vec![0usize];
+        for w in widths {
+            offsets.push(offsets.last().copied().unwrap_or(0) + w);
+        }
+        let total = *offsets.last().unwrap();
+        for nt in [1usize, 2, 3, 5] {
+            let rt = Runtime::new(nt);
+            let mut buf = vec![0.0f64; total];
+            rt.ragged_rows(&mut buf, &offsets, |r, row| {
+                assert_eq!(row.len(), widths[r], "row {r} extent");
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = (r * 100 + c) as f64;
+                }
+            });
+            for r in 0..widths.len() {
+                for c in 0..widths[r] {
+                    assert_eq!(buf[offsets[r] + c], (r * 100 + c) as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_rows_matches_scoped_baseline_bitwise() {
+        let widths = [5usize, 2, 9, 0, 4, 4, 11, 1, 3, 6, 2, 7, 5];
+        let mut offsets = vec![0usize];
+        for w in widths {
+            offsets.push(offsets.last().copied().unwrap_or(0) + w);
+        }
+        let total = *offsets.last().unwrap();
+        let fill = |r: usize, row: &mut [f64]| {
+            let mut acc = 0.0f64;
+            for (c, v) in row.iter_mut().enumerate() {
+                acc += ((r * 13 + c) as f64 * 0.07).sin();
+                *v = acc;
+            }
+        };
+        for nt in [1usize, 2, 3, 5] {
+            let rt = Runtime::new(nt);
+            let mut a = vec![0.0f64; total];
+            let mut b = vec![0.0f64; total];
+            rt.ragged_rows(&mut a, &offsets, fill);
+            scoped::ragged_rows(nt, &mut b, &offsets, fill);
+            assert_eq!(a, b, "ragged_rows diverged at nt={nt}");
         }
     }
 
