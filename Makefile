@@ -6,6 +6,11 @@
 # BENCH_precond.json from PR 1 / PR 6 / PR 8 / PR 9 onward.
 # `make miri` / `make tsan` are nightly-gated sanitizer lanes and skip
 # gracefully when the toolchain is missing.
+#
+# Observability (PR 10): `fourier-gp train ... --metrics-out <path>`
+# writes the fit's phase-scoped metrics snapshot (counters, span timers,
+# histograms; DESIGN.md "Observability") as JSON; the benches print the
+# same per-phase breakdowns in their BENCH summaries.
 
 CARGO ?= cargo
 
@@ -14,8 +19,9 @@ CARGO ?= cargo
 all: test
 
 # Full local gate: formatting, clippy with warnings denied, the invariant
-# lint (panic-freedom, no-alloc hot paths, determinism, unsafe hygiene —
-# see DESIGN.md), the lint's own fixture tests, then tier-1 tests.
+# lint (panic-freedom, no-alloc hot paths, determinism, unsafe hygiene,
+# no raw spawns, static metric names — see DESIGN.md), the lint's own
+# fixture tests, then tier-1 tests.
 ci:
 	$(CARGO) fmt --check
 	$(CARGO) clippy --all-targets -- -D warnings

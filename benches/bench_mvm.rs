@@ -7,7 +7,8 @@
 use fourier_gp::coordinator::experiments::mvm_scaling;
 use fourier_gp::coordinator::mvm::{build_sub_mvm, EngineKind, NfftRustMvm, SubKernelMvm};
 use fourier_gp::coordinator::operator::KernelOperator;
-use fourier_gp::gp::nll::{estimate_nll_grad, NllOptions};
+use fourier_gp::gp::nll::{estimate_nll_grad_with, NllOptions};
+use fourier_gp::util::metrics::MetricsRegistry;
 use fourier_gp::kernels::additive::{WindowedPoints, Windows};
 use fourier_gp::kernels::KernelFn;
 use fourier_gp::linalg::Matrix;
@@ -115,17 +116,30 @@ fn nll_grad_accounting(n: usize) -> Json {
             )
         })
         .collect();
-    let op = KernelOperator::new(subs, 0.5, 0.05);
+    let mut op = KernelOperator::new(subs, 0.5, 0.05);
+    let reg = MetricsRegistry::new();
+    op.set_metrics(&reg);
     let opts = NllOptions::default();
     let t0 = std::time::Instant::now();
-    let (nll, _grad) = estimate_nll_grad(&op, None, &y, &opts);
+    let (nll, _grad) = estimate_nll_grad_with(&op, None, &y, &opts, &reg);
     let secs = t0.elapsed().as_secs_f64();
+    let snap = reg.snapshot();
     let columns = op.mvms_performed();
     let traversals = op.traversals_performed();
     println!(
         "  columns applied = {columns}, traversals = {traversals} \
          (seed-equivalent serial path: {columns} traversals), {secs:.3}s, Z̃={:.3}",
         nll.value
+    );
+    println!(
+        "  per-phase: nfft spread/fft/gather = {}/{}/{}  nfft.apply spans = {} ({:.3}s)  cg iters = {}  slq probes = {}",
+        snap.counter("nfft.spread"),
+        snap.counter("nfft.fft"),
+        snap.counter("nfft.gather"),
+        snap.span_calls("nfft.apply"),
+        snap.span_nanos("nfft.apply") as f64 * 1e-9,
+        snap.counter("solver.cg.iterations"),
+        snap.counter("solver.slq.probes"),
     );
     Json::obj(vec![
         ("n", Json::Num(n as f64)),
@@ -135,6 +149,21 @@ fn nll_grad_accounting(n: usize) -> Json {
         ("operator_traversals", Json::Num(traversals as f64)),
         ("seed_equivalent_traversals", Json::Num(columns as f64)),
         ("seconds", Json::Num(secs)),
+        ("nfft_spreads", Json::Num(snap.counter("nfft.spread") as f64)),
+        ("nfft_ffts", Json::Num(snap.counter("nfft.fft") as f64)),
+        ("nfft_gathers", Json::Num(snap.counter("nfft.gather") as f64)),
+        ("nfft_apply_spans", Json::Num(snap.span_calls("nfft.apply") as f64)),
+        (
+            "nfft_apply_seconds",
+            Json::Num(snap.span_nanos("nfft.apply") as f64 * 1e-9),
+        ),
+        (
+            "cg_seconds",
+            Json::Num(snap.span_nanos("solver.cg") as f64 * 1e-9),
+        ),
+        ("cg_iterations", Json::Num(snap.counter("solver.cg.iterations") as f64)),
+        ("slq_probes", Json::Num(snap.counter("solver.slq.probes") as f64)),
+        ("lanczos_steps", Json::Num(snap.counter("solver.lanczos.steps") as f64)),
     ])
 }
 

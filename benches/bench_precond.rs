@@ -128,7 +128,7 @@ fn run_fit(
     cfg.refresh = policy;
     cfg.loss_every = 0;
     let trained = GpModel::new(cfg).fit(x, y).expect("fit");
-    let s = trained.precond_stats;
+    let s = trained.precond_stats();
     println!(
         "  fit[{label}]: {:7.3}s  skel={} σ={} reuse={}  final CG={}@{:.2e}",
         trained.train_seconds,
@@ -152,6 +152,25 @@ fn run_fit(
         ("forced_by_cg", Json::Num(s.forced_by_cg as f64)),
         ("pcg_iterations", Json::Arr(iters)),
         ("pcg_final_residuals", Json::Arr(resids)),
+        // Per-phase breakdown from the fit's own metrics snapshot: where
+        // the wall time actually went, not just the end-to-end clock.
+        (
+            "seconds_precond_prepare",
+            Json::Num(trained.metrics.span_nanos("precond.prepare") as f64 * 1e-9),
+        ),
+        (
+            "seconds_cg",
+            Json::Num(trained.metrics.span_nanos("solver.cg") as f64 * 1e-9),
+        ),
+        (
+            "seconds_nll_grad",
+            Json::Num(trained.metrics.span_nanos("gp.nll_grad") as f64 * 1e-9),
+        ),
+        (
+            "total_cg_iterations",
+            Json::Num(trained.metrics.counter("solver.cg.iterations") as f64),
+        ),
+        ("mvms", Json::Num(trained.mvms() as f64)),
     ]);
     (rec, secs)
 }

@@ -82,7 +82,7 @@ fn main() {
             trained.loss_trace.last().map(|x| x.1).unwrap_or(f64::NAN),
             rmse,
             trained.train_seconds,
-            trained.mvms
+            trained.mvms()
         );
         rmses.push(rmse);
     }

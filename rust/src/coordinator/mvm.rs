@@ -11,6 +11,7 @@ use crate::kernels::additive::{dense_mvm, dense_mvm_batch, WindowedPoints};
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
 use crate::nfft::{Fastsum, NfftParams};
+use crate::util::metrics::MetricsRegistry;
 use crate::util::{FgpError, FgpResult};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +83,11 @@ pub trait SubKernelMvm: Send + Sync {
         let res = self.apply_batch(v, deriv);
         out.data.copy_from_slice(&res.data);
     }
+
+    /// Route the engine's internal instrumentation (NFFT transform
+    /// counters, `nfft.apply` spans) to `reg`. Default: no-op — engines
+    /// without internal phases have nothing to report.
+    fn set_metrics(&mut self, _reg: &MetricsRegistry) {}
 
     /// Take (and clear) a deferred engine fault. The apply signatures are
     /// infallible, so engines that can fail at apply time (the PJRT
@@ -192,6 +198,9 @@ impl SubKernelMvm for NfftRustMvm {
     }
     fn set_ell(&mut self, ell: f64) {
         self.fastsum.set_ell(ell * self.scale);
+    }
+    fn set_metrics(&mut self, reg: &MetricsRegistry) {
+        self.fastsum.set_metrics(reg);
     }
     fn apply_batch(&self, v: &Matrix, deriv: bool) -> Matrix {
         let mut out = self.fastsum.apply_batch(v, deriv);

@@ -5,23 +5,38 @@
 use super::mvm::SubKernelMvm;
 use crate::linalg::Matrix;
 use crate::solvers::LinOp;
+use crate::util::metrics::{Counter, MetricsRegistry};
 use crate::util::FgpResult;
-use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Pre-registered coordinator counters, looked up once so the hot
+/// counting sites are single atomic adds (no name lookup per MVM).
+struct CoordPulse {
+    /// `coordinator.mvm` — operator·vector products, batch-aware: counts
+    /// applied *columns*, so single and batched paths report comparable
+    /// totals (Fig. 1 / Fig. 5 complexity reporting).
+    mvms: Counter,
+    /// `coordinator.traversal` — sweeps over the window structure,
+    /// however many columns ride along. Batched/fused paths do the same
+    /// column work in fewer traversals — this is the number the batching
+    /// refactor drives down.
+    traversals: Counter,
+}
+
+impl CoordPulse {
+    fn from_registry(reg: &MetricsRegistry) -> Self {
+        Self {
+            mvms: reg.counter("coordinator.mvm"),
+            traversals: reg.counter("coordinator.traversal"),
+        }
+    }
+}
 
 pub struct KernelOperator {
     pub subs: Vec<Box<dyn SubKernelMvm>>,
     pub sigma_f2: f64,
     pub sigma_eps2: f64,
     n: usize,
-    /// Operator·vector product counter, batch-aware: counts applied
-    /// *columns*, so single and batched paths report comparable totals
-    /// (Fig. 1 / Fig. 5 complexity reporting).
-    pub mvm_count: AtomicUsize,
-    /// Operator *traversals*: one per sweep over the window structure,
-    /// however many columns ride along. batched/fused paths do the same
-    /// column work in fewer traversals — this is the number the batching
-    /// refactor drives down.
-    pub traversal_count: AtomicUsize,
+    pulse: CoordPulse,
 }
 
 impl KernelOperator {
@@ -31,18 +46,31 @@ impl KernelOperator {
         for s in &subs {
             assert_eq!(s.n(), n);
         }
+        // A private enabled registry by default, so the MVM/traversal
+        // accounting works out of the box (pinned by the counter tests);
+        // `set_metrics` rebinds the counters into a caller-owned registry.
+        let pulse = CoordPulse::from_registry(&MetricsRegistry::new());
         Self {
             subs,
             sigma_f2,
             sigma_eps2,
             n,
-            mvm_count: AtomicUsize::new(0),
-            traversal_count: AtomicUsize::new(0),
+            pulse,
         }
     }
 
     pub fn num_windows(&self) -> usize {
         self.subs.len()
+    }
+
+    /// Rebind the coordinator counters (and every engine's internal
+    /// instrumentation) into `reg`. Counts accumulated in the previous
+    /// registry stay there — callers install metrics before driving work.
+    pub fn set_metrics(&mut self, reg: &MetricsRegistry) {
+        self.pulse = CoordPulse::from_registry(reg);
+        for s in &mut self.subs {
+            s.set_metrics(reg);
+        }
     }
 
     pub fn set_hyper(&mut self, ell: f64, sigma_f2: f64, sigma_eps2: f64) {
@@ -55,8 +83,8 @@ impl KernelOperator {
 
     /// y = σ_f² Σ_s K_s v  (the kernel part, no noise term).
     pub fn kernel_mvm(&self, v: &[f64]) -> Vec<f64> {
-        self.mvm_count.fetch_add(1, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.incr();
+        self.pulse.traversals.incr();
         let mut acc = vec![0.0; self.n];
         for s in &self.subs {
             let y = s.apply(v, false);
@@ -72,8 +100,8 @@ impl KernelOperator {
 
     /// y = (∂K̂/∂ℓ) v = σ_f² Σ_s K_s^der v.
     pub fn deriv_ell_mvm(&self, v: &[f64]) -> Vec<f64> {
-        self.mvm_count.fetch_add(1, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.incr();
+        self.pulse.traversals.incr();
         let mut acc = vec![0.0; self.n];
         for s in &self.subs {
             let y = s.apply(v, true);
@@ -128,16 +156,16 @@ impl KernelOperator {
     /// one traversal, `v.rows` columns.
     pub fn kernel_mvm_batch(&self, v: &Matrix) -> Matrix {
         assert_eq!(v.cols, self.n);
-        self.mvm_count.fetch_add(v.rows, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.add(v.rows as u64);
+        self.pulse.traversals.incr();
         self.window_sum_batch(v, false)
     }
 
     /// Y = (∂K̂/∂ℓ) V over an RHS block: one traversal, `v.rows` columns.
     pub fn deriv_ell_mvm_batch(&self, v: &Matrix) -> Matrix {
         assert_eq!(v.cols, self.n);
-        self.mvm_count.fetch_add(v.rows, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.add(v.rows as u64);
+        self.pulse.traversals.incr();
         self.window_sum_batch(v, true)
     }
 
@@ -147,8 +175,8 @@ impl KernelOperator {
     /// operator products per RHS — but a single traversal.
     pub fn kernel_and_deriv_mvm_batch(&self, v: &Matrix) -> (Matrix, Matrix) {
         assert_eq!(v.cols, self.n);
-        self.mvm_count.fetch_add(2 * v.rows, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.add(2 * v.rows as u64);
+        self.pulse.traversals.incr();
         let (mut acc_k, mut acc_d) = if self.subs.len() == 1 {
             self.subs[0].apply_batch_pair(v)
         } else {
@@ -206,11 +234,11 @@ impl KernelOperator {
     }
 
     pub fn mvms_performed(&self) -> usize {
-        self.mvm_count.load(Ordering::Relaxed)
+        self.pulse.mvms.value() as usize
     }
 
     pub fn traversals_performed(&self) -> usize {
-        self.traversal_count.load(Ordering::Relaxed)
+        self.pulse.traversals.value() as usize
     }
 }
 
@@ -229,8 +257,8 @@ impl LinOp for KernelOperator {
         assert_eq!(x.cols, self.n);
         assert_eq!(y.cols, self.n);
         assert_eq!(x.rows, y.rows);
-        self.mvm_count.fetch_add(x.rows, Ordering::Relaxed);
-        self.traversal_count.fetch_add(1, Ordering::Relaxed);
+        self.pulse.mvms.add(x.rows as u64);
+        self.pulse.traversals.incr();
         // σ_f² Σ_s K_s X straight into y, then the σ_ε² ridge in place: the
         // CG inner loop calls this every iteration, so no product buffer is
         // allocated per apply.
@@ -366,6 +394,23 @@ mod tests {
         let _ = op.kernel_and_deriv_mvm_batch(&v);
         assert_eq!(op.mvms_performed(), 16);
         assert_eq!(op.traversals_performed(), 3);
+    }
+
+    #[test]
+    fn set_metrics_routes_counts_into_caller_registry() {
+        use crate::util::metrics::MetricsRegistry;
+        let (mut op, _, _) = make_operator(20, 21, 1.0, 0.5, 0.01);
+        let reg = MetricsRegistry::new();
+        op.set_metrics(&reg);
+        let v = vec![1.0; 20];
+        let _ = op.apply_vec(&v);
+        let _ = op.kernel_mvm_batch(&Matrix::from_rows(&[v.clone(), v.clone()]));
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("coordinator.mvm"), 3);
+        assert_eq!(snap.counter("coordinator.traversal"), 2);
+        // The accessors read the same counters.
+        assert_eq!(op.mvms_performed(), 3);
+        assert_eq!(op.traversals_performed(), 2);
     }
 
     #[test]

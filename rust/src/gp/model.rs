@@ -4,7 +4,7 @@
 
 use super::adam::Adam;
 use super::hyper::{Hyper, RawHyper};
-use super::nll::{estimate_nll_grad, NllOptions};
+use super::nll::{estimate_nll_grad_with, NllOptions};
 use crate::coordinator::mvm::{build_sub_mvm, EngineKind, SubKernelMvm};
 use crate::coordinator::operator::KernelOperator;
 use crate::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
@@ -12,8 +12,9 @@ use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
 use crate::nfft::NfftParams;
 use crate::precond::{AfnOptions, LifecycleStats, PrecondCache, RefreshPolicy};
-use crate::solvers::cg::{cg_batch, pcg, CgOptions};
+use crate::solvers::cg::{pcg_batch_with, pcg_with, CgOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
+use crate::util::metrics::{MetricsRegistry, MetricsSnapshot};
 use crate::util::FgpResult;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -75,13 +76,14 @@ pub struct TrainedGp {
     /// K̂⁻¹Y at the final hyperparameters (prediction weights).
     pub alpha: Vec<f64>,
     pub x: Matrix,
-    pub mvms: usize,
     pub train_seconds: f64,
-    /// What the preconditioner cache actually did over training
-    /// (skeleton rebuilds vs. σ-refreshes vs. straight reuses).
-    pub precond_stats: LifecycleStats,
     /// Per-step α-solve convergence: (iteration, CG iterations, final ‖r‖).
     pub cg_trace: Vec<(usize, usize, f64)>,
+    /// Everything the fit observed about itself: per-layer counters,
+    /// histograms and span timings (including the worker-pool delta
+    /// accumulated during this fit). The legacy `mvms()`/`precond_stats()`
+    /// accessors are thin views over this snapshot.
+    pub metrics: MetricsSnapshot,
 }
 
 pub struct GpModel {
@@ -125,20 +127,38 @@ impl GpModel {
 
     /// Train on (x, y); y should be standardized (the examples handle it).
     pub fn fit(&self, x: &Matrix, y: &[f64]) -> FgpResult<TrainedGp> {
+        self.fit_with_metrics(x, y, &MetricsRegistry::new())
+    }
+
+    /// [`fit`](Self::fit) recording into a caller-owned registry — the
+    /// deterministic-clock test harness injects a [`crate::util::metrics::
+    /// ManualClock`]-backed registry here. The returned
+    /// [`TrainedGp::metrics`] snapshot merges this registry with the
+    /// worker-pool counters accumulated during the fit (as a delta against
+    /// the pool's process-global totals).
+    pub fn fit_with_metrics(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        metrics: &MetricsRegistry,
+    ) -> FgpResult<TrainedGp> {
         let t0 = std::time::Instant::now();
+        let fit_span = metrics.span("gp.fit").start_owned();
+        let pool_base = crate::util::parallel::runtime().metrics().snapshot();
         let cfg = &self.config;
         self.config.windows.validate(x.cols)?;
         let ak = AdditiveKernel::new(cfg.kernel, cfg.windows.clone());
         // Geometry (landmarks, permutation, sparsity pattern) is built once
         // here; per-step work is delegated to the lifecycle cache.
         let mut cache = self.build_cache(&ak, x)?;
+        cache.set_metrics(metrics);
         let mut raw = cfg.init;
         let mut op = self.build_operator(x, &raw.transform())?;
+        op.set_metrics(metrics);
         let mut adam = Adam::new(3, cfg.adam_lr);
         let mut loss_trace = Vec::new();
         let mut hyper_trace = Vec::new();
         let mut cg_trace = Vec::with_capacity(cfg.max_iters);
-        let mut mvms = 0usize;
 
         for it in 0..cfg.max_iters {
             let hyper = raw.transform();
@@ -148,7 +168,7 @@ impl GpModel {
             let mut nll_opts = cfg.nll.clone();
             nll_opts.seed = cfg.nll.seed.wrapping_add(it as u64);
             // One block solve serves α and every gradient trace probe.
-            let (nll, g) = estimate_nll_grad(&op, pref, y, &nll_opts);
+            let (nll, g) = estimate_nll_grad_with(&op, pref, y, &nll_opts, metrics);
             cache.observe(nll.cg_stats);
             cg_trace.push((it, nll.cg_stats.iterations, nll.cg_stats.final_residual));
             // Chain rule through softplus.
@@ -172,7 +192,6 @@ impl GpModel {
                 );
             }
             adam.step(&mut raw.0, &grad_raw);
-            mvms = op.mvms_performed();
         }
 
         // Final α at the trained hyperparameters, solved to prediction
@@ -184,10 +203,31 @@ impl GpModel {
         let identity = IdentityPrecond(op.dim());
         let m: &dyn Precond = pref.unwrap_or(&identity);
         let cg_opts = CgOptions { tol: 1e-10, max_iter: cfg.predict_cg_iters, relative: true };
-        let alpha = pcg(&op, m, y, &cg_opts).x;
+        let alpha = pcg_with(&op, m, y, &cg_opts, metrics).x;
         // Accelerator engines run under an infallible apply signature and
         // latch execute errors instead of panicking — surface them now.
         op.check_fault()?;
+
+        drop(fit_span);
+        // Fold in what the worker pool did on this fit's behalf: the pool's
+        // registry is process-global, so only the delta since fit entry is
+        // attributable to this call.
+        let pool_delta = crate::util::parallel::runtime()
+            .metrics()
+            .snapshot()
+            .delta_from(&pool_base);
+        let snapshot = metrics.snapshot().merged_with(&pool_delta);
+        let ps = cache.stats();
+        crate::debuglog!(
+            "fit done: mvms={} traversals={} cg_iters={} precond[skel={} σ={} reuse={}] pool_jobs={}",
+            snapshot.counter("coordinator.mvm"),
+            snapshot.counter("coordinator.traversal"),
+            snapshot.counter("solver.cg.iterations"),
+            ps.skeleton_builds,
+            ps.sigma_refreshes,
+            ps.reuses,
+            pool_delta.counter("runtime.jobs")
+        );
 
         Ok(TrainedGp {
             config: cfg.clone(),
@@ -197,10 +237,9 @@ impl GpModel {
             hyper_trace,
             alpha,
             x: x.clone(),
-            mvms: op.mvms_performed().max(mvms),
             train_seconds: t0.elapsed().as_secs_f64(),
-            precond_stats: cache.stats(),
             cg_trace,
+            metrics: snapshot,
         })
     }
 }
@@ -210,6 +249,24 @@ impl TrainedGp {
     /// kernel traversal over many CG columns, small enough that the n×chunk
     /// RHS block stays cache-resident for moderate n.
     pub const VARIANCE_CHUNK: usize = 32;
+
+    /// Deprecated compatibility accessor: total operator·vector products
+    /// over the fit. Read `metrics` (`coordinator.mvm`) directly instead.
+    pub fn mvms(&self) -> usize {
+        self.metrics.counter("coordinator.mvm") as usize
+    }
+
+    /// Deprecated compatibility accessor: what the preconditioner cache
+    /// did over training, reconstructed from the `precond.*` counters in
+    /// `metrics`. Read the snapshot directly instead.
+    pub fn precond_stats(&self) -> LifecycleStats {
+        LifecycleStats {
+            skeleton_builds: self.metrics.counter("precond.skeleton_builds") as usize,
+            forced_by_cg: self.metrics.counter("precond.forced_by_cg") as usize,
+            sigma_refreshes: self.metrics.counter("precond.sigma_refreshes") as usize,
+            reuses: self.metrics.counter("precond.reuses") as usize,
+        }
+    }
 
     /// Posterior mean at test points: μ* = K(X*,X) α (dense cross MVM; the
     /// cross product is O(n·n*·Σd_s) and never the bottleneck).
@@ -233,11 +290,26 @@ impl TrainedGp {
     /// test point. Use `max_points` to bound the cost on large test sets
     /// (the rest get the prior variance).
     pub fn predict_variance(&self, xtest: &Matrix, max_points: usize) -> FgpResult<Vec<f64>> {
+        self.predict_variance_with(xtest, max_points, &MetricsRegistry::disabled())
+    }
+
+    /// [`predict_variance`](Self::predict_variance) recording into a
+    /// caller-owned registry: a `gp.predict_variance` span around the whole
+    /// sweep, with the chunked CG solves and the operator's NFFT transforms
+    /// attributed through the same per-layer names as the fit.
+    pub fn predict_variance_with(
+        &self,
+        xtest: &Matrix,
+        max_points: usize,
+        metrics: &MetricsRegistry,
+    ) -> FgpResult<Vec<f64>> {
+        let _span = metrics.span("gp.predict_variance").start_owned();
         let cfg = &self.config;
         let ak_prior =
             self.hyper.sigma_f2() * cfg.windows.len() as f64 + self.hyper.sigma_eps2();
         let model = GpModel { config: cfg.clone() };
-        let op = model.build_operator(&self.x, &self.hyper)?;
+        let mut op = model.build_operator(&self.x, &self.hyper)?;
+        op.set_metrics(metrics);
         let n = self.x.rows;
         let cg_opts = CgOptions { tol: 1e-8, max_iter: cfg.predict_cg_iters, relative: true };
         let npts = xtest.rows.min(max_points);
@@ -266,7 +338,7 @@ impl TrainedGp {
                     *ki *= self.hyper.sigma_f2();
                 }
             });
-            let sol = cg_batch(&op, &kstar, &cg_opts);
+            let sol = pcg_batch_with(&op, &IdentityPrecond(n), &kstar, &cg_opts, metrics);
             for r in 0..nb {
                 var[t0 + r] = (ak_prior - crate::linalg::dot(kstar.row(r), sol.x.row(r)))
                     .max(1e-12);
@@ -405,8 +477,8 @@ mod tests {
         // The cache must actually amortize: far fewer skeleton rebuilds
         // than optimizer steps (Adam moves ℓ every step, so the reference
         // policy rebuilds every step).
-        let cs = cached.precond_stats;
-        let rs = reference.precond_stats;
+        let cs = cached.precond_stats();
+        let rs = reference.precond_stats();
         assert!(
             cs.skeleton_builds < cached.config.max_iters,
             "cache never amortized: {} builds over {} iters",

@@ -19,9 +19,10 @@
 
 use crate::coordinator::operator::KernelOperator;
 use crate::linalg::{dot, Matrix};
-use crate::solvers::cg::{pcg, pcg_batch, CgOptions, CgResult, CgStats};
-use crate::solvers::slq::{slq_logdet, slq_logdet_precond, SlqOptions};
+use crate::solvers::cg::{pcg, pcg_batch, pcg_batch_with, CgOptions, CgResult, CgStats};
+use crate::solvers::slq::{slq_logdet_precond_with, slq_logdet_with, SlqOptions};
 use crate::solvers::{IdentityPrecond, LinOp, Precond};
+use crate::util::metrics::MetricsRegistry;
 
 /// Stream offset separating gradient probes from SLQ probes (seed path
 /// preserved from the original serial implementation).
@@ -83,8 +84,8 @@ pub fn estimate_nll(
         reorth: true,
     };
     let est = match precond {
-        Some(p) => slq_logdet_precond(op, p, &slq_opts),
-        None => slq_logdet(op, &slq_opts),
+        Some(p) => slq_logdet_precond_with(op, p, &slq_opts, &MetricsRegistry::disabled()),
+        None => slq_logdet_with(op, &slq_opts, &MetricsRegistry::disabled()),
     };
     let value = 0.5
         * (dot(y, &sol.x) + est.mean + n as f64 * (2.0 * std::f64::consts::PI).ln());
@@ -200,6 +201,20 @@ pub fn estimate_nll_grad(
     y: &[f64],
     opts: &NllOptions,
 ) -> (NllEstimate, GradEstimate) {
+    estimate_nll_grad_with(op, precond, y, opts, &MetricsRegistry::disabled())
+}
+
+/// [`estimate_nll_grad`] with observability: the whole evaluation runs
+/// under a `gp.nll_grad` span, and the block PCG / SLQ stages record into
+/// `metrics` through their instrumented entry points.
+pub fn estimate_nll_grad_with(
+    op: &KernelOperator,
+    precond: Option<&dyn Precond>,
+    y: &[f64],
+    opts: &NllOptions,
+    metrics: &MetricsRegistry,
+) -> (NllEstimate, GradEstimate) {
+    let _span = metrics.span("gp.nll_grad").start_owned();
     let n = op.dim();
     assert_eq!(y.len(), n);
     crate::util::debug_assert_all_finite(y, "estimate_nll_grad targets y");
@@ -217,7 +232,7 @@ pub fn estimate_nll_grad(
     for i in 0..z.rows {
         rhs.row_mut(1 + i).copy_from_slice(z.row(i));
     }
-    let sol = pcg_batch(op, m, &rhs, &cg_opts);
+    let sol = pcg_batch_with(op, m, &rhs, &cg_opts, metrics);
     let alpha = sol.x.row(0).to_vec();
     let mut s = Matrix::zeros(z.rows, n);
     for i in 0..z.rows {
@@ -231,8 +246,8 @@ pub fn estimate_nll_grad(
         reorth: true,
     };
     let est = match precond {
-        Some(p) => slq_logdet_precond(op, p, &slq_opts),
-        None => slq_logdet(op, &slq_opts),
+        Some(p) => slq_logdet_precond_with(op, p, &slq_opts, metrics),
+        None => slq_logdet_with(op, &slq_opts, metrics),
     };
     let value = 0.5
         * (dot(y, &alpha) + est.mean + n as f64 * (2.0 * std::f64::consts::PI).ln());

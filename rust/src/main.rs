@@ -22,7 +22,7 @@ fourier-gp — Preconditioned Additive Gaussian Processes with Fourier Accelerat
 USAGE:
   fourier-gp train   --data <name|csv> [--kernel gaussian|matern] [--engine nfft-rust|exact-rust|nfft-pjrt|exact-pjrt]
                      [--grouping en|mis|all] [--iters N] [--max-n N] [--windows '[[1,2],[3]]']
-                     [--precond aafn|nystrom|none] [--seed S] [--lr F]
+                     [--precond aafn|nystrom|none] [--seed S] [--lr F] [--metrics-out results/metrics.json]
   fourier-gp predict --data <name|csv> [--out results/pred.csv] [train options]
   fourier-gp experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all> [--full]
   fourier-gp bench-mvm [--sizes 1000,4000,16000]
@@ -115,13 +115,22 @@ fn cmd_train(args: &Args, write_pred: bool) -> anyhow::Result<()> {
     println!(
         "trained in {:.1}s ({} MVMs) | σ_f={:.4} ℓ={:.4} σ_ε={:.4}",
         trained.train_seconds,
-        trained.mvms,
+        trained.mvms(),
         trained.hyper.sigma_f,
         trained.hyper.ell,
         trained.hyper.sigma_eps
     );
     for (it, loss) in &trained.loss_trace {
         println!("  iter {it:>4}  Z̃ = {loss:.4}");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&path, trained.metrics.to_json().to_string_pretty())?;
+        println!("fit metrics written to {path}");
     }
     let pred = trained.predict_mean(&test.x);
     let rmse = fourier_gp::util::rmse(&pred, &test.y);

@@ -28,6 +28,7 @@ use super::plan::{NfftParams, NfftPlan};
 use crate::fft::{fftn, Complex};
 use crate::kernels::KernelFn;
 use crate::linalg::Matrix;
+use crate::util::metrics::{Counter, MetricsRegistry, SpanTimer};
 use crate::util::parallel;
 
 /// Fast summation plan for one windowed sub-kernel over a fixed point set
@@ -46,6 +47,42 @@ pub struct Fastsum {
     bhat: Vec<Complex>,
     /// b_k for the ℓ-derivative kernel.
     bhat_deriv: Vec<Complex>,
+    /// Pre-registered metric handles (dead by default — see
+    /// [`Fastsum::set_metrics`]). Held in the struct so the marked
+    /// `no_alloc` applies record without cloning or locking.
+    pulse: NfftPulse,
+}
+
+/// Per-transform NFFT observability: phase counters for the spread /
+/// FFT / gather passes and the `nfft.apply` span timed around every
+/// adjoint or trafo transform (so its call count is the transform count
+/// the packing analysis predicts: 2 per pair for `apply_batch`, 3 per
+/// pair for the fused kernel+derivative `apply_batch_pair`).
+struct NfftPulse {
+    spread: Counter,
+    fft: Counter,
+    gather: Counter,
+    apply: SpanTimer,
+}
+
+impl NfftPulse {
+    fn disabled() -> NfftPulse {
+        NfftPulse {
+            spread: Counter::disabled(),
+            fft: Counter::disabled(),
+            gather: Counter::disabled(),
+            apply: SpanTimer::disabled(),
+        }
+    }
+
+    fn from_registry(reg: &MetricsRegistry) -> NfftPulse {
+        NfftPulse {
+            spread: reg.counter("nfft.spread"),
+            fft: reg.counter("nfft.fft"),
+            gather: reg.counter("nfft.gather"),
+            apply: reg.span("nfft.apply"),
+        }
+    }
 }
 
 /// Compute b_k(κ_R): sample κ on the m^d grid of step 1/m over
@@ -156,7 +193,15 @@ impl Fastsum {
         let d = plan.d;
         let params = plan.params;
         let (bhat, bhat_deriv) = kernel_coefficients_pair(kernel, d, params.m, ell);
-        Fastsum { kernel, d, ell, params, plan, bhat, bhat_deriv }
+        Fastsum { kernel, d, ell, params, plan, bhat, bhat_deriv, pulse: NfftPulse::disabled() }
+    }
+
+    /// Route this operator's phase counters and the `nfft.apply` span to
+    /// `reg`. Handles are re-registered here (cold) so the hot applies
+    /// stay lock- and allocation-free; the default is the dead disabled
+    /// set, which costs one branch per record.
+    pub fn set_metrics(&mut self, reg: &MetricsRegistry) {
+        self.pulse = NfftPulse::from_registry(reg);
     }
 
     pub fn n(&self) -> usize {
@@ -187,12 +232,20 @@ impl Fastsum {
         for (s, &x) in ws.stage.iter_mut().zip(v) {
             *s = Complex::new(x, 0.0);
         }
+        let adj = self.pulse.apply.start();
+        self.pulse.spread.incr();
         plan.spread_parallel_into(&ws.stage, &mut ws.grid);
+        self.pulse.fft.incr();
         plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
         plan.project_single_into(&ws.grid, &mut ws.small_a);
+        drop(adj);
+        let tra = self.pulse.apply.start();
         plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+        self.pulse.fft.incr();
         plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+        self.pulse.gather.incr();
         plan.gather_re_parallel_into(&ws.grid, out);
+        drop(tra);
         plan.release_workspace(ws);
     }
 
@@ -230,6 +283,7 @@ impl Fastsum {
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
         let plan = &*self.plan;
         let npairs = nb / 2;
+        let pulse = &self.pulse;
         parallel::runtime().rows(
             &mut out.data[..npairs * 2 * n],
             npairs,
@@ -242,17 +296,25 @@ impl Fastsum {
                 for (j, s) in ws.stage.iter_mut().enumerate() {
                     *s = Complex::new(va[j], vb[j]);
                 }
+                let adj = pulse.apply.start();
+                pulse.spread.incr();
                 plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                pulse.fft.incr();
                 plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
                 plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                drop(adj);
+                let tra = pulse.apply.start();
                 plan.embed_packed_scaled_into(
                     &ws.small_a,
                     &ws.small_b,
                     b,
                     &mut ws.grid,
                 );
+                pulse.fft.incr();
                 plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                pulse.gather.incr();
                 plan.gather_packed_serial_into(&ws.grid, oa, ob);
+                drop(tra);
                 plan.release_workspace(ws);
             },
         );
@@ -264,12 +326,20 @@ impl Fastsum {
             for (s, &x) in ws.stage.iter_mut().zip(vr) {
                 *s = Complex::new(x, 0.0);
             }
+            let adj = pulse.apply.start();
+            pulse.spread.incr();
             plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
             plan.project_single_into(&ws.grid, &mut ws.small_a);
+            drop(adj);
+            let tra = pulse.apply.start();
             plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            pulse.gather.incr();
             plan.gather_re_serial_into(&ws.grid, out.row_mut(r));
+            drop(tra);
             plan.release_workspace(ws);
         }
     }
@@ -317,18 +387,27 @@ impl Fastsum {
         }
         let b = if deriv { &self.bhat_deriv } else { &self.bhat };
         let plan = &*self.plan;
+        let pulse = &self.pulse;
         if nb == 1 {
             // Mirror of `apply_into`, with the scoped spread/gather refs.
             let mut ws = plan.acquire_workspace();
             for (s, &x) in ws.stage.iter_mut().zip(v.row(0)) {
                 *s = Complex::new(x, 0.0);
             }
+            let adj = pulse.apply.start();
+            pulse.spread.incr();
             plan.spread_scoped_ref_into(&ws.stage, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
             plan.project_single_into(&ws.grid, &mut ws.small_a);
+            drop(adj);
+            let tra = pulse.apply.start();
             plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            pulse.gather.incr();
             plan.gather_re_scoped_ref_into(&ws.grid, out.row_mut(0));
+            drop(tra);
             plan.release_workspace(ws);
             return;
         }
@@ -346,17 +425,25 @@ impl Fastsum {
                 for (j, s) in ws.stage.iter_mut().enumerate() {
                     *s = Complex::new(va[j], vb[j]);
                 }
+                let adj = pulse.apply.start();
+                pulse.spread.incr();
                 plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                pulse.fft.incr();
                 plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
                 plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                drop(adj);
+                let tra = pulse.apply.start();
                 plan.embed_packed_scaled_into(
                     &ws.small_a,
                     &ws.small_b,
                     b,
                     &mut ws.grid,
                 );
+                pulse.fft.incr();
                 plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                pulse.gather.incr();
                 plan.gather_packed_serial_into(&ws.grid, oa, ob);
+                drop(tra);
                 plan.release_workspace(ws);
             },
         );
@@ -367,12 +454,20 @@ impl Fastsum {
             for (s, &x) in ws.stage.iter_mut().zip(vr) {
                 *s = Complex::new(x, 0.0);
             }
+            let adj = pulse.apply.start();
+            pulse.spread.incr();
             plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
             plan.project_single_into(&ws.grid, &mut ws.small_a);
+            drop(adj);
+            let tra = pulse.apply.start();
             plan.embed_single_scaled_into(&ws.small_a, b, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            pulse.gather.incr();
             plan.gather_re_serial_into(&ws.grid, out.row_mut(r));
+            drop(tra);
             plan.release_workspace(ws);
         }
     }
@@ -409,6 +504,7 @@ impl Fastsum {
             return;
         }
         let plan = &*self.plan;
+        let pulse = &self.pulse;
         let npairs = nb / 2;
         parallel::runtime().zip_rows(
             &mut out_k.data[..npairs * 2 * n],
@@ -425,27 +521,39 @@ impl Fastsum {
                     *s = Complex::new(va[j], vb[j]);
                 }
                 // Shared packed adjoint ...
+                let adj = pulse.apply.start();
+                pulse.spread.incr();
                 plan.spread_serial_into(&ws.stage, &mut ws.grid);
+                pulse.fft.incr();
                 plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
                 plan.project_packed_into(&ws.grid, &mut ws.small_a, &mut ws.small_b);
+                drop(adj);
                 // ... then one packed trafo per diagonal (the embeds only
                 // consume the small spectra, which survive both passes).
+                let trk = pulse.apply.start();
                 plan.embed_packed_scaled_into(
                     &ws.small_a,
                     &ws.small_b,
                     &self.bhat,
                     &mut ws.grid,
                 );
+                pulse.fft.incr();
                 plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                pulse.gather.incr();
                 plan.gather_packed_serial_into(&ws.grid, ka, kb);
+                drop(trk);
+                let trd = pulse.apply.start();
                 plan.embed_packed_scaled_into(
                     &ws.small_a,
                     &ws.small_b,
                     &self.bhat_deriv,
                     &mut ws.grid,
                 );
+                pulse.fft.incr();
                 plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+                pulse.gather.incr();
                 plan.gather_packed_serial_into(&ws.grid, da, db);
+                drop(trd);
                 plan.release_workspace(ws);
             },
         );
@@ -457,15 +565,27 @@ impl Fastsum {
             for (s, &x) in ws.stage.iter_mut().zip(vr) {
                 *s = Complex::new(x, 0.0);
             }
+            let adj = pulse.apply.start();
+            pulse.spread.incr();
             plan.spread_serial_into(&ws.stage, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_forward(&mut ws.grid, &mut ws.fft_scratch);
             plan.project_single_into(&ws.grid, &mut ws.small_a);
+            drop(adj);
+            let trk = pulse.apply.start();
             plan.embed_single_scaled_into(&ws.small_a, &self.bhat, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            pulse.gather.incr();
             plan.gather_re_serial_into(&ws.grid, out_k.row_mut(r));
+            drop(trk);
+            let trd = pulse.apply.start();
             plan.embed_single_scaled_into(&ws.small_a, &self.bhat_deriv, &mut ws.grid);
+            pulse.fft.incr();
             plan.fft_inverse(&mut ws.grid, &mut ws.fft_scratch);
+            pulse.gather.incr();
             plan.gather_re_serial_into(&ws.grid, out_d.row_mut(r));
+            drop(trd);
             plan.release_workspace(ws);
         }
     }

@@ -28,6 +28,7 @@ use crate::kernels::AdditiveKernel;
 use crate::linalg::Matrix;
 use crate::solvers::cg::CgStats;
 use crate::solvers::Precond;
+use crate::util::metrics::{Counter, MetricsRegistry, SpanTimer};
 use crate::util::FgpResult;
 use std::sync::Arc;
 
@@ -60,7 +61,9 @@ impl RefreshPolicy {
     }
 }
 
-/// Counters of what the cache actually did over a fit.
+/// Counters of what the cache actually did over a fit. The authoritative
+/// storage is the metrics registry (`precond.*` counters); this struct is
+/// the snapshot view [`PrecondCache::stats`] reconstructs for callers.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LifecycleStats {
     /// ℓ-skeleton (re)builds — the expensive tier (kernel evaluations).
@@ -72,6 +75,28 @@ pub struct LifecycleStats {
     pub sigma_refreshes: usize,
     /// Steps served by the existing factorization unchanged.
     pub reuses: usize,
+}
+
+/// Pre-registered lifecycle counters + the `precond.prepare` span,
+/// looked up once per registry binding.
+struct LifecyclePulse {
+    skeleton_builds: Counter,
+    forced_by_cg: Counter,
+    sigma_refreshes: Counter,
+    reuses: Counter,
+    prepare: SpanTimer,
+}
+
+impl LifecyclePulse {
+    fn from_registry(reg: &MetricsRegistry) -> Self {
+        Self {
+            skeleton_builds: reg.counter("precond.skeleton_builds"),
+            forced_by_cg: reg.counter("precond.forced_by_cg"),
+            sigma_refreshes: reg.counter("precond.sigma_refreshes"),
+            reuses: reg.counter("precond.reuses"),
+            prepare: reg.span("precond.prepare"),
+        }
+    }
 }
 
 enum CacheInner {
@@ -96,7 +121,7 @@ enum CacheInner {
 pub struct PrecondCache {
     inner: CacheInner,
     policy: RefreshPolicy,
-    stats: LifecycleStats,
+    pulse: LifecyclePulse,
     /// (σ_f², σ_ε²) of the current factorization.
     cur_sigma: Option<(f64, f64)>,
     /// First CG observation after the latest skeleton build.
@@ -140,14 +165,23 @@ impl PrecondCache {
     }
 
     fn from_inner(inner: CacheInner, policy: RefreshPolicy) -> PrecondCache {
+        // A private enabled registry by default so `stats()` works out of
+        // the box; `set_metrics` rebinds into a caller-owned registry.
         PrecondCache {
             inner,
             policy,
-            stats: LifecycleStats::default(),
+            pulse: LifecyclePulse::from_registry(&MetricsRegistry::new()),
             cur_sigma: None,
             baseline: None,
             last: None,
         }
+    }
+
+    /// Rebind the lifecycle counters and the `precond.prepare` span into
+    /// `reg`. Counts already accumulated stay in the previous registry, so
+    /// install metrics before driving the cache.
+    pub fn set_metrics(&mut self, reg: &MetricsRegistry) {
+        self.pulse = LifecyclePulse::from_registry(reg);
     }
 
     /// Should the skeleton at `skel_ell` be rebuilt for the requested ℓ,
@@ -191,6 +225,7 @@ impl PrecondCache {
         sigma_f2: f64,
         sigma_eps2: f64,
     ) -> FgpResult<()> {
+        let _span = self.pulse.prepare.start();
         match &mut self.inner {
             CacheInner::None => Ok(()),
             CacheInner::Aafn { geo, skel, current } => {
@@ -210,21 +245,21 @@ impl PrecondCache {
                     self.cur_sigma = None;
                     self.baseline = None;
                     self.last = None;
-                    self.stats.skeleton_builds += 1;
+                    self.pulse.skeleton_builds.incr();
                     if forced {
-                        self.stats.forced_by_cg += 1;
+                        self.pulse.forced_by_cg.incr();
                     }
                 }
                 let sk = skel.as_ref().ok_or_else(|| {
                     crate::util::FgpError::Numeric("AAFN skeleton missing after rebuild".into())
                 })?;
                 if current.is_some() && self.cur_sigma == Some((sigma_f2, sigma_eps2)) {
-                    self.stats.reuses += 1;
+                    self.pulse.reuses.incr();
                     return Ok(());
                 }
                 *current = Some(AafnPrecond::refresh(sk, geo, sigma_f2, sigma_eps2)?);
                 self.cur_sigma = Some((sigma_f2, sigma_eps2));
-                self.stats.sigma_refreshes += 1;
+                self.pulse.sigma_refreshes.incr();
                 Ok(())
             }
             CacheInner::Nystrom { geo, skel, current } => {
@@ -244,21 +279,21 @@ impl PrecondCache {
                     self.cur_sigma = None;
                     self.baseline = None;
                     self.last = None;
-                    self.stats.skeleton_builds += 1;
+                    self.pulse.skeleton_builds.incr();
                     if forced {
-                        self.stats.forced_by_cg += 1;
+                        self.pulse.forced_by_cg.incr();
                     }
                 }
                 let sk = skel.as_ref().ok_or_else(|| {
                     crate::util::FgpError::Numeric("Nyström skeleton missing after rebuild".into())
                 })?;
                 if current.is_some() && self.cur_sigma == Some((sigma_f2, sigma_eps2)) {
-                    self.stats.reuses += 1;
+                    self.pulse.reuses.incr();
                     return Ok(());
                 }
                 *current = Some(NystromPrecond::refresh(sk, sigma_f2, sigma_eps2)?);
                 self.cur_sigma = Some((sigma_f2, sigma_eps2));
-                self.stats.sigma_refreshes += 1;
+                self.pulse.sigma_refreshes.incr();
                 Ok(())
             }
         }
@@ -287,8 +322,14 @@ impl PrecondCache {
         self.last = Some(stats);
     }
 
+    /// Snapshot of the lifecycle counters in their legacy struct form.
     pub fn stats(&self) -> LifecycleStats {
-        self.stats
+        LifecycleStats {
+            skeleton_builds: self.pulse.skeleton_builds.value() as usize,
+            forced_by_cg: self.pulse.forced_by_cg.value() as usize,
+            sigma_refreshes: self.pulse.sigma_refreshes.value() as usize,
+            reuses: self.pulse.reuses.value() as usize,
+        }
     }
 
     pub fn policy(&self) -> RefreshPolicy {

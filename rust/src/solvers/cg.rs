@@ -4,6 +4,7 @@
 
 use super::{LinOp, Precond};
 use crate::linalg::{axpy, dot, norm2, Matrix};
+use crate::util::metrics::MetricsRegistry;
 
 #[derive(Clone, Debug)]
 pub struct CgOptions {
@@ -53,6 +54,31 @@ impl CgResult {
 pub fn cg(a: &dyn LinOp, b: &[f64], opts: &CgOptions) -> CgResult {
     let p = super::IdentityPrecond(a.dim());
     pcg(a, &p, b, opts)
+}
+
+/// [`pcg`] with observability: the whole solve runs under a `solver.cg`
+/// span, the iteration count lands on the `solver.cg.iterations` counter
+/// and every residual-history norm on the `solver.cg.residual` histogram.
+/// Recording happens once, after the loop, from the calling thread — so
+/// histogram totals are deterministic regardless of operator parallelism.
+pub fn pcg_with(
+    a: &dyn LinOp,
+    m: &dyn Precond,
+    b: &[f64],
+    opts: &CgOptions,
+    metrics: &MetricsRegistry,
+) -> CgResult {
+    let span = metrics.span("solver.cg").start_owned();
+    let res = pcg(a, m, b, opts);
+    drop(span);
+    metrics
+        .counter("solver.cg.iterations")
+        .add(res.iterations as u64);
+    let hist = metrics.histogram("solver.cg.residual");
+    for &r in &res.residuals {
+        hist.record(r);
+    }
+    res
 }
 
 /// Preconditioned CG with zero initial guess.
@@ -147,6 +173,32 @@ impl BatchCgResult {
 pub fn cg_batch(a: &dyn LinOp, b: &Matrix, opts: &CgOptions) -> BatchCgResult {
     let p = super::IdentityPrecond(a.dim());
     pcg_batch(a, &p, b, opts)
+}
+
+/// [`pcg_batch`] with observability (see [`pcg_with`]): `solver.cg` span
+/// around the block solve, the *sum* of per-column iteration counts on
+/// `solver.cg.iterations` (total column work, comparable to running the
+/// columns one at a time), and every column's residual history on the
+/// `solver.cg.residual` histogram, recorded in column order.
+pub fn pcg_batch_with(
+    a: &dyn LinOp,
+    m: &dyn Precond,
+    b: &Matrix,
+    opts: &CgOptions,
+    metrics: &MetricsRegistry,
+) -> BatchCgResult {
+    let span = metrics.span("solver.cg").start_owned();
+    let res = pcg_batch(a, m, b, opts);
+    drop(span);
+    let total: u64 = res.iterations.iter().map(|&i| i as u64).sum();
+    metrics.counter("solver.cg.iterations").add(total);
+    let hist = metrics.histogram("solver.cg.residual");
+    for col in &res.residuals {
+        for &r in col {
+            hist.record(r);
+        }
+    }
+    res
 }
 
 /// Preconditioned CG over an RHS block (one vector per row of `b`): all

@@ -10,6 +10,7 @@
 use super::lanczos::{lanczos_batch, quadrature};
 use super::{LinOp, Precond};
 use crate::linalg::Matrix;
+use crate::util::metrics::MetricsRegistry;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -69,12 +70,29 @@ pub fn probe_block(n: usize, num_probes: usize, seed: u64) -> Matrix {
 /// operator traversal regardless of `num_probes`; per-probe estimates are
 /// identical to running the probes one at a time.
 pub fn slq_logdet(a: &dyn LinOp, opts: &SlqOptions) -> SlqEstimate {
+    slq_logdet_with(a, opts, &MetricsRegistry::disabled())
+}
+
+/// [`slq_logdet`] with observability: a `solver.slq` span around the
+/// batched Lanczos recurrence, probes drawn on `solver.slq.probes`, and
+/// the summed per-probe Lanczos step counts (early breakdown included) on
+/// `solver.lanczos.steps`.
+pub fn slq_logdet_with(
+    a: &dyn LinOp,
+    opts: &SlqOptions,
+    metrics: &MetricsRegistry,
+) -> SlqEstimate {
+    let span = metrics.span("solver.slq").start_owned();
     let z = probe_block(a.dim(), opts.num_probes, opts.seed);
     let runs = lanczos_batch(a, &z, opts.steps, opts.reorth);
     let samples: Vec<f64> = runs
         .iter()
         .map(|res| quadrature(res, |t| t.max(1e-300).ln()))
         .collect();
+    drop(span);
+    metrics.counter("solver.slq.probes").add(opts.num_probes as u64);
+    let steps: u64 = runs.iter().map(|r| r.steps as u64).sum();
+    metrics.counter("solver.lanczos.steps").add(steps);
     SlqEstimate::from_samples(samples)
 }
 
@@ -117,8 +135,18 @@ pub fn slq_logdet_precond(
     m: &dyn Precond,
     opts: &SlqOptions,
 ) -> SlqEstimate {
+    slq_logdet_precond_with(a, m, opts, &MetricsRegistry::disabled())
+}
+
+/// [`slq_logdet_precond`] with observability (see [`slq_logdet_with`]).
+pub fn slq_logdet_precond_with(
+    a: &dyn LinOp,
+    m: &dyn Precond,
+    opts: &SlqOptions,
+    metrics: &MetricsRegistry,
+) -> SlqEstimate {
     let op = SplitPrecondOp { a, m };
-    let delta = slq_logdet(&op, opts);
+    let delta = slq_logdet_with(&op, opts, metrics);
     let ld_m = m.logdet();
     let samples: Vec<f64> = delta.per_probe.iter().map(|s| s + ld_m).collect();
     SlqEstimate::from_samples(samples)

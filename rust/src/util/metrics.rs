@@ -1,0 +1,896 @@
+//! Phase-scoped observability: named monotonic counters, log-bucketed
+//! value histograms, and span timers behind a pluggable [`Clock`].
+//!
+//! Design constraints (see DESIGN.md "Observability"):
+//!  - **Lock-light.** Registration (name → slot) takes a `Mutex` once per
+//!    distinct name; every record afterwards is a relaxed atomic op on a
+//!    pre-sized cell. Hot paths hold pre-registered handles ([`Counter`],
+//!    [`Histogram`], [`SpanTimer`]) so they never touch the lock.
+//!  - **Allocation-disciplined.** All cells are allocated when the
+//!    registry is built (`lanes × capacity` flat vectors); recording
+//!    never allocates, so kernels under the `no_alloc` lint may hold and
+//!    bump handles. The disabled registry ([`MetricsRegistry::disabled`])
+//!    is an `Option::None` — every record is a branch and nothing else.
+//!  - **Deterministic aggregation.** Cells are sharded per pool lane
+//!    (`util::parallel::current_lane`), and [`MetricsRegistry::snapshot`]
+//!    merges shards in fixed lane order — the same discipline as the
+//!    fixed-order NFFT spread reduction — so identical runs on the
+//!    persistent pool produce bitwise-identical snapshots.
+//!  - **No `HashMap`** (determinism lint): name tables are linear-scanned
+//!    `Vec<&'static str>`s and snapshots are name-sorted vectors.
+//!
+//! Metric names follow `layer.component.event` (`[a-z0-9_.]+`), enforced
+//! statically by the xtask `metric_names` lint rule at every call site.
+
+use crate::util::json::Json;
+use crate::util::parallel::{self, lock_unpoisoned};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Fixed slot capacities. Registration past a cap yields a dead handle
+/// (debug-asserted) rather than reallocating shard storage under readers.
+pub const MAX_COUNTERS: usize = 192;
+pub const MAX_SPANS: usize = 64;
+pub const MAX_HISTS: usize = 32;
+/// Histogram bucket count: bucket 0 is the underflow bin (values below
+/// the first edge, including non-finite), bucket `HIST_BUCKETS - 1` the
+/// overflow bin; the 62 in between are log-spaced decades.
+pub const HIST_BUCKETS: usize = 64;
+const HIST_EDGES_LEN: usize = HIST_BUCKETS - 1;
+/// Cells per histogram per lane: one per bucket plus an f64-bits sum.
+const HIST_STRIDE: usize = HIST_BUCKETS + 1;
+
+/// Nanosecond clock abstraction so tests can drive a deterministic
+/// [`ManualClock`] while production uses the monotonic [`Instant`] clock.
+pub trait Clock: Send + Sync {
+    fn now_nanos(&self) -> u64;
+}
+
+/// Production clock: nanoseconds since the clock was constructed.
+pub struct MonotonicClock {
+    start: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// Deterministic test clock: time only moves when the test says so.
+/// Cloning shares the underlying cell, so a clone handed to a registry
+/// stays steerable from the test body.
+#[derive(Clone, Default)]
+pub struct ManualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, nanos: u64) {
+        self.nanos.fetch_add(nanos, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, nanos: u64) {
+        self.nanos.store(nanos, Ordering::SeqCst);
+    }
+
+    pub fn now(&self) -> u64 {
+        self.nanos.load(Ordering::SeqCst)
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_nanos(&self) -> u64 {
+        self.now()
+    }
+}
+
+/// `layer.component.event` naming contract, also enforced textually by
+/// the xtask `metric_names` rule on every registration call site.
+pub fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.')
+}
+
+/// Log-spaced histogram bucket edges: `edges[i] = 10^(i/3 - 12)`,
+/// i.e. three buckets per decade from 1e-12 up to ~4.6e8. Strictly
+/// monotone (property-tested below).
+pub fn hist_edges() -> &'static [f64] {
+    static EDGES: OnceLock<[f64; HIST_EDGES_LEN]> = OnceLock::new();
+    EDGES.get_or_init(|| {
+        let mut e = [0.0f64; HIST_EDGES_LEN];
+        for (i, v) in e.iter_mut().enumerate() {
+            *v = 10f64.powf(i as f64 / 3.0 - 12.0);
+        }
+        e
+    })
+}
+
+/// Bucket index for a recorded value. Total function on f64: anything
+/// not `>= edges[0]` (small, negative, NaN, -inf) lands in the underflow
+/// bucket 0; anything `>= edges[last]` (including +inf) in the overflow
+/// bucket; every finite value lands in exactly one bucket.
+pub fn bucket_of(x: f64) -> usize {
+    let edges = hist_edges();
+    if !(x >= edges[0]) {
+        return 0;
+    }
+    edges.partition_point(|e| *e <= x)
+}
+
+/// Merge per-lane counter shards. Trivially commutative/associative for
+/// u64 — kept as a named function so the property tests pin the contract
+/// the snapshot path relies on.
+pub fn merge_counter_shards(parts: &[u64]) -> u64 {
+    parts.iter().fold(0u64, |a, b| a.wrapping_add(*b))
+}
+
+/// Merge two histogram bucket shards (element-wise u64 add).
+pub fn merge_hist_shards(a: &[u64; HIST_BUCKETS], b: &[u64; HIST_BUCKETS]) -> [u64; HIST_BUCKETS] {
+    let mut out = [0u64; HIST_BUCKETS];
+    for i in 0..HIST_BUCKETS {
+        out[i] = a[i].wrapping_add(b[i]);
+    }
+    out
+}
+
+struct NameTables {
+    counters: Vec<&'static str>,
+    spans: Vec<&'static str>,
+    hists: Vec<&'static str>,
+}
+
+struct Inner {
+    clock: Arc<dyn Clock>,
+    lanes: usize,
+    /// `lanes × MAX_COUNTERS` flat monotonic counters.
+    counters: Vec<AtomicU64>,
+    /// `lanes × MAX_SPANS × 2` flat (calls, nanos) pairs.
+    spans: Vec<AtomicU64>,
+    /// `lanes × MAX_HISTS × HIST_STRIDE` flat (buckets.., sum-bits).
+    hists: Vec<AtomicU64>,
+    names: Mutex<NameTables>,
+}
+
+impl Inner {
+    #[inline]
+    fn lane(&self) -> usize {
+        parallel::current_lane() % self.lanes
+    }
+}
+
+/// Accumulate an f64 into an atomic cell holding f64 bits. Within one
+/// pool lane only one band runs at a time, so the CAS is uncontended on
+/// the pooled schedule and accumulation order is the deterministic band
+/// order; the loop stays correct if foreign threads share a shard.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Handle-based metrics registry. Cloning is a cheap `Arc` bump; all
+/// clones feed the same cells. [`MetricsRegistry::disabled`] is the
+/// zero-cost mode: handles minted from it no-op on every record.
+#[derive(Clone)]
+pub struct MetricsRegistry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MetricsRegistry(enabled={})", self.inner.is_some())
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl MetricsRegistry {
+    /// Enabled registry on the production monotonic clock.
+    pub fn new() -> Self {
+        Self::with_clock(Arc::new(MonotonicClock::new()))
+    }
+
+    /// Enabled registry on a caller-supplied clock (tests: [`ManualClock`]).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Self {
+        let lanes = parallel::num_threads().max(1);
+        let zeros = |n: usize| {
+            let mut v = Vec::with_capacity(n);
+            v.resize_with(n, || AtomicU64::new(0));
+            v
+        };
+        Self {
+            inner: Some(Arc::new(Inner {
+                clock,
+                lanes,
+                counters: zeros(lanes * MAX_COUNTERS),
+                spans: zeros(lanes * MAX_SPANS * 2),
+                hists: zeros(lanes * MAX_HISTS * HIST_STRIDE),
+                names: Mutex::new(NameTables {
+                    counters: Vec::new(),
+                    spans: Vec::new(),
+                    hists: Vec::new(),
+                }),
+            })),
+        }
+    }
+
+    /// The zero-cost mode: every handle minted here is dead, every
+    /// record is a single `None` branch, and `snapshot()` is empty.
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn now_nanos(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.clock.now_nanos(),
+            None => 0,
+        }
+    }
+
+    fn register(&self, table: usize, cap: usize, name: &'static str) -> usize {
+        debug_assert!(valid_metric_name(name), "bad metric name {name:?}");
+        let Some(inner) = self.inner.as_deref() else {
+            return usize::MAX;
+        };
+        let mut tables = lock_unpoisoned(&inner.names);
+        let list = match table {
+            0 => &mut tables.counters,
+            1 => &mut tables.spans,
+            _ => &mut tables.hists,
+        };
+        if let Some(i) = list.iter().position(|n| *n == name) {
+            return i;
+        }
+        if list.len() >= cap {
+            debug_assert!(false, "metric table {table} full registering {name:?}");
+            return usize::MAX;
+        }
+        list.push(name);
+        list.len() - 1
+    }
+
+    /// Register (or look up) a named monotonic counter.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        Counter { reg: self.clone(), idx: self.register(0, MAX_COUNTERS, name) }
+    }
+
+    /// Register (or look up) a named span timer.
+    pub fn span(&self, name: &'static str) -> SpanTimer {
+        SpanTimer { reg: self.clone(), idx: self.register(1, MAX_SPANS, name) }
+    }
+
+    /// Register (or look up) a named log-bucketed value histogram.
+    pub fn histogram(&self, name: &'static str) -> Histogram {
+        Histogram { reg: self.clone(), idx: self.register(2, MAX_HISTS, name) }
+    }
+
+    /// Deterministic sample of every metric: per-lane shards merged in
+    /// fixed lane order, entries sorted by name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let Some(inner) = self.inner.as_deref() else {
+            return MetricsSnapshot::default();
+        };
+        let (cnames, snames, hnames) = {
+            let t = lock_unpoisoned(&inner.names);
+            (t.counters.clone(), t.spans.clone(), t.hists.clone())
+        };
+        let lanes = inner.lanes;
+        let mut counters: Vec<(String, u64)> = Vec::with_capacity(cnames.len());
+        for (i, name) in cnames.iter().enumerate() {
+            let mut total = 0u64;
+            for l in 0..lanes {
+                total = total
+                    .wrapping_add(inner.counters[l * MAX_COUNTERS + i].load(Ordering::Relaxed));
+            }
+            counters.push((name.to_string(), total));
+        }
+        let mut spans: Vec<SpanStat> = Vec::with_capacity(snames.len());
+        for (i, name) in snames.iter().enumerate() {
+            let (mut calls, mut nanos) = (0u64, 0u64);
+            for l in 0..lanes {
+                let base = (l * MAX_SPANS + i) * 2;
+                calls = calls.wrapping_add(inner.spans[base].load(Ordering::Relaxed));
+                nanos = nanos.wrapping_add(inner.spans[base + 1].load(Ordering::Relaxed));
+            }
+            spans.push(SpanStat { name: name.to_string(), calls, nanos });
+        }
+        let mut hists: Vec<HistStat> = Vec::with_capacity(hnames.len());
+        for (i, name) in hnames.iter().enumerate() {
+            let mut buckets = vec![0u64; HIST_BUCKETS];
+            let mut sum = 0.0f64;
+            for l in 0..lanes {
+                let base = (l * MAX_HISTS + i) * HIST_STRIDE;
+                for (b, slot) in buckets.iter_mut().enumerate() {
+                    *slot = slot.wrapping_add(inner.hists[base + b].load(Ordering::Relaxed));
+                }
+                sum += f64::from_bits(inner.hists[base + HIST_BUCKETS].load(Ordering::Relaxed));
+            }
+            hists.push(HistStat { name: name.to_string(), sum, buckets });
+        }
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        spans.sort_by(|a, b| a.name.cmp(&b.name));
+        hists.sort_by(|a, b| a.name.cmp(&b.name));
+        MetricsSnapshot { counters, spans, hists }
+    }
+}
+
+/// Pre-registered monotonic counter handle. `add` is one relaxed
+/// `fetch_add` on the caller's lane shard — safe inside
+/// `// lint: no_alloc` kernels.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    reg: MetricsRegistry,
+    idx: usize,
+}
+
+impl Counter {
+    /// Dead handle (records nowhere); `Default` yields the same.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(inner) = self.reg.inner.as_deref() {
+            if self.idx != usize::MAX {
+                inner.counters[inner.lane() * MAX_COUNTERS + self.idx]
+                    .fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current total across lane shards (fixed lane order).
+    pub fn value(&self) -> u64 {
+        let Some(inner) = self.reg.inner.as_deref() else {
+            return 0;
+        };
+        if self.idx == usize::MAX {
+            return 0;
+        }
+        let mut total = 0u64;
+        for l in 0..inner.lanes {
+            total = total
+                .wrapping_add(inner.counters[l * MAX_COUNTERS + self.idx].load(Ordering::Relaxed));
+        }
+        total
+    }
+}
+
+/// Pre-registered log-bucketed histogram handle.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    reg: MetricsRegistry,
+    idx: usize,
+}
+
+impl Histogram {
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, x: f64) {
+        if let Some(inner) = self.reg.inner.as_deref() {
+            if self.idx != usize::MAX {
+                let base = (inner.lane() * MAX_HISTS + self.idx) * HIST_STRIDE;
+                inner.hists[base + bucket_of(x)].fetch_add(1, Ordering::Relaxed);
+                add_f64(&inner.hists[base + HIST_BUCKETS], x);
+            }
+        }
+    }
+}
+
+/// Pre-registered span-timer handle. [`SpanTimer::start`] borrows the
+/// handle (no `Arc` clone, so hot `no_alloc` kernels can time phases);
+/// [`SpanTimer::start_owned`] consumes it for scope-crossing guards —
+/// the form the [`crate::span!`] macro expands to.
+#[derive(Clone, Debug, Default)]
+pub struct SpanTimer {
+    reg: MetricsRegistry,
+    idx: usize,
+}
+
+impl SpanTimer {
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn start(&self) -> SpanGuard<'_> {
+        SpanGuard { timer: self, t0: self.reg.now_nanos() }
+    }
+
+    pub fn start_owned(self) -> OwnedSpanGuard {
+        let t0 = self.reg.now_nanos();
+        OwnedSpanGuard { timer: self, t0 }
+    }
+
+    fn finish(&self, t0: u64) {
+        if let Some(inner) = self.reg.inner.as_deref() {
+            if self.idx != usize::MAX {
+                let dt = inner.clock.now_nanos().saturating_sub(t0);
+                let base = (inner.lane() * MAX_SPANS + self.idx) * 2;
+                inner.spans[base].fetch_add(1, Ordering::Relaxed);
+                inner.spans[base + 1].fetch_add(dt, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// RAII guard borrowing its [`SpanTimer`]; records one call plus the
+/// elapsed clock nanos on drop.
+pub struct SpanGuard<'a> {
+    timer: &'a SpanTimer,
+    t0: u64,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.timer.finish(self.t0);
+    }
+}
+
+/// Owning variant of [`SpanGuard`] for guards that outlive the handle
+/// expression (`let _g = span!(reg, "gp.fit");`).
+pub struct OwnedSpanGuard {
+    timer: SpanTimer,
+    t0: u64,
+}
+
+impl Drop for OwnedSpanGuard {
+    fn drop(&mut self) {
+        self.timer.finish(self.t0);
+    }
+}
+
+/// Phase-scoped RAII span: `let _g = span!(registry, "layer.phase");`
+/// times the enclosing scope on `registry`'s clock. The name must be a
+/// static string literal matching `[a-z0-9_.]+` (xtask `metric_names`).
+#[macro_export]
+macro_rules! span {
+    ($reg:expr, $name:literal) => {
+        $crate::util::metrics::MetricsRegistry::span(&$reg, $name).start_owned()
+    };
+}
+
+// --- snapshots -----------------------------------------------------------
+
+/// One span's merged totals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanStat {
+    pub name: String,
+    pub calls: u64,
+    pub nanos: u64,
+}
+
+/// One histogram's merged totals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistStat {
+    pub name: String,
+    pub sum: f64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistStat {
+    pub fn count(&self) -> u64 {
+        merge_counter_shards(&self.buckets)
+    }
+}
+
+/// Deterministic, name-sorted sample of a registry. Serializes through
+/// `util::json` (BTreeMap-backed objects ⇒ key-sorted, reproducible
+/// text) for `TrainedGp::metrics`, `--metrics-out`, and BENCH rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub spans: Vec<SpanStat>,
+    pub hists: Vec<HistStat>,
+}
+
+impl MetricsSnapshot {
+    /// Counter total by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    pub fn span_calls(&self, name: &str) -> u64 {
+        self.spans.iter().find(|s| s.name == name).map(|s| s.calls).unwrap_or(0)
+    }
+
+    pub fn span_nanos(&self, name: &str) -> u64 {
+        self.spans.iter().find(|s| s.name == name).map(|s| s.nanos).unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistStat> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+
+    /// Name-wise difference vs an earlier snapshot of the same (or a
+    /// disjoint) registry: counters/span totals saturating-subtract,
+    /// histogram buckets likewise. Used to fold process-global registries
+    /// (the runtime dispatcher's) into a per-fit snapshot.
+    pub fn delta_from(&self, baseline: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(n, v)| (n.clone(), v.saturating_sub(baseline.counter(n))))
+            .collect();
+        let spans = self
+            .spans
+            .iter()
+            .map(|s| SpanStat {
+                name: s.name.clone(),
+                calls: s.calls.saturating_sub(baseline.span_calls(&s.name)),
+                nanos: s.nanos.saturating_sub(baseline.span_nanos(&s.name)),
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|h| {
+                let (bsum, bbuckets) = match baseline.hist(&h.name) {
+                    Some(b) => (b.sum, b.buckets.as_slice()),
+                    None => (0.0, &[][..]),
+                };
+                HistStat {
+                    name: h.name.clone(),
+                    sum: h.sum - bsum,
+                    buckets: h
+                        .buckets
+                        .iter()
+                        .enumerate()
+                        .map(|(i, v)| v.saturating_sub(bbuckets.get(i).copied().unwrap_or(0)))
+                        .collect(),
+                }
+            })
+            .collect();
+        MetricsSnapshot { counters, spans, hists }
+    }
+
+    /// Name-wise union with another snapshot, summing shared entries.
+    pub fn merged_with(&self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = self.clone();
+        for (n, v) in &other.counters {
+            match out.counters.iter_mut().find(|(en, _)| en == n) {
+                Some((_, ev)) => *ev = ev.wrapping_add(*v),
+                None => out.counters.push((n.clone(), *v)),
+            }
+        }
+        for s in &other.spans {
+            match out.spans.iter_mut().find(|es| es.name == s.name) {
+                Some(es) => {
+                    es.calls = es.calls.wrapping_add(s.calls);
+                    es.nanos = es.nanos.wrapping_add(s.nanos);
+                }
+                None => out.spans.push(s.clone()),
+            }
+        }
+        for h in &other.hists {
+            match out.hists.iter_mut().find(|eh| eh.name == h.name) {
+                Some(eh) => {
+                    eh.sum += h.sum;
+                    for (i, v) in h.buckets.iter().enumerate() {
+                        if let Some(slot) = eh.buckets.get_mut(i) {
+                            *slot = slot.wrapping_add(*v);
+                        }
+                    }
+                }
+                None => out.hists.push(h.clone()),
+            }
+        }
+        out.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        out.spans.sort_by(|a, b| a.name.cmp(&b.name));
+        out.hists.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Full JSON form: `{counters: {..}, spans: {name: {calls, nanos}},
+    /// hists: {name: {count, sum, buckets}}}`.
+    pub fn to_json(&self) -> Json {
+        self.json_impl(true)
+    }
+
+    /// JSON with every wall-clock-dependent field (span nanos) removed —
+    /// the projection the pool-vs-scoped agreement tests compare.
+    pub fn non_timing_json(&self) -> Json {
+        self.json_impl(false)
+    }
+
+    fn json_impl(&self, timing: bool) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(n, v)| (n.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let spans = Json::Obj(
+            self.spans
+                .iter()
+                .map(|s| {
+                    let mut fields = vec![("calls", Json::Num(s.calls as f64))];
+                    if timing {
+                        fields.push(("nanos", Json::Num(s.nanos as f64)));
+                    }
+                    (s.name.clone(), Json::obj(fields))
+                })
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|h| {
+                    (
+                        h.name.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count() as f64)),
+                            ("sum", Json::Num(h.sum)),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.buckets.iter().map(|b| Json::Num(*b as f64)).collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("spans", spans), ("hists", hists)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hist_edges_are_strictly_monotone_and_log_spaced() {
+        let e = hist_edges();
+        assert_eq!(e.len(), HIST_BUCKETS - 1);
+        for w in e.windows(2) {
+            assert!(w[0] < w[1], "edges not strictly increasing: {} {}", w[0], w[1]);
+        }
+        // Three buckets per decade: e[i+3] / e[i] == 10 (to fp rounding).
+        for i in 0..e.len() - 3 {
+            assert!((e[i + 3] / e[i] - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn every_finite_f64_lands_in_exactly_one_bucket() {
+        // Boundary probes: each edge maps just past itself, the next
+        // representable value below maps to the bucket before it.
+        let e = hist_edges();
+        for (i, edge) in e.iter().enumerate() {
+            assert_eq!(bucket_of(*edge), i + 1, "edge {i}");
+            let below = f64::from_bits(edge.to_bits() - 1);
+            assert_eq!(bucket_of(below), i, "just below edge {i}");
+        }
+        // Extremes and specials.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::MIN_POSITIVE), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(f64::NEG_INFINITY), 0);
+        assert_eq!(bucket_of(f64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_of(f64::INFINITY), HIST_BUCKETS - 1);
+        // Random finite bit patterns: always exactly one bucket in range,
+        // and the bucket brackets the value.
+        let mut rng = Rng::new(42);
+        let mut seen = 0;
+        while seen < 20_000 {
+            let bits = rng.next_u64().rotate_left((seen % 64) as u32);
+            let x = f64::from_bits(bits);
+            if !x.is_finite() {
+                continue;
+            }
+            seen += 1;
+            let b = bucket_of(x);
+            assert!(b < HIST_BUCKETS);
+            if b > 0 {
+                assert!(x >= e[b - 1], "x={x} below bucket {b} lower edge");
+            }
+            if b < HIST_BUCKETS - 1 {
+                assert!(x < e[b], "x={x} above bucket {b} upper edge");
+            }
+        }
+    }
+
+    #[test]
+    fn hist_shard_merge_commutes() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let mut a = [0u64; HIST_BUCKETS];
+            let mut b = [0u64; HIST_BUCKETS];
+            for i in 0..HIST_BUCKETS {
+                a[i] = rng.next_u64() % 1000;
+                b[i] = rng.next_u64() % 1000;
+            }
+            assert_eq!(merge_hist_shards(&a, &b), merge_hist_shards(&b, &a));
+        }
+    }
+
+    #[test]
+    fn counter_shard_merge_is_associative_and_commutative() {
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let parts: Vec<u64> = (0..8).map(|_| rng.next_u64() % (1 << 40)).collect();
+            let total = merge_counter_shards(&parts);
+            let mut rev = parts.clone();
+            rev.reverse();
+            assert_eq!(total, merge_counter_shards(&rev));
+            // Associativity: fold any split point to the same total.
+            for k in 0..parts.len() {
+                let left = merge_counter_shards(&parts[..k]);
+                let right = merge_counter_shards(&parts[k..]);
+                assert_eq!(total, merge_counter_shards(&[left, right]));
+            }
+        }
+    }
+
+    #[test]
+    fn registry_counts_spans_and_hists_deterministically() {
+        let clock = ManualClock::new();
+        let reg = MetricsRegistry::with_clock(Arc::new(clock.clone()));
+        let c = reg.counter("test.layer.events");
+        c.add(3);
+        c.incr();
+        assert_eq!(c.value(), 4);
+        // Re-registering the same name shares the slot.
+        let c2 = reg.counter("test.layer.events");
+        c2.add(1);
+        assert_eq!(c.value(), 5);
+
+        let h = reg.histogram("test.layer.values");
+        h.record(1e-3);
+        h.record(1e-3);
+        h.record(-5.0);
+
+        let t = reg.span("test.layer.phase");
+        {
+            let _g = t.start();
+            clock.advance(250);
+        }
+        {
+            let _g = crate::span!(reg, "test.layer.phase");
+            clock.advance(50);
+        }
+
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("test.layer.events"), 5);
+        assert_eq!(snap.span_calls("test.layer.phase"), 2);
+        assert_eq!(snap.span_nanos("test.layer.phase"), 300);
+        let hs = snap.hist("test.layer.values").unwrap();
+        assert_eq!(hs.count(), 3);
+        assert_eq!(hs.buckets[0], 1);
+        assert_eq!(hs.buckets[bucket_of(1e-3)], 2);
+        assert!((hs.sum - (2e-3 - 5.0)).abs() < 1e-15);
+        // Snapshot JSON is reproducible text.
+        assert_eq!(snap.to_json().to_string_pretty(), reg.snapshot().to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let reg = MetricsRegistry::disabled();
+        assert!(!reg.is_enabled());
+        let c = reg.counter("test.dead.counter");
+        c.add(10);
+        assert_eq!(c.value(), 0);
+        let h = reg.histogram("test.dead.hist");
+        h.record(1.0);
+        let t = reg.span("test.dead.span");
+        drop(t.start());
+        let snap = reg.snapshot();
+        assert_eq!(snap, MetricsSnapshot::default());
+        assert_eq!(snap.to_json().to_string_compact(), r#"{"counters":{},"hists":{},"spans":{}}"#);
+        // Default handles are dead too.
+        Counter::disabled().add(1);
+        Histogram::disabled().record(1.0);
+        drop(SpanTimer::disabled().start());
+    }
+
+    #[test]
+    fn parallel_recording_merges_to_exact_totals() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("test.pool.hits");
+        let h = reg.histogram("test.pool.vals");
+        parallel::runtime().banded(64, |b| {
+            c.add(1 + b as u64 % 3);
+            h.record(1.0);
+        });
+        let want: u64 = (0..64u64).map(|b| 1 + b % 3).sum();
+        assert_eq!(c.value(), want);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("test.pool.hits"), want);
+        assert_eq!(snap.hist("test.pool.vals").unwrap().count(), 64);
+        assert_eq!(snap.hist("test.pool.vals").unwrap().sum, 64.0);
+    }
+
+    #[test]
+    fn snapshot_delta_and_merge() {
+        let reg = MetricsRegistry::with_clock(Arc::new(ManualClock::new()));
+        let c = reg.counter("test.delta.jobs");
+        c.add(5);
+        let before = reg.snapshot();
+        c.add(7);
+        let delta = reg.snapshot().delta_from(&before);
+        assert_eq!(delta.counter("test.delta.jobs"), 7);
+
+        let other = MetricsRegistry::new();
+        other.counter("test.delta.other").add(2);
+        other.counter("test.delta.jobs").add(1);
+        let merged = delta.merged_with(&other.snapshot());
+        assert_eq!(merged.counter("test.delta.jobs"), 8);
+        assert_eq!(merged.counter("test.delta.other"), 2);
+        // Merged snapshots stay name-sorted (deterministic JSON).
+        let names: Vec<&str> = merged.counters.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn manual_clock_is_shared_across_clones() {
+        let clk = ManualClock::new();
+        let clone = clk.clone();
+        clk.advance(10);
+        clone.advance(5);
+        assert_eq!(clk.now(), 15);
+        clk.set(3);
+        assert_eq!(clone.now_nanos(), 3);
+    }
+
+    #[test]
+    fn metric_name_validation() {
+        assert!(valid_metric_name("nfft.apply"));
+        assert!(valid_metric_name("solver.cg.iterations"));
+        assert!(valid_metric_name("a_b.c0"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("Nfft.Apply"));
+        assert!(!valid_metric_name("nfft apply"));
+        assert!(!valid_metric_name("nfft-apply"));
+    }
+}

@@ -7,6 +7,7 @@ pub mod csv;
 pub mod error;
 pub mod json;
 pub mod logging;
+pub mod metrics;
 pub mod parallel;
 pub mod rng;
 

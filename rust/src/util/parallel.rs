@@ -20,6 +20,7 @@
 //! degrades. This makes the primitives safely re-entrant without a
 //! work-stealing scheduler.
 
+use crate::util::metrics::{Counter, MetricsRegistry};
 use crate::util::{FgpError, FgpResult};
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -201,11 +202,24 @@ thread_local! {
     /// such a context executes inline (same band geometry, serial band
     /// order) instead of re-entering the dispatcher.
     static IN_PARALLEL_REGION: Cell<bool> = const { Cell::new(false) };
+
+    /// Fixed lane index of the current thread: pool workers carry their
+    /// spawn-time lane for the life of the thread; every other thread
+    /// (including the dispatcher, which is lane 0 by construction) reads
+    /// 0. `util::metrics` shards its cells by this value so per-lane
+    /// accumulation order is a pure function of the band geometry.
+    static LANE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Metrics shard index of the calling thread (see `LANE`).
+pub fn current_lane() -> usize {
+    LANE.with(Cell::get)
 }
 
 fn worker_loop(shared: Arc<PoolShared>, lane: usize, lanes: usize) {
     shared.started.fetch_add(1, Ordering::SeqCst);
     IN_PARALLEL_REGION.with(|c| c.set(true));
+    LANE.with(|c| c.set(lane));
     let mut seen = 0u64;
     loop {
         let (job, nbands) = {
@@ -274,6 +288,20 @@ pub struct Runtime {
     /// Serializes dispatches from independent caller threads (e.g. the
     /// test harness); a dispatch owns every lane for its duration.
     dispatch: Mutex<()>,
+    /// Always-on dispatcher observability (see `util::metrics`).
+    metrics: MetricsRegistry,
+    pulse: RuntimePulse,
+}
+
+/// Pre-registered dispatcher counters: pooled jobs, inline/serial
+/// fallback dispatches, total bands handed out, and worker panics
+/// latched for re-raise. Registered once at pool construction so the
+/// dispatch path never touches the registry lock.
+struct RuntimePulse {
+    jobs: Counter,
+    serial: Counter,
+    bands: Counter,
+    panics: Counter,
 }
 
 impl Runtime {
@@ -281,6 +309,13 @@ impl Runtime {
     /// `threads - 1` parked workers. `threads == 0` is treated as 1.
     pub fn new(threads: usize) -> Runtime {
         let target = threads.max(1);
+        let metrics = MetricsRegistry::new();
+        let pulse = RuntimePulse {
+            jobs: metrics.counter("runtime.jobs"),
+            serial: metrics.counter("runtime.serial_fallback"),
+            bands: metrics.counter("runtime.bands"),
+            panics: metrics.counter("runtime.worker_panics"),
+        };
         let shared = Arc::new(PoolShared {
             slot: Mutex::new(JobSlot {
                 epoch: 0,
@@ -319,9 +354,16 @@ impl Runtime {
             for h in workers.drain(..) {
                 let _ = h.join();
             }
-            return Runtime { shared, workers, lanes: 1, dispatch: Mutex::new(()) };
+            return Runtime {
+                shared,
+                workers,
+                lanes: 1,
+                dispatch: Mutex::new(()),
+                metrics,
+                pulse,
+            };
         }
-        Runtime { shared, workers, lanes: target, dispatch: Mutex::new(()) }
+        Runtime { shared, workers, lanes: target, dispatch: Mutex::new(()), metrics, pulse }
     }
 
     /// The process-wide default runtime, lazily initialized with the
@@ -342,6 +384,15 @@ impl Runtime {
         self.shared.started.load(Ordering::SeqCst)
     }
 
+    /// The dispatcher's always-on metrics registry: `runtime.jobs`
+    /// (pooled dispatches), `runtime.serial_fallback` (inline/nested/
+    /// 1-lane dispatches), `runtime.bands`, `runtime.worker_panics`.
+    /// Process-global for [`Runtime::global`]; callers fold deltas of
+    /// its snapshots into per-run registries.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
     /// Low-level dispatch: run `f(b)` for every band `b` in `0..nbands`,
     /// band `b` on lane `b % lanes`. Blocks until all bands finish; a
     /// panic in any band is re-raised here (first payload wins) after
@@ -360,11 +411,15 @@ impl Runtime {
             // pool and nested dispatch run every band serially in band
             // order, so band-ordered reductions are bitwise identical to
             // the pooled schedule.
+            self.pulse.serial.incr();
+            self.pulse.bands.add(nbands as u64);
             for b in 0..nbands {
                 f(b);
             }
             return;
         }
+        self.pulse.jobs.incr();
+        self.pulse.bands.add(nbands as u64);
         let serial = lock_unpoisoned(&self.dispatch);
         {
             let mut slot = lock_unpoisoned(&self.shared.slot);
@@ -399,6 +454,9 @@ impl Runtime {
             slot.panic.take()
         };
         drop(serial);
+        if theirs.is_some() {
+            self.pulse.panics.incr();
+        }
         if let Some(payload) = mine.or(theirs) {
             resume_unwind(payload);
         }
@@ -1214,6 +1272,38 @@ mod tests {
         let s = rt.sum(100, |i| i as f64);
         assert_eq!(s, 4950.0);
         assert_eq!(rt.threads_spawned(), 2);
+    }
+
+    #[test]
+    fn runtime_dispatch_metrics_count_jobs_and_fallbacks() {
+        let rt = Runtime::new(3);
+        let before = rt.metrics().snapshot();
+        let mut buf = vec![0.0f64; 12];
+        // 12 rows over 3 lanes → one pooled dispatch of 3 bands.
+        rt.rows(&mut buf, 12, 1, |i, s| s[0] = i as f64);
+        // A single-band dispatch takes the inline/serial path.
+        rt.banded(1, |_| {});
+        let snap = rt.metrics().snapshot().delta_from(&before);
+        assert_eq!(snap.counter("runtime.jobs"), 1);
+        assert_eq!(snap.counter("runtime.serial_fallback"), 1);
+        assert_eq!(snap.counter("runtime.bands"), 4);
+        assert_eq!(snap.counter("runtime.worker_panics"), 0);
+    }
+
+    #[test]
+    fn runtime_metrics_latch_worker_panics() {
+        let rt = Runtime::new(2);
+        // Band 1 runs on worker lane 1, so the panic is latched in the
+        // job slot and re-raised by the dispatcher — exactly one latch.
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            rt.banded(2, |b| {
+                if b == 1 {
+                    panic!("deliberate worker panic");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        assert_eq!(rt.metrics().snapshot().counter("runtime.worker_panics"), 1);
     }
 
     /// Iteration count for the stress lane; `FGP_STRESS_ITERS` scales it

@@ -1,0 +1,255 @@
+//! Determinism contract of the observability layer (DESIGN.md
+//! "Observability"): metrics are sharded per worker-pool lane and merged
+//! in fixed lane order, so identical work produces identical snapshots —
+//! the same discipline as the fixed-order NFFT reductions.
+//!
+//! Four locks:
+//!  1. Two identical `fit_with_metrics` runs on the persistent pool,
+//!     each under a deterministic `ManualClock`, serialize to
+//!     bitwise-identical snapshot JSON (after dropping the `runtime.*`
+//!     entries, which fold a *process-global* pool delta and so see
+//!     whatever other tests the harness runs concurrently).
+//!  2. The pool-dispatched and `parallel::scoped` batch applies agree on
+//!     every non-timing metric (same transforms, different scheduling).
+//!  3. AAFN preconditioning strictly cuts PCG iterations vs plain CG on
+//!     the same system — read off the `solver.cg.iterations` counter.
+//!  4. `nfft.apply` span counts match the packing analysis exactly:
+//!     2 transforms per column pair for `apply_batch`, 3 per pair for the
+//!     fused kernel+derivative `apply_batch_pair` (PR 6's 8→3 packing).
+
+use std::sync::Arc;
+
+use fourier_gp::coordinator::mvm::{EngineKind, ExactRustMvm, SubKernelMvm};
+use fourier_gp::coordinator::operator::KernelOperator;
+use fourier_gp::gp::{GpConfig, GpModel, NllOptions, PrecondKind};
+use fourier_gp::kernels::additive::{AdditiveKernel, WindowedPoints, Windows};
+use fourier_gp::kernels::KernelFn;
+use fourier_gp::linalg::Matrix;
+use fourier_gp::nfft::{Fastsum, NfftParams};
+use fourier_gp::precond::{AafnPrecond, AfnOptions};
+use fourier_gp::solvers::cg::{pcg_with, CgOptions};
+use fourier_gp::solvers::IdentityPrecond;
+use fourier_gp::util::metrics::{ManualClock, MetricsRegistry, MetricsSnapshot};
+use fourier_gp::util::rng::Rng;
+
+/// Drop the `runtime.*` entries: they are a delta against the worker
+/// pool's process-global registry, so concurrent tests in the same
+/// process legitimately perturb them. Everything else is fit-local.
+fn without_runtime(snap: &MetricsSnapshot) -> MetricsSnapshot {
+    MetricsSnapshot {
+        counters: snap
+            .counters
+            .iter()
+            .filter(|(n, _)| !n.starts_with("runtime."))
+            .cloned()
+            .collect(),
+        spans: snap
+            .spans
+            .iter()
+            .filter(|s| !s.name.starts_with("runtime."))
+            .cloned()
+            .collect(),
+        hists: snap
+            .hists
+            .iter()
+            .filter(|h| !h.name.starts_with("runtime."))
+            .cloned()
+            .collect(),
+    }
+}
+
+fn toy_data(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::zeros(n, 4);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 2.0);
+    }
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            (r[0] * 2.0).sin() + 0.5 * r[1] + (r[2] - 1.0).powi(2) - r[3] + 0.05 * rng.normal()
+        })
+        .collect();
+    (x, y)
+}
+
+fn quick_config() -> GpConfig {
+    let mut cfg = GpConfig::new(KernelFn::Gaussian, Windows(vec![vec![0, 1], vec![2, 3]]));
+    cfg.engine = EngineKind::NfftRust;
+    cfg.max_iters = 6;
+    cfg.adam_lr = 0.05;
+    cfg.nll = NllOptions { train_cg_iters: 8, num_probes: 4, slq_steps: 6, cg_tol: 1e-10, seed: 0 };
+    cfg.precond = PrecondKind::Aafn(AfnOptions { k_per_window: 10, max_rank: 24, fill: 6 });
+    cfg.loss_every = 0;
+    cfg
+}
+
+#[test]
+fn identical_fits_produce_bitwise_identical_snapshots() {
+    let (x, y) = toy_data(120, 1);
+    let fit_once = || {
+        let reg = MetricsRegistry::with_clock(Arc::new(ManualClock::new()));
+        let trained = GpModel::new(quick_config())
+            .fit_with_metrics(&x, &y, &reg)
+            .expect("fit");
+        trained.metrics
+    };
+    let a = fit_once();
+    let b = fit_once();
+
+    // The fit-local layers are all represented and non-trivial.
+    assert_eq!(a.span_calls("gp.fit"), 1);
+    assert!(a.counter("coordinator.mvm") > 0);
+    assert!(a.counter("coordinator.traversal") > 0);
+    assert!(a.counter("nfft.spread") > 0, "NFFT engine recorded no spreads");
+    assert!(a.counter("solver.cg.iterations") > 0);
+    assert!(a.counter("solver.slq.probes") > 0);
+    assert!(a.hist("solver.cg.residual").map(|h| h.count()).unwrap_or(0) > 0);
+    // The manual clock never advanced, so the registry's own spans carry
+    // zero nanos — timing is governed by the injected clock, not Instant.
+    assert_eq!(a.span_nanos("gp.fit"), 0);
+    assert_eq!(a.span_nanos("solver.cg"), 0);
+
+    let ja = without_runtime(&a).to_json().to_string_pretty();
+    let jb = without_runtime(&b).to_json().to_string_pretty();
+    assert_eq!(ja, jb, "identical fits diverged in their metrics snapshots");
+}
+
+#[test]
+fn pool_and_scoped_applies_agree_on_non_timing_metrics() {
+    let n = 96;
+    let d = 2;
+    let mut rng = Rng::new(17);
+    let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.25, 0.2499)).collect();
+    let mut fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.6, NfftParams::default_for_dim(d));
+
+    // Odd batch (exercises the straggler) and a single column.
+    for nb in [5usize, 1] {
+        let mut v = Matrix::zeros(nb, n);
+        for x in &mut v.data {
+            *x = rng.normal();
+        }
+        let mut out_pool = Matrix::zeros(nb, n);
+        let mut out_scoped = Matrix::zeros(nb, n);
+
+        let reg_pool = MetricsRegistry::new();
+        fs.set_metrics(&reg_pool);
+        fs.apply_batch_into(&v, false, &mut out_pool);
+
+        let reg_scoped = MetricsRegistry::new();
+        fs.set_metrics(&reg_scoped);
+        fs.apply_batch_scoped_ref(&v, false, &mut out_scoped);
+
+        // Same numerics...
+        for (a, b) in out_pool.data.iter().zip(&out_scoped.data) {
+            assert!((a - b).abs() < 1e-10, "nb={nb}: pool {a} vs scoped {b}");
+        }
+        // ...and the same transform accounting, wall clock aside.
+        let jp = reg_pool.snapshot().non_timing_json().to_string_pretty();
+        let js = reg_scoped.snapshot().non_timing_json().to_string_pretty();
+        assert_eq!(jp, js, "nb={nb}: pool vs scoped non-timing metrics diverged");
+    }
+}
+
+#[test]
+fn aafn_preconditioning_strictly_cuts_pcg_iterations() {
+    let n = 150;
+    let (ell, sf2, se2) = (1.2, 0.5, 0.1);
+    let mut rng = Rng::new(5);
+    let mut x = Matrix::zeros(n, 4);
+    for v in &mut x.data {
+        *v = rng.uniform_in(0.0, 2.0);
+    }
+    let windows = Windows(vec![vec![0, 1], vec![2, 3]]);
+    let ak = AdditiveKernel::new(KernelFn::Gaussian, windows.clone());
+    let subs: Vec<Box<dyn SubKernelMvm>> = windows
+        .0
+        .iter()
+        .map(|w| {
+            Box::new(ExactRustMvm::new(KernelFn::Gaussian, WindowedPoints::extract(&x, w), ell))
+                as Box<dyn SubKernelMvm>
+        })
+        .collect();
+    let op = KernelOperator::new(subs, sf2, se2);
+    let y = rng.normal_vec(n);
+    let precond = AafnPrecond::build(
+        &x,
+        &ak,
+        ell,
+        sf2,
+        se2,
+        &AfnOptions { k_per_window: 30, max_rank: 60, fill: 10 },
+    )
+    .expect("AAFN build");
+    let opts = CgOptions { tol: 1e-8, max_iter: 300, relative: true };
+
+    let reg_plain = MetricsRegistry::new();
+    let plain = pcg_with(&op, &IdentityPrecond(n), &y, &opts, &reg_plain);
+    let reg_pre = MetricsRegistry::new();
+    let pre = pcg_with(&op, &precond, &y, &opts, &reg_pre);
+    assert!(pre.converged, "preconditioned CG did not converge");
+
+    // The counters mirror the results exactly...
+    let sp = reg_plain.snapshot();
+    let sa = reg_pre.snapshot();
+    assert_eq!(sp.counter("solver.cg.iterations"), plain.iterations as u64);
+    assert_eq!(sa.counter("solver.cg.iterations"), pre.iterations as u64);
+    assert_eq!(
+        sp.hist("solver.cg.residual").expect("hist").count(),
+        plain.residuals.len() as u64
+    );
+    assert_eq!(sp.span_calls("solver.cg"), 1);
+    // ...and AAFN strictly beats the unpreconditioned solve.
+    assert!(
+        sa.counter("solver.cg.iterations") < sp.counter("solver.cg.iterations"),
+        "AAFN ({}) not below plain CG ({})",
+        pre.iterations,
+        plain.iterations
+    );
+}
+
+#[test]
+fn nfft_apply_span_counts_match_the_packing_formulas() {
+    let n = 64;
+    let d = 2;
+    let mut rng = Rng::new(23);
+    let pts: Vec<f64> = (0..n * d).map(|_| rng.uniform_in(-0.25, 0.2499)).collect();
+    let mut fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.5, NfftParams::default_for_dim(d));
+
+    for nb in 1..=5usize {
+        let pairs = (nb + 1) / 2; // ceil(nb / 2): odd stragglers pay a full pipeline
+        let mut v = Matrix::zeros(nb, n);
+        for x in &mut v.data {
+            *x = rng.normal();
+        }
+
+        // Fused kernel+derivative batch: ONE shared adjoint feeds two
+        // diagonal scalings, so 3 transforms per pair (not 8 naive).
+        let reg = MetricsRegistry::new();
+        fs.set_metrics(&reg);
+        let (out_k, out_d) = fs.apply_batch_pair(&v);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.span_calls("nfft.apply"),
+            3 * pairs as u64,
+            "nb={nb}: fused pair path transform count"
+        );
+        assert_eq!(snap.counter("nfft.spread"), pairs as u64, "nb={nb}: one spread per adjoint");
+        assert_eq!(snap.counter("nfft.fft"), 3 * pairs as u64, "nb={nb}: one FFT per transform");
+        assert_eq!(snap.counter("nfft.gather"), 2 * pairs as u64, "nb={nb}: one gather per trafo");
+        assert!(out_k.data.iter().any(|x| x.abs() > 1e-12));
+        assert!(out_d.data.iter().any(|x| x.abs() > 1e-12));
+
+        // Plain batch: one adjoint + one trafo per pair.
+        let reg = MetricsRegistry::new();
+        fs.set_metrics(&reg);
+        let out = fs.apply_batch(&v, false);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.span_calls("nfft.apply"),
+            2 * pairs as u64,
+            "nb={nb}: batch path transform count"
+        );
+        assert!(out.data.iter().any(|x| x.abs() > 1e-12));
+    }
+}

@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use fourier_gp::kernels::KernelFn;
 use fourier_gp::linalg::Matrix;
 use fourier_gp::nfft::{Fastsum, NfftParams};
+use fourier_gp::util::metrics::MetricsRegistry;
 use fourier_gp::util::rng::Rng;
 
 struct CountingAlloc;
@@ -53,7 +54,12 @@ fn steady_state_applies_do_not_allocate_grids() {
     let nb = 8;
     let params = NfftParams::default_for_dim(d);
     let pts = random_points(n, d, 7);
-    let fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.6, params);
+    let mut fs = Fastsum::new(KernelFn::Gaussian, &pts, d, 0.6, params);
+    // Metrics must not reintroduce steady-state allocations: handles are
+    // registered here (cold), and every record afterwards is a branch
+    // plus a relaxed atomic — so the applies below run fully observed.
+    let metrics = MetricsRegistry::new();
+    fs.set_metrics(&metrics);
 
     // One oversampled grid: (σm)^d complex entries.
     let grid_bytes = fs.plan().grid_bytes();
@@ -91,7 +97,11 @@ fn steady_state_applies_do_not_allocate_grids() {
         "steady-state NFFT applies performed {count} allocation(s) of at \
          least one grid ({grid_bytes} bytes); largest seen: {largest} bytes"
     );
-    // Sanity: the outputs were actually computed (non-trivial values).
+    // Sanity: the outputs were actually computed (non-trivial values),
+    // and the metrics registry really was live through the hot loop.
     assert!(out.data.iter().any(|x| x.abs() > 1e-12));
     assert!(out_k.data.iter().any(|x| x.abs() > 1e-12));
+    let snap = metrics.snapshot();
+    assert!(snap.counter("nfft.spread") > 0, "metrics were not recording");
+    assert!(snap.span_calls("nfft.apply") > 0, "metrics were not recording");
 }

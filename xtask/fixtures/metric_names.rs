@@ -1,0 +1,29 @@
+//! Fixture for the `metric_names` rule: registration sites must name
+//! their metric with a static `[a-z0-9_.]+` string literal. Three
+//! violations (uppercase name, space in a macro name, non-literal name),
+//! one waived dynamic site, two valid sites (one rustfmt-wrapped), and
+//! an exempt `#[cfg(test)]` block.
+
+pub fn register(reg: &MetricsRegistry, dynamic: &'static str) {
+    let _good = reg.counter("nfft.spread");
+    let _wrapped = reg.histogram(
+        "solver.cg.residual",
+    );
+    let _bad_case = reg.counter("Nfft.Spread");
+    let _g = span!(reg, "has space");
+    let _non_literal = reg.span(dynamic);
+}
+
+pub fn waived(reg: &MetricsRegistry) {
+    // lint: allow(metric_names) — fixture demo of a waived dynamic name
+    let _c = reg.counter(DYNAMIC_NAME);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_names_are_unchecked() {
+        let reg = MetricsRegistry::new();
+        let _c = reg.counter("Whatever Goes HERE");
+    }
+}

@@ -18,6 +18,12 @@
 //!   through the persistent `parallel::Runtime` so per-call thread churn
 //!   (and nondeterministic band geometry) cannot sneak back in. Code under
 //!   `#[cfg(test)]` is exempt.
+//! - `metric_names`: every metrics registration site (`.counter(...)`,
+//!   `.span(...)`, `.histogram(...)`, `span!(...)`) must name its metric
+//!   with a static string literal matching `[a-z0-9_.]+` — the
+//!   `layer.component.event` scheme (DESIGN.md "Observability"). The
+//!   definition site `util/metrics.rs` is exempt (its registration
+//!   methods take the name as a parameter), as is `#[cfg(test)]` code.
 //!
 //! A violation is waived by `// lint: allow(<rule>) — <reason>` on the
 //! offending line or within the four lines above it; waivers are counted
@@ -62,6 +68,32 @@ const DETERMINISM_TOKENS: &[(&str, bool)] = &[("HashMap", true), ("HashSet", tru
 /// Raw thread primitives forbidden outside `util/parallel.rs` by the
 /// `no_raw_spawn` rule.
 const SPAWN_TOKENS: &[(&str, bool)] = &[("thread::spawn", true), ("thread::scope", true)];
+
+/// Metrics registration sites checked by the `metric_names` rule.
+const METRIC_TOKENS: &[(&str, bool)] = &[
+    (".counter(", false),
+    (".span(", false),
+    (".histogram(", false),
+    ("span!(", true),
+];
+
+/// The `layer.component.event` naming contract (mirrors
+/// `util::metrics::valid_metric_name`, which enforces it at runtime).
+fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.')
+}
+
+/// Contents of the first double-quoted string literal on a raw source
+/// line (metric names never contain escapes, so a plain quote scan is
+/// exact for them).
+fn first_string_literal(line: &str) -> Option<&str> {
+    let start = line.find('"')? + 1;
+    let rest = &line[start..];
+    rest.find('"').map(|end| &rest[..end])
+}
 
 struct Violation {
     file: String,
@@ -312,8 +344,13 @@ fn marked_fn_range(code: &[String], m: usize) -> Option<(usize, usize)> {
 fn lint_source(file: &str, src: &str, report: &mut Report) {
     let (code, comments) = split_channels(src);
     let mask = test_mask(&code);
+    // Raw source lines: the code channel blanks string-literal contents,
+    // so the `metric_names` rule reads the names from the original text.
+    let raw: Vec<&str> = src.lines().collect();
     // The runtime module itself is the one place allowed to own OS threads.
     let spawn_exempt = file.replace('\\', "/").ends_with("util/parallel.rs");
+    // The registry definition site takes names as parameters.
+    let metric_exempt = file.replace('\\', "/").ends_with("util/metrics.rs");
 
     for (i, line) in code.iter().enumerate() {
         if mask[i] {
@@ -326,6 +363,40 @@ fn lint_source(file: &str, src: &str, report: &mut Report) {
                         "`{tok}` outside util/parallel.rs; dispatch through parallel::Runtime"
                     );
                     report.emit(&comments, file, i, "no_raw_spawn", msg);
+                }
+            }
+        }
+        if !metric_exempt {
+            for &(tok, boundary) in METRIC_TOKENS {
+                if !has_token(line, tok, boundary) {
+                    continue;
+                }
+                // The name literal sits after the token on the same raw
+                // line, or (rustfmt-wrapped call) within the next two.
+                let lit = raw
+                    .get(i)
+                    .and_then(|l| l.find(tok).map(|p| &l[p..]))
+                    .and_then(first_string_literal)
+                    .or_else(|| {
+                        (i + 1..i + 3)
+                            .find_map(|j| raw.get(j).and_then(|l| first_string_literal(l)))
+                    });
+                match lit {
+                    None => report.emit(
+                        &comments,
+                        file,
+                        i,
+                        "metric_names",
+                        format!("`{tok}` without a static string-literal metric name"),
+                    ),
+                    Some(name) if !valid_metric_name(name) => report.emit(
+                        &comments,
+                        file,
+                        i,
+                        "metric_names",
+                        format!("metric name {name:?} must match [a-z0-9_.]+"),
+                    ),
+                    Some(_) => {}
                 }
             }
         }
@@ -535,6 +606,38 @@ mod tests {
         let src = std::fs::read_to_string(&p).unwrap();
         let mut r = Report::default();
         lint_source("rust/src/util/parallel.rs", &src, &mut r);
+        assert!(r.violations.is_empty(), "{:?}", describe(&r));
+        assert!(r.waivers.is_empty(), "{:?}", r.waivers);
+    }
+
+    #[test]
+    fn catches_bad_metric_names() {
+        let r = lint_fixture("metric_names.rs");
+        assert_eq!(
+            rules(&r),
+            ["metric_names", "metric_names", "metric_names"],
+            "{:?}",
+            describe(&r)
+        );
+        // Uppercase name, space in a span! name, then the non-literal.
+        assert!(r.violations[0].msg.contains("Nfft.Spread"));
+        assert!(r.violations[1].msg.contains("has space"));
+        assert!(r.violations[2].msg.contains("static string-literal"));
+        // The valid plain and rustfmt-wrapped sites (lines < 12) pass.
+        assert!(r.violations.iter().all(|v| v.line >= 12), "{:?}", describe(&r));
+        // The waived dynamic site is counted, not flagged.
+        assert_eq!(r.waivers.len(), 1, "{:?}", r.waivers);
+        assert_eq!(r.waivers[0].2, "metric_names");
+    }
+
+    #[test]
+    fn metrics_module_is_exempt_from_metric_names_rule() {
+        // The same source linted under the registry's own path raises
+        // nothing — its registration methods take names as parameters.
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join("metric_names.rs");
+        let src = std::fs::read_to_string(&p).unwrap();
+        let mut r = Report::default();
+        lint_source("rust/src/util/metrics.rs", &src, &mut r);
         assert!(r.violations.is_empty(), "{:?}", describe(&r));
         assert!(r.waivers.is_empty(), "{:?}", r.waivers);
     }
